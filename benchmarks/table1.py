@@ -1,0 +1,195 @@
+"""Reproduction of paper Table 1 (three experiments × three algorithms).
+
+For each experiment — logistic regression (MNIST-like, RWMH), softmax
+classification (CIFAR-like, MALA), robust regression (OPV-like, slice) — we
+run Regular MCMC, untuned FlyMC and MAP-tuned FlyMC on synthetic data with
+the paper's (N, D, K) shapes, and report the paper's three columns:
+
+    average likelihood queries per iteration  (implementation-independent cost)
+    effective samples per 1000 iterations     (min-ESS over θ coordinates)
+    speedup relative to regular MCMC          ((ESS/query) ratio)
+
+``--scale`` shrinks N for CPU-budget runs (default 1.0 = paper size for
+MNIST/CIFAR; OPV defaults to N=200k — 1.8M with --full).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import diagnostics, samplers
+from repro.data import logistic_data, robust_data, softmax_data
+from repro.models.bayes_glm import GLMModel
+
+
+@dataclasses.dataclass
+class AlgoResult:
+    name: str
+    queries_per_iter: float
+    ess_per_1000: float
+    speedup: float
+    us_per_iter: float
+
+
+def _run_flymc(model, kernel, theta0, key, iters, burn, q_db, step0):
+    spec = model.flymc_spec(
+        kernel=kernel,
+        capacity=max(256, int(0.05 * model.data.x.shape[0])),
+        cand_capacity=max(256, int(0.05 * model.data.x.shape[0])),
+        q_db=q_db,
+        adapt_target=(
+            None if kernel == "slice" else samplers.TARGET_ACCEPT[kernel]
+        ),
+    )
+    state, _, spec = model.init_chain(spec, theta0, key, step_size=step0)
+    t0 = time.time()
+    thetas, trace, total_q, _ = model.run_chain(spec, state, iters)
+    wall = time.time() - t0
+    s = np.stack(thetas)[burn:]
+    if s.ndim == 3:  # softmax: flatten classes
+        s = s.reshape(s.shape[0], -1)
+    ess = diagnostics.ess_per_1000_iters(s[:, : min(10, s.shape[1])])
+    q_per_iter = np.mean([t["lik_queries"] for t in trace[burn:]])
+    return s, ess, q_per_iter, wall * 1e6 / iters
+
+
+def _run_regular(model, kernel, theta0, key, iters, burn, step0):
+    f = model.full_logpdf_fn()
+    st = samplers.init_state(f, theta0, with_grad=samplers.NEEDS_GRAD[kernel])
+    n = model.data.x.shape[0]
+    log_step = jnp.log(jnp.asarray(step0))
+    kern = samplers.make_kernel(kernel, f)
+    target = samplers.TARGET_ACCEPT[kernel]
+
+    @jax.jit
+    def step(key, st, log_step, i):
+        if kernel == "slice":
+            st2, info = kern(key, st, width=jnp.exp(log_step))
+            return st2, info, log_step
+        st2, info = kern(key, st, step_size=jnp.exp(log_step))
+        ls = samplers.adapt_step_size(log_step, info.accept_prob, target, i)
+        return st2, info, ls
+
+    t0 = time.time()
+    out, queries = [], []
+    for i in range(iters):
+        key, sub = jax.random.split(key)
+        st, info, log_step = step(sub, st, log_step, jnp.asarray(i))
+        out.append(np.asarray(st.theta))
+        queries.append(int(info.n_evals) * n)
+    wall = time.time() - t0
+    s = np.stack(out)[burn:]
+    if s.ndim == 3:
+        s = s.reshape(s.shape[0], -1)
+    ess = diagnostics.ess_per_1000_iters(s[:, : min(10, s.shape[1])])
+    return s, ess, float(np.mean(queries[burn:])), wall * 1e6 / iters
+
+
+def run_experiment(
+    name: str, model: GLMModel, kernel: str, key, iters: int, burn: int,
+    step0: float, q_untuned: float, q_tuned: float, map_steps: int = 400,
+) -> list[AlgoResult]:
+    d_theta = model.theta_shape
+    theta0 = jnp.zeros(d_theta)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+
+    _, ess_r, q_r, us_r = _run_regular(model, kernel, theta0, k1, iters, burn, step0)
+    base_eff = ess_r / max(q_r, 1.0)
+    results = [AlgoResult(f"{name}/regular", q_r, ess_r, 1.0, us_r)]
+
+    _, ess_u, q_u, us_u = _run_flymc(
+        model, kernel, theta0, k2, iters, burn, q_untuned, step0
+    )
+    results.append(
+        AlgoResult(
+            f"{name}/flymc-untuned", q_u, ess_u,
+            (ess_u / max(q_u, 1.0)) / base_eff, us_u,
+        )
+    )
+
+    theta_map = model.map_estimate(k3, steps=map_steps)
+    tuned = model.map_tuned(theta_map)
+    _, ess_t, q_t, us_t = _run_flymc(
+        tuned, kernel, theta0, k4, iters, burn, q_tuned, step0
+    )
+    results.append(
+        AlgoResult(
+            f"{name}/flymc-MAP-tuned", q_t, ess_t,
+            (ess_t / max(q_t, 1.0)) / base_eff, us_t,
+        )
+    )
+    return results
+
+
+def table1(scale: float = 1.0, iters: int = 3000, burn: int = 750,
+           opv_n: int = 200_000, seed: int = 0) -> list[AlgoResult]:
+    key = jax.random.key(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    out: list[AlgoResult] = []
+
+    # §4.1 — MNIST 7v9 logistic regression, random-walk MH
+    n1 = int(12_214 * scale)
+    data = logistic_data(k1, n=n1, d=51, separation=2.0)
+    model = GLMModel.logistic(data, prior_scale=1.0, xi=1.5)
+    out += run_experiment(
+        "mnist-logistic-rwmh", model, "rwmh", k1, iters, burn,
+        step0=0.02, q_untuned=0.1, q_tuned=0.01,
+    )
+
+    # §4.2 — CIFAR-3 softmax classification, MALA
+    n2 = int(18_000 * scale)
+    data = softmax_data(k2, n=n2, d=256, k=3)
+    model = GLMModel.softmax(data, n_classes=3, prior_scale=1.0)
+    out += run_experiment(
+        "cifar-softmax-mala", model, "mala", k2, iters, burn,
+        step0=0.002, q_untuned=0.1, q_tuned=0.01,
+    )
+
+    # §4.3 — OPV robust regression, slice sampling
+    n3 = int(opv_n * scale)
+    data, _ = robust_data(k3, n=n3, d=57, nu=4.0)
+    model = GLMModel.robust(data, nu=4.0, sigma=1.0, prior_scale=1.0)
+    out += run_experiment(
+        "opv-robust-slice", model, "slice", k3, iters, burn,
+        step0=0.05, q_untuned=0.1, q_tuned=0.01,
+    )
+    return out
+
+
+def format_results(results: list[AlgoResult]) -> str:
+    lines = [
+        "| experiment / algorithm | lik. queries/iter | ESS per 1000 iters |"
+        " speedup vs regular |",
+        "|---|---|---|---|",
+    ]
+    for r in results:
+        lines.append(
+            f"| {r.name} | {r.queries_per_iter:,.0f} | {r.ess_per_1000:.2f} |"
+            f" {r.speedup:.1f}× |"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=1.0)
+    ap.add_argument("--iters", type=int, default=3000)
+    ap.add_argument("--opv-n", type=int, default=200_000)
+    ap.add_argument("--full", action="store_true", help="OPV at paper 1.8M")
+    args = ap.parse_args()
+    res = table1(
+        scale=args.scale, iters=args.iters,
+        opv_n=1_800_000 if args.full else args.opv_n,
+    )
+    print(format_results(res))
+    for r in res:
+        print(f"{r.name},{r.us_per_iter:.1f},"
+              f"q={r.queries_per_iter:.0f};ess={r.ess_per_1000:.2f};"
+              f"speedup={r.speedup:.2f}")

@@ -1,0 +1,64 @@
+"""Exact Bayesian inference over an LM head with FlyMC (DESIGN.md §4).
+
+Takes any assigned backbone (reduced config), freezes it, and runs
+MAP-tuned FlyMC with the Böhning softmax bound over the readout — the
+paper's CIFAR experiment lifted onto transformer features. Only the bright
+token subset pays a likelihood evaluation per iteration.
+
+    PYTHONPATH=src python examples/lm_lastlayer_flymc.py --arch rwkv6-7b
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.models import transformer as T
+from repro.models.lastlayer import lastlayer_glm
+
+
+def main(arch="llama3.2-3b", batch=32, seq=129, iters=400, burn=100):
+    cfg = get_reduced(arch)
+    params, specs = T.init_model(cfg, jax.random.key(0))
+    k = jax.random.key(1)
+    b = {"tokens": jax.random.randint(k, (batch, seq), 0, cfg.vocab_size)}
+    if cfg.family == "encdec":
+        b["frames"] = 0.1 * jax.random.normal(k, (batch, cfg.encoder_seq, cfg.d_model))
+    if cfg.family == "vlm":
+        b["patches"] = 0.1 * jax.random.normal(k, (batch, cfg.patch_positions, cfg.d_model))
+
+    # Posterior concentration drives bound tightness (paper §3.1): enough
+    # tokens per head parameter + a moderate prior keep the chain near the
+    # MAP tangency point, where the Böhning bound is tight.
+    model = lastlayer_glm(params, specs, cfg, b, prior_scale=0.003)
+    n = model.data.x.shape[0]
+    theta_map = model.map_estimate(jax.random.key(2), steps=300, lr=0.05)
+    tuned = model.map_tuned(theta_map)
+
+    spec = tuned.flymc_spec(
+        kernel="mala", capacity=max(64, n // 4), cand_capacity=max(64, n // 4),
+        q_db=0.05, adapt_target=0.574,
+    )
+    state, n0, spec = tuned.init_chain(
+        spec, theta_map, jax.random.key(3), step_size=1e-3
+    )
+    samples, trace, total_q, _ = tuned.run_chain(spec, state, iters)
+    bright = np.mean([t["n_bright"] for t in trace[burn:]])
+    print(f"arch={arch}: N={n} tokens, head θ ∈ R^{model.theta_shape}")
+    print(f"avg bright tokens: {bright:,.0f}/{n} ({100*bright/n:.1f}%)")
+    print(f"likelihood queries/iter: {total_q/iters:,.0f} "
+          f"(full-data MALA would be {n:,})")
+    print("note: the Böhning gap sums over classes — δ ≈ K/4 · Var(η) per")
+    print("token — so at LM vocabulary sizes the bright set only collapses")
+    print("under a tightly concentrated posterior (late-stage training /")
+    print("huge token counts). The paper's softmax experiment had K=3; this")
+    print("demo concentrates via the prior to exhibit the same mechanism.")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b")
+    args = ap.parse_args()
+    main(arch=args.arch)

@@ -1,0 +1,48 @@
+"""Paper §4.3: robust sparse regression with slice sampling (OPV-style).
+
+Student-t likelihood (ν=4), Laplace prior, tangent Gaussian bounds tightened
+at a MAP estimate; slice sampling for θ (variable likelihood evaluations per
+iteration, exactly the paper's third experiment).
+
+    PYTHONPATH=src python examples/robust_regression.py [--n 50000]
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import robust_data
+from repro.models.bayes_glm import GLMModel
+
+
+def main(n=50_000, d=57, iters=800, burn=200):
+    data, theta_true = robust_data(jax.random.key(0), n=n, d=d, nu=4.0)
+    model = GLMModel.robust(data, nu=4.0, sigma=1.0, prior_scale=1.0)
+
+    theta_map = model.map_estimate(jax.random.key(1), steps=600, lr=0.02)
+    tuned = model.map_tuned(theta_map)
+
+    spec = tuned.flymc_spec(
+        kernel="slice", capacity=2048, cand_capacity=2048, q_db=0.01
+    )
+    state, _, spec = tuned.init_chain(
+        spec, theta_map, jax.random.key(2), step_size=0.05
+    )
+    samples, trace, total_q, _ = tuned.run_chain(spec, state, iters)
+    s = np.stack(samples)[burn:]
+
+    rmse = float(np.sqrt(np.mean((s.mean(0) - np.asarray(theta_true)) ** 2)))
+    print(f"N={n:,}  posterior-mean RMSE vs true weights: {rmse:.4f}")
+    print(f"likelihood queries/iter: {total_q / iters:,.0f} "
+          f"(regular slice sampling would be ~{10 * n:,.0f})")
+    print(f"avg bright: {np.mean([t['n_bright'] for t in trace[burn:]]):,.0f} "
+          f"of {n:,}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=50_000)
+    args = ap.parse_args()
+    main(n=args.n)

@@ -1,0 +1,5 @@
+"""Fault-tolerant checkpointing: atomic, async, elastic-reshard on restore."""
+
+from repro.checkpoint.checkpointer import Checkpointer
+
+__all__ = ["Checkpointer"]

@@ -1,0 +1,60 @@
+"""Config registry: ``--arch <id>`` resolution for all assigned archs.
+
+``get_config(arch_id)`` returns the full published configuration;
+``get_reduced(arch_id)`` returns the smoke-test-sized family twin.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ModelConfig, ShapeConfig, SHAPES, reduced
+
+# arch id → module name
+_REGISTRY = {
+    "whisper-tiny": "whisper_tiny",
+    "qwen1.5-110b": "qwen1_5_110b",
+    "stablelm-1.6b": "stablelm_1_6b",
+    "qwen2-7b": "qwen2_7b",
+    "llama3.2-3b": "llama3_2_3b",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "arctic-480b": "arctic_480b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "rwkv6-7b": "rwkv6_7b",
+    "llava-next-mistral-7b": "llava_next_mistral_7b",
+}
+
+ARCH_IDS = tuple(_REGISTRY)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _REGISTRY:
+        raise KeyError(
+            f"unknown arch {arch_id!r}; available: {sorted(_REGISTRY)}"
+        )
+    mod = importlib.import_module(f"repro.configs.{_REGISTRY[arch_id]}")
+    return mod.CONFIG
+
+
+def get_reduced(arch_id: str, **overrides) -> ModelConfig:
+    return reduced(get_config(arch_id), **overrides)
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> bool:
+    """Which (arch × shape) cells are defined (DESIGN.md §4).
+
+    long_500k requires a sub-quadratic decode path; pure full-attention
+    archs skip it (recorded, not silently dropped).
+    """
+    if shape.name == "long_500k":
+        return cfg.subquadratic
+    return True
+
+
+__all__ = [
+    "ARCH_IDS",
+    "SHAPES",
+    "get_config",
+    "get_reduced",
+    "shape_applicable",
+]

@@ -1,0 +1,27 @@
+"""recurrentgemma-9b — RG-LRU + local attention hybrid, 1 attn : 2 rglru
+[arXiv:2402.19427].
+
+38L (pattern rglru,rglru,attn — 26 recurrence + 12 local-attn layers; we
+round the published 1:2 ratio onto 38 layers), d_model=4096, 16 heads
+(MQA kv=1), d_ff=12288, rnn width 4096, local window 2048, vocab 256000.
+Constant-size recurrence state → runs long_500k.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-9b",
+    family="hybrid",
+    n_layers=38,
+    d_model=4096,
+    n_heads=16,
+    n_kv_heads=1,
+    d_ff=12288,
+    vocab_size=256000,
+    mlp="gelu",
+    block_pattern=("rglru", "rglru", "attn"),
+    local_attn_window=2048,
+    rnn_width=4096,
+    parallel_mode="tp",
+    subquadratic=True,
+)

@@ -1,0 +1,23 @@
+"""rwkv6-7b ("Finch") — attention-free RNN with data-dependent decay
+[arXiv:2404.05892].
+
+32L, d_model=4096 (64 heads × 64 head-dim time-mixing), d_ff=14336,
+vocab 65536. Constant-size WKV state → runs long_500k.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-7b",
+    family="ssm",
+    n_layers=32,
+    d_model=4096,
+    n_heads=64,  # WKV heads (head_dim 64)
+    n_kv_heads=64,
+    head_dim=64,
+    d_ff=14336,
+    vocab_size=65536,
+    block_pattern=("rwkv",),
+    parallel_mode="tp",
+    subquadratic=True,
+)

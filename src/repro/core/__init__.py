@@ -1,0 +1,56 @@
+"""FlyMC core: the paper's contribution as composable JAX modules.
+
+  bounds          — collapsible likelihood lower bounds (§3.1)
+  brightness      — O(1) bright/dark partition structure (§3.3, Fig. 3)
+  samplers        — θ-kernels: RWMH, MALA, slice, HMC (§4)
+  flymc           — the FlyMC chain: padded bright buffer, implicit/explicit
+                    z-resampling, exactness-preserving capacity growth (§2–3)
+  pseudo_marginal — the Bernoulli(½) pseudo-marginal special case (§5)
+  diagnostics     — ESS / autocorrelation / R-hat (Table 1 metrics)
+"""
+
+from repro.core import brightness, diagnostics, samplers
+from repro.core.bounds import (
+    CollapsedStats,
+    GLMData,
+    LogisticBound,
+    SoftmaxBound,
+    StudentTBound,
+    gaussian_log_prior,
+    laplace_log_prior,
+    psum_stats,
+)
+from repro.core.flymc import (
+    FlyMCSpec,
+    FlyMCState,
+    StepStats,
+    flymc_step,
+    init_chain,
+    log_expm1,
+    make_joint_logpost,
+    resize_state,
+    run_chain,
+)
+
+__all__ = [
+    "CollapsedStats",
+    "GLMData",
+    "LogisticBound",
+    "SoftmaxBound",
+    "StudentTBound",
+    "FlyMCSpec",
+    "FlyMCState",
+    "StepStats",
+    "brightness",
+    "diagnostics",
+    "flymc_step",
+    "gaussian_log_prior",
+    "init_chain",
+    "laplace_log_prior",
+    "log_expm1",
+    "make_joint_logpost",
+    "psum_stats",
+    "resize_state",
+    "run_chain",
+    "samplers",
+]

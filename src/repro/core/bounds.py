@@ -1,0 +1,303 @@
+"""Collapsible likelihood lower bounds (paper §3.1).
+
+A FlyMC bound ``B_n(θ)`` must satisfy two properties:
+
+  1. ``0 < B_n(θ) <= L_n(θ)`` for all θ (exactness requirement);
+  2. the *product* ``∏_n B_n(θ)`` must collapse to an O(D²) quadratic form
+     computed from sufficient statistics that are built once (and psum-able
+     across data shards).
+
+All three of the paper's bounds are scaled exponential-family functions of a
+GLM inner product, so their log-products collapse to
+
+    log ∏_n B_n(θ) = θᵀ Q θ + qᵀ θ + c            (vector θ, logistic/robust)
+    log ∏_n B_n(θ) = -½ tr(A θ S θᵀ) + tr(θ R) + c (matrix θ, softmax/Böhning)
+
+Implemented bounds:
+  * :class:`LogisticBound`  — Jaakkola–Jordan (1997) scaled-Gaussian bound on
+    the logistic likelihood, per-datum tightness parameter ξ_n.
+  * :class:`SoftmaxBound`   — Böhning (1992) fixed-curvature quadratic bound
+    on the softmax log-likelihood, per-datum tangency logits η₀_n.
+  * :class:`StudentTBound`  — tangent-in-r² Gaussian bound on the Student-t
+    density (log t_ν is convex in r², so the tangent is a global lower bound),
+    per-datum tangency residual ξ_n.
+
+Every bound exposes the same surface:
+
+    log_lik(theta, data)          -> per-datum log L_n(θ)
+    log_bound(theta, data)        -> per-datum log B_n(θ)
+    suffstats(data)               -> CollapsedStats  (one-time, O(N·D²))
+    collapsed(theta, stats)       -> Σ_n log B_n(θ)  (O(D²) per θ)
+    tighten(theta_map, data)      -> data with per-datum tightness at θ_MAP
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class GLMData(NamedTuple):
+    """A batch of GLM data rows.
+
+    x  : (N, D) features
+    t  : (N,)   targets — labels in {-1,+1} (logistic), class id (softmax),
+                or real-valued response (robust regression)
+    xi : per-datum bound-tightness parameter. Shape (N,) for logistic/robust,
+         (N, K) tangency logits for softmax.
+    """
+
+    x: jax.Array
+    t: jax.Array
+    xi: jax.Array
+
+
+class CollapsedStats(NamedTuple):
+    """Sufficient statistics of a product of quadratic log-bounds.
+
+    For vector-parameter bounds: ``Σ log B = θᵀ·Q·θ + q·θ + c``.
+    For the softmax (matrix θ of shape (K, D)): ``Q`` holds S=Σxxᵀ (D,D),
+    ``q`` holds R=Σ x rᵀ (D,K) and the quadratic is -½tr(AθSθᵀ)+tr(θR)+c.
+    """
+
+    Q: jax.Array
+    q: jax.Array
+    c: jax.Array
+
+
+def psum_stats(stats: CollapsedStats, axis_name) -> CollapsedStats:
+    """All-reduce suff-stats across data shards (one-time setup collective)."""
+    return CollapsedStats(*(jax.lax.psum(s, axis_name) for s in stats))
+
+
+# ---------------------------------------------------------------------------
+# Jaakkola–Jordan bound for logistic regression
+# ---------------------------------------------------------------------------
+
+
+def _jj_a(xi: jax.Array) -> jax.Array:
+    """a(ξ) = -tanh(ξ/2)/(4ξ), with the ξ→0 limit -1/8 handled exactly."""
+    safe = jnp.where(jnp.abs(xi) < 1e-4, 1.0, xi)
+    a = -jnp.tanh(safe / 2.0) / (4.0 * safe)
+    # Taylor: -1/8 + ξ²/96 + O(ξ⁴)
+    return jnp.where(jnp.abs(xi) < 1e-4, -0.125 + xi * xi / 96.0, a)
+
+
+def _jj_c(xi: jax.Array) -> jax.Array:
+    """c(ξ) = -a·ξ² + ξ/2 - log(eᶻ+1); tightness: log B(±ξ) = log σ(±ξ)."""
+    return -_jj_a(xi) * xi * xi + xi / 2.0 - jax.nn.softplus(xi)
+
+
+class LogisticBound:
+    """Jaakkola–Jordan scaled-Gaussian lower bound on logit⁻¹(t·θᵀx).
+
+    log B_n(s) = a(ξ_n)·s² + s/2 + c(ξ_n)   with  s = t_n·θᵀx_n.
+
+    Tight at s = ±ξ_n, so MAP-tuning uses ξ_n = |θ_MAPᵀ x_n|.
+    """
+
+    name = "jaakkola-jordan"
+
+    @staticmethod
+    def log_lik(theta: jax.Array, data: GLMData) -> jax.Array:
+        s = data.t * (data.x @ theta)
+        return -jax.nn.softplus(-s)
+
+    @staticmethod
+    def log_bound(theta: jax.Array, data: GLMData) -> jax.Array:
+        s = data.t * (data.x @ theta)
+        return _jj_a(data.xi) * s * s + 0.5 * s + _jj_c(data.xi)
+
+    @staticmethod
+    def suffstats(data: GLMData) -> CollapsedStats:
+        a = _jj_a(data.xi)
+        # s² = (θᵀx)² (t²=1), so Q = Σ a_n x xᵀ; the linear term keeps t.
+        Q = jnp.einsum("n,nd,ne->de", a, data.x, data.x)
+        q = 0.5 * jnp.einsum("n,nd->d", data.t.astype(data.x.dtype), data.x)
+        c = jnp.sum(_jj_c(data.xi))
+        return CollapsedStats(Q, q, c)
+
+    @staticmethod
+    def collapsed(theta: jax.Array, stats: CollapsedStats) -> jax.Array:
+        return theta @ stats.Q @ theta + stats.q @ theta + stats.c
+
+    @staticmethod
+    def tighten(theta_map: jax.Array, data: GLMData) -> GLMData:
+        return data._replace(xi=jnp.abs(data.x @ theta_map))
+
+    @staticmethod
+    def default_xi(data: GLMData, xi: float = 1.5) -> GLMData:
+        return data._replace(xi=jnp.full(data.x.shape[0], xi, data.x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Böhning bound for softmax classification
+# ---------------------------------------------------------------------------
+
+
+def _a_mul(v: jax.Array) -> jax.Array:
+    """Apply Böhning curvature A = ½(I - 𝟙𝟙ᵀ/K) along the last axis."""
+    return 0.5 * (v - jnp.mean(v, axis=-1, keepdims=True))
+
+
+def _softmax_log_lik_eta(eta: jax.Array, t: jax.Array) -> jax.Array:
+    """log softmax(η)[t] for per-row class ids t."""
+    return jnp.take_along_axis(
+        jax.nn.log_softmax(eta, axis=-1), t[..., None], axis=-1
+    )[..., 0]
+
+
+class SoftmaxBound:
+    """Böhning (1992) quadratic lower bound for the softmax likelihood.
+
+    θ is (K, D); per-datum logits η_n = θ x_n. With tangency logits η₀_n
+    (= data.xi, shape (N, K)):
+
+        log B_n = log L_n(η₀) + g_nᵀ(η-η₀) - ½(η-η₀)ᵀ A (η-η₀)
+        g_n = e_{t_n} - softmax(η₀_n),   A = ½(I - 𝟙𝟙ᵀ/K)
+
+    A ⪰ H(η) for every η (Böhning), so B_n ≤ L_n globally, and A is constant,
+    which makes the product collapse: S = Σ x xᵀ and R = Σ x r_nᵀ with
+    r_n = g_n + A η₀_n.
+    """
+
+    name = "bohning"
+
+    @staticmethod
+    def log_lik(theta: jax.Array, data: GLMData) -> jax.Array:
+        eta = data.x @ theta.T  # (N, K)
+        return _softmax_log_lik_eta(eta, data.t)
+
+    @staticmethod
+    def log_bound(theta: jax.Array, data: GLMData) -> jax.Array:
+        eta = data.x @ theta.T
+        eta0 = data.xi
+        K = eta.shape[-1]
+        g = jax.nn.one_hot(data.t, K, dtype=eta.dtype) - jax.nn.softmax(eta0)
+        d = eta - eta0
+        quad = jnp.sum(d * _a_mul(d), axis=-1)
+        return (
+            _softmax_log_lik_eta(eta0, data.t)
+            + jnp.sum(g * d, axis=-1)
+            - 0.5 * quad
+        )
+
+    @staticmethod
+    def suffstats(data: GLMData) -> CollapsedStats:
+        x, t, eta0 = data.x, data.t, data.xi
+        K = eta0.shape[-1]
+        g = jax.nn.one_hot(t, K, dtype=x.dtype) - jax.nn.softmax(eta0)
+        r = g + _a_mul(eta0)  # (N, K)
+        S = jnp.einsum("nd,ne->de", x, x)  # (D, D)
+        R = jnp.einsum("nd,nk->dk", x, r)  # (D, K)
+        c = jnp.sum(
+            _softmax_log_lik_eta(eta0, t)
+            - jnp.sum(g * eta0, axis=-1)
+            - 0.5 * jnp.sum(eta0 * _a_mul(eta0), axis=-1)
+        )
+        return CollapsedStats(S, R, c)
+
+    @staticmethod
+    def collapsed(theta: jax.Array, stats: CollapsedStats) -> jax.Array:
+        S, R, c = stats
+        quad = jnp.sum((_a_mul(theta.T).T @ S) * theta)  # tr(AθSθᵀ)
+        lin = jnp.sum(theta.T * R)  # tr(θR)
+        return -0.5 * quad + lin + c
+
+    @staticmethod
+    def tighten(theta_map: jax.Array, data: GLMData) -> GLMData:
+        return data._replace(xi=data.x @ theta_map.T)
+
+    @staticmethod
+    def default_xi(data: GLMData, n_classes: int) -> GLMData:
+        return data._replace(
+            xi=jnp.zeros((data.x.shape[0], n_classes), data.x.dtype)
+        )
+
+
+# ---------------------------------------------------------------------------
+# Gaussian bound for Student-t robust regression
+# ---------------------------------------------------------------------------
+
+
+class StudentTBound:
+    """Tangent-in-r² Gaussian lower bound on the Student-t likelihood.
+
+    With z = (t_n - θᵀx_n)/σ and u = z², the log-density
+    f(u) = const - ((ν+1)/2)·log(1 + u/ν) is convex in u, so its tangent at
+    u₀ = (ξ/σ)² is a global lower bound — a scaled Gaussian in the residual:
+
+        log B_n(z) = f(u₀) + f'(u₀)·(z² - u₀),  f'(u₀) = -((ν+1)/2)/(ν+u₀).
+
+    Tight at z = ±ξ/σ; MAP-tuning: ξ_n = t_n - θ_MAPᵀ x_n.
+    """
+
+    name = "student-t-tangent"
+
+    def __init__(self, nu: float = 4.0, sigma: float = 1.0):
+        self.nu = float(nu)
+        self.sigma = float(sigma)
+
+    def _log_t_const(self, dtype) -> jax.Array:
+        nu = self.nu
+        return jnp.asarray(
+            jax.scipy.special.gammaln((nu + 1.0) / 2.0)
+            - jax.scipy.special.gammaln(nu / 2.0)
+            - 0.5 * jnp.log(nu * jnp.pi)
+            - jnp.log(self.sigma),
+            dtype,
+        )
+
+    def _f(self, u: jax.Array) -> jax.Array:
+        return self._log_t_const(u.dtype) - ((self.nu + 1.0) / 2.0) * jnp.log1p(
+            u / self.nu
+        )
+
+    def _fprime(self, u: jax.Array) -> jax.Array:
+        return -((self.nu + 1.0) / 2.0) / (self.nu + u)
+
+    def log_lik(self, theta: jax.Array, data: GLMData) -> jax.Array:
+        z = (data.t - data.x @ theta) / self.sigma
+        return self._f(z * z)
+
+    def log_bound(self, theta: jax.Array, data: GLMData) -> jax.Array:
+        z = (data.t - data.x @ theta) / self.sigma
+        u0 = (data.xi / self.sigma) ** 2
+        return self._f(u0) + self._fprime(u0) * (z * z - u0)
+
+    def suffstats(self, data: GLMData) -> CollapsedStats:
+        x, y = data.x, data.t
+        u0 = (data.xi / self.sigma) ** 2
+        A = self._fprime(u0) / (self.sigma**2)  # coefficient of r² (negative)
+        Q = jnp.einsum("n,nd,ne->de", A, x, x)
+        q = -2.0 * jnp.einsum("n,n,nd->d", A, y, x)
+        c = jnp.sum(A * y * y) + jnp.sum(self._f(u0) - self._fprime(u0) * u0)
+        return CollapsedStats(Q, q, c)
+
+    @staticmethod
+    def collapsed(theta: jax.Array, stats: CollapsedStats) -> jax.Array:
+        return theta @ stats.Q @ theta + stats.q @ theta + stats.c
+
+    def tighten(self, theta_map: jax.Array, data: GLMData) -> GLMData:
+        return data._replace(xi=data.t - data.x @ theta_map)
+
+    @staticmethod
+    def default_xi(data: GLMData) -> GLMData:
+        return data._replace(xi=jnp.zeros(data.x.shape[0], data.x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Priors
+# ---------------------------------------------------------------------------
+
+
+def gaussian_log_prior(theta: jax.Array, scale: float) -> jax.Array:
+    """Isotropic Gaussian prior (normalization constant dropped)."""
+    return -0.5 * jnp.sum(jnp.square(theta)) / (scale**2)
+
+
+def laplace_log_prior(theta: jax.Array, scale: float) -> jax.Array:
+    """Sparsity-inducing Laplace prior (paper §4.3)."""
+    return -jnp.sum(jnp.abs(theta)) / scale

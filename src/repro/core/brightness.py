@@ -1,0 +1,124 @@
+"""Bright/dark set data structure (paper §3.3, Fig. 3) as JAX arrays.
+
+The paper's structure is two length-N arrays plus a counter:
+
+  arr : a permutation of 0..N-1 with all *bright* indices before dark ones
+  tab : inverse permutation — tab[n] is the position of datum n inside arr
+  num : number of bright data points (arr[:num] are bright)
+
+``brighten``/``darken`` are the paper's O(1) swap updates, kept for fidelity
+and for host-side use. On TPU the per-round update is *batched*: given the new
+boolean z vector we rebuild the partition with one stable cumsum compaction —
+an O(N) memory-bound vector sweep whose cost is negligible next to the
+O(M·D) likelihood work it enables (DESIGN.md §3.2, §7.6).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class BrightState(NamedTuple):
+    arr: jax.Array  # (N,) int32 permutation, bright indices first
+    tab: jax.Array  # (N,) int32 inverse permutation
+    num: jax.Array  # ()   int32 bright count
+
+
+def init(n: int, bright: bool = False) -> BrightState:
+    """All-dark (default) or all-bright initial state."""
+    idx = jnp.arange(n, dtype=jnp.int32)
+    num = jnp.asarray(n if bright else 0, jnp.int32)
+    return BrightState(arr=idx, tab=idx, num=num)
+
+
+def from_z(z: jax.Array) -> BrightState:
+    """Build the partition from a boolean brightness vector (stable order)."""
+    z = z.astype(bool)
+    n = z.shape[0]
+    num = jnp.sum(z).astype(jnp.int32)
+    # Stable partition: bright points keep relative order, then dark points.
+    pos_b = jnp.cumsum(z) - 1
+    pos_d = num + jnp.cumsum(~z) - 1
+    tab = jnp.where(z, pos_b, pos_d).astype(jnp.int32)
+    arr = jnp.zeros(n, jnp.int32).at[tab].set(jnp.arange(n, dtype=jnp.int32))
+    return BrightState(arr=arr, tab=tab, num=num)
+
+
+def z_of(state: BrightState) -> jax.Array:
+    """Boolean brightness vector: z[n] = (position of n) < num."""
+    return state.tab < state.num
+
+
+def brighten(state: BrightState, n: jax.Array) -> BrightState:
+    """Paper-faithful O(1) swap update: set z_n = 1 (no-op if already bright)."""
+    pos = state.tab[n]
+    already = pos < state.num
+    boundary = state.num  # first dark slot
+    other = state.arr[boundary]
+
+    def do(s: BrightState) -> BrightState:
+        arr = s.arr.at[boundary].set(n).at[pos].set(other)
+        tab = s.tab.at[n].set(boundary).at[other].set(pos)
+        return BrightState(arr=arr, tab=tab, num=s.num + 1)
+
+    return jax.lax.cond(already, lambda s: s, do, state)
+
+
+def darken(state: BrightState, n: jax.Array) -> BrightState:
+    """Paper-faithful O(1) swap update: set z_n = 0 (no-op if already dark)."""
+    pos = state.tab[n]
+    already = pos >= state.num
+    boundary = state.num - 1  # last bright slot
+    other = state.arr[boundary]
+
+    def do(s: BrightState) -> BrightState:
+        arr = s.arr.at[boundary].set(n).at[pos].set(other)
+        tab = s.tab.at[n].set(boundary).at[other].set(pos)
+        return BrightState(arr=arr, tab=tab, num=s.num - 1)
+
+    return jax.lax.cond(already, lambda s: s, do, state)
+
+
+def batch_update(state: BrightState, z_new: jax.Array) -> BrightState:
+    """Replace the whole partition given a new boolean z (vectorized round)."""
+    del state
+    return from_z(z_new)
+
+
+def bright_buffer(state: BrightState, capacity: int):
+    """Padded gather buffer over the bright set.
+
+    Returns (idx, mask): idx is arr[:capacity] (static shape), mask marks the
+    first ``num`` entries valid. Padding rows index arbitrary dark data whose
+    contributions are masked to exactly zero by callers.
+    """
+    idx = jax.lax.dynamic_slice_in_dim(state.arr, 0, capacity)
+    mask = jnp.arange(capacity, dtype=jnp.int32) < state.num
+    return idx, mask
+
+
+def dark_buffer(state: BrightState, capacity: int):
+    """Padded gather buffer over the *dark* tail (arr[num : num+capacity])."""
+    n = state.arr.shape[0]
+    start = jnp.minimum(state.num, n - capacity)
+    idx = jax.lax.dynamic_slice_in_dim(state.arr, start, capacity)
+    offset = jnp.arange(capacity, dtype=jnp.int32) + start
+    mask = offset >= state.num
+    return idx, mask
+
+
+def check_invariants(state: BrightState) -> bool:
+    """Host-side invariant check (used by tests & property tests)."""
+    arr = jax.device_get(state.arr)
+    tab = jax.device_get(state.tab)
+    num = int(state.num)
+    n = arr.shape[0]
+    import numpy as np
+
+    ok = bool(np.all(np.sort(arr) == np.arange(n)))
+    ok &= bool(np.all(arr[tab] == np.arange(n)))
+    ok &= 0 <= num <= n
+    return ok

@@ -1,0 +1,461 @@
+"""Firefly Monte Carlo (paper §2–§3): exact MCMC with subsets of data.
+
+The augmented target over (θ, z) is
+
+    p(θ, z | x) ∝ p̃(θ) · ∏_{n: z_n=1} L̃_n(θ)
+    p̃(θ)   = p(θ) · ∏_n B_n(θ)            (pseudo-prior; collapsed, O(D²))
+    L̃_n(θ) = (L_n(θ) - B_n(θ)) / B_n(θ)    (pseudo-likelihood of bright n)
+
+and marginalizing z recovers the exact posterior (paper Eq. 2). A FlyMC
+iteration alternates a θ-kernel on the conditional (any operator from
+``core.samplers``) with a z-kernel (implicit MH resampling, Algorithm 2, or
+explicit Gibbs resampling, Algorithm 1 lines 3–6).
+
+TPU/XLA adaptation (DESIGN.md §3): the dynamic bright set becomes a
+capacity-``C`` padded gather over the Fig.-3 partition array, so a θ-update
+costs O(C·D) likelihood work instead of O(N·D). Capacity overflow is detected
+*before* a step is committed and the step is deterministically re-run at a
+doubled capacity from the same RNG key, so truncation can never bias the
+chain. A full-length ``delta_full`` cache holds δ_n = log L_n - log B_n at
+the current θ for every point whose likelihood has been evaluated there,
+which is exactly the set the z-kernel is allowed to touch for free
+(Algorithm 2's "cached from θ update").
+
+Likelihood-query accounting follows Table 1: every per-datum L_n evaluation
+is counted; bound evaluations ride along for free (paper §3.1) and the
+collapsed bound product is O(D²), independent of N.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import brightness, samplers
+from repro.core.bounds import CollapsedStats, GLMData
+
+
+# ---------------------------------------------------------------------------
+# Numerics
+# ---------------------------------------------------------------------------
+
+_DELTA_FLOOR = 1e-10  # δ = logL - logB ≥ 0 in exact math; clamp FP noise.
+
+
+def log_expm1(delta: jax.Array) -> jax.Array:
+    """Stable log(exp(δ) - 1) = log L̃ for δ ≥ 0.
+
+    Both branches receive guarded inputs (double-where): in f32,
+    exp(-δ) rounds to 1.0 for δ ≲ 1e-8 and log1p(-1.0) = -inf would poison
+    the gradient of the *unselected* branch (0 · inf = NaN).
+    """
+    d = jnp.maximum(delta, _DELTA_FLOOR)
+    small = d < 15.0
+    d_small = jnp.where(small, d, 1.0)
+    d_big = jnp.where(small, 20.0, d)
+    return jnp.where(
+        small,
+        jnp.log(jnp.expm1(d_small)),
+        d_big + jnp.log1p(-jnp.exp(-jnp.minimum(d_big, 80.0))),
+    )
+
+
+def _tree_gather(data: GLMData, idx: jax.Array) -> GLMData:
+    return jax.tree.map(lambda a: jnp.take(a, idx, axis=0), data)
+
+
+# ---------------------------------------------------------------------------
+# Spec / state
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FlyMCSpec:
+    """Static configuration of a FlyMC chain (hashable; jit-static)."""
+
+    bound: Any  # bound object from core.bounds
+    log_prior: Callable[[jax.Array], jax.Array]
+    kernel: str = "rwmh"  # θ-operator: rwmh | mala | slice | hmc
+    capacity: int = 1024  # bright-buffer capacity C
+    cand_capacity: int = 1024  # dark→bright candidate buffer capacity
+    q_db: float = 0.01  # dark→bright proposal probability (Alg. 2)
+    mode: str = "implicit"  # z-kernel: implicit (Alg. 2) | explicit (Alg. 1)
+    resample_fraction: float = 0.1  # explicit mode: fraction of data per round
+    kernel_kwargs: tuple = ()  # extra static kwargs for the θ-kernel
+    axis_names: tuple = ()  # mesh axes carrying data shards (psum)
+    adapt_target: float | None = None  # accept-rate target during warmup
+
+    def needs_grad(self) -> bool:
+        return samplers.NEEDS_GRAD[self.kernel]
+
+
+class FlyMCState(NamedTuple):
+    sampler: samplers.SamplerState  # θ, joint lp, grad, δ-buffer aux
+    bright: brightness.BrightState
+    delta_full: jax.Array  # (N,) δ at current θ; valid for bright & just-evaluated
+    log_step: jax.Array  # log step size (adapted during warmup)
+    rng: jax.Array
+    iteration: jax.Array  # int32
+
+
+class StepStats(NamedTuple):
+    n_bright: jax.Array  # bright count after the step
+    lik_queries: jax.Array  # per-datum likelihood evaluations this step
+    accept_prob: jax.Array
+    overflow: jax.Array  # bool — step must be re-run at larger capacity
+    joint_lp: jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Joint log-posterior over the padded bright buffer
+# ---------------------------------------------------------------------------
+
+
+def make_joint_logpost(
+    spec: FlyMCSpec,
+    data: GLMData,
+    stats: CollapsedStats,
+    bright_idx: jax.Array,
+    bright_mask: jax.Array,
+) -> samplers.LogDensityFn:
+    """f(θ) -> (joint log posterior, δ on the bright buffer).
+
+    Evaluates only the ``C`` gathered rows (the paper's bright minibatch) plus
+    the O(D²) collapsed bound product. Under shard_map the bright sum is
+    psum'd; prior + collapsed terms are replicated and added once.
+    """
+
+    rows = _tree_gather(data, bright_idx)
+
+    def f(theta: jax.Array):
+        ll = spec.bound.log_lik(theta, rows)
+        lb = spec.bound.log_bound(theta, rows)
+        delta = ll - lb
+        s = jnp.sum(jnp.where(bright_mask, log_expm1(delta), 0.0))
+        for ax in spec.axis_names:
+            s = jax.lax.psum(s, ax)
+        lp = spec.log_prior(theta) + spec.bound.collapsed(theta, stats) + s
+        return lp, delta
+
+    return f
+
+
+def _refresh_sampler(
+    spec: FlyMCSpec,
+    data: GLMData,
+    stats: CollapsedStats,
+    theta: jax.Array,
+    bright: brightness.BrightState,
+    delta_full: jax.Array,
+) -> tuple[samplers.SamplerState, jax.Array]:
+    """Rebuild SamplerState after a z-move *without* new likelihood queries
+    (gradient kernels excepted — they re-evaluate and the cost is counted).
+
+    Returns (state, extra_queries).
+    """
+    idx, mask = brightness.bright_buffer(bright, spec.capacity)
+    delta = jnp.take(delta_full, idx)
+    if spec.needs_grad():
+        f = make_joint_logpost(spec, data, stats, idx, mask)
+        (lp, aux), grad = jax.value_and_grad(f, has_aux=True)(theta)
+        return samplers.SamplerState(theta, lp, grad, aux), bright.num
+    # lp from cached δ — zero new likelihood queries.
+    s = jnp.sum(jnp.where(mask, log_expm1(delta), 0.0))
+    for ax in spec.axis_names:
+        s = jax.lax.psum(s, ax)
+    lp = spec.log_prior(theta) + spec.bound.collapsed(theta, stats) + s
+    zeros_grad = jnp.zeros_like(theta)
+    return samplers.SamplerState(theta, lp, zeros_grad, delta), jnp.int32(0)
+
+
+# ---------------------------------------------------------------------------
+# z-kernels
+# ---------------------------------------------------------------------------
+
+
+def _implicit_z_update(
+    spec: FlyMCSpec,
+    data: GLMData,
+    key: jax.Array,
+    theta: jax.Array,
+    bright: brightness.BrightState,
+    delta_full: jax.Array,
+    delta_bright: jax.Array,
+):
+    """Algorithm 2, vectorized. Returns (z_new, delta_full, queries, overflow).
+
+    Per-datum MH moves are conditionally independent given θ, so the parallel
+    sweep simulates exactly the paper's kernel. q_{b→d}=1: every bright point
+    proposes to darken, using the δ cached from the θ-update; dark points
+    propose to brighten with prob q_{d→b} (geometric thinning) and only those
+    *candidates* pay a likelihood evaluation.
+    """
+    n = data.x.shape[0]
+    k_bd, k_cand, k_db = jax.random.split(key, 3)
+    z = brightness.z_of(bright)
+    log_q = jnp.log(jnp.asarray(spec.q_db, delta_full.dtype))
+
+    # --- bright → dark (free: reuses cached δ) -----------------------------
+    idx_b, mask_b = brightness.bright_buffer(bright, spec.capacity)
+    u1 = jax.random.uniform(k_bd, (spec.capacity,), delta_full.dtype)
+    # accept darkening iff u·L̃ < q_db  ⇔  log u + log L̃ < log q_db
+    darken = mask_b & (jnp.log(u1) + log_expm1(delta_bright) < log_q)
+    z = z.at[idx_b].set(jnp.where(darken, False, z[idx_b]))
+
+    # --- dark → bright (candidates pay a likelihood query each) ------------
+    u2 = jax.random.uniform(k_cand, (n,), delta_full.dtype)
+    was_dark = ~brightness.z_of(bright)
+    cand = was_dark & (u2 < spec.q_db)
+    n_cand = jnp.sum(cand).astype(jnp.int32)
+    overflow_c = n_cand > spec.cand_capacity
+    pos = jnp.cumsum(cand) - 1
+    scatter_to = jnp.where(cand, pos, spec.cand_capacity)  # OOB rows dropped
+    # Padding slots index n (out of bounds): their gathers clamp harmlessly
+    # and their scatters are dropped, so they can never collide with slot 0.
+    cand_idx = (
+        jnp.full(spec.cand_capacity, n, jnp.int32)
+        .at[scatter_to]
+        .set(jnp.arange(n, dtype=jnp.int32), mode="drop")
+    )
+    mask_c = jnp.arange(spec.cand_capacity) < n_cand
+
+    rows = _tree_gather(data, cand_idx)
+    delta_c = spec.bound.log_lik(theta, rows) - spec.bound.log_bound(theta, rows)
+    u3 = jax.random.uniform(k_db, (spec.cand_capacity,), delta_full.dtype)
+    # accept brightening iff u·q_db < L̃  ⇔  log u + log q_db < log L̃
+    brighten = mask_c & (jnp.log(u3) + log_q < log_expm1(delta_c))
+    z = z.at[cand_idx].set(jnp.where(brighten, True, z[cand_idx]), mode="drop")
+    delta_full = delta_full.at[cand_idx].set(
+        jnp.where(mask_c, delta_c, delta_full[cand_idx]), mode="drop"
+    )
+    return z, delta_full, n_cand, overflow_c
+
+
+def _explicit_z_update(
+    spec: FlyMCSpec,
+    data: GLMData,
+    key: jax.Array,
+    theta: jax.Array,
+    bright: brightness.BrightState,
+    delta_full: jax.Array,
+):
+    """Algorithm 1 lines 3–6: Gibbs resampling of a random fixed-size subset."""
+    n = data.x.shape[0]
+    r = max(1, int(round(n * spec.resample_fraction)))
+    k_idx, k_z = jax.random.split(key)
+    idx = jax.random.randint(k_idx, (r,), 0, n)
+    rows = _tree_gather(data, idx)
+    delta = spec.bound.log_lik(theta, rows) - spec.bound.log_bound(theta, rows)
+    # p(z=1) = (L-B)/L = -expm1(-δ)
+    p_bright = -jnp.expm1(-jnp.maximum(delta, _DELTA_FLOOR))
+    z_idx = jax.random.uniform(k_z, (r,), delta.dtype) < p_bright
+    z = brightness.z_of(bright).at[idx].set(z_idx)
+    delta_full = delta_full.at[idx].set(delta)
+    return z, delta_full, jnp.int32(r), jnp.bool_(False)
+
+
+# ---------------------------------------------------------------------------
+# One FlyMC iteration
+# ---------------------------------------------------------------------------
+
+
+def flymc_step(
+    spec: FlyMCSpec,
+    data: GLMData,
+    stats: CollapsedStats,
+    state: FlyMCState,
+) -> tuple[FlyMCState, StepStats]:
+    """θ-update followed by z-update (paper §2 alternation).
+
+    Distributed (spec.axis_names non-empty, inside shard_map): the θ-kernel
+    runs replicated with identical keys on every shard (identical proposals
+    and accept decisions; likelihood sums are psum'd inside the joint), while
+    the z-kernel folds the shard index into its key so per-datum Bernoulli
+    decisions are independent across shards.
+    """
+    key_theta, key_z, key_next = jax.random.split(state.rng, 3)
+    for ax in spec.axis_names:
+        key_z = jax.random.fold_in(key_z, jax.lax.axis_index(ax))
+
+    # ---- θ | z -------------------------------------------------------------
+    idx, mask = brightness.bright_buffer(state.bright, spec.capacity)
+    f = make_joint_logpost(spec, data, stats, idx, mask)
+    kernel = samplers.make_kernel(spec.kernel, f, **dict(spec.kernel_kwargs))
+    step = jnp.exp(state.log_step)
+    if spec.kernel == "slice":
+        new_sampler, info = kernel(key_theta, state.sampler, width=step)
+    else:
+        new_sampler, info = kernel(key_theta, state.sampler, step_size=step)
+    queries_theta = info.n_evals * state.bright.num
+    # δ at (possibly) new θ for the bright buffer, from the kernel's aux cache.
+    delta_full = state.delta_full.at[idx].set(
+        jnp.where(mask, new_sampler.aux, state.delta_full[idx])
+    )
+
+    # ---- z | θ -------------------------------------------------------------
+    if spec.mode == "implicit":
+        z_new, delta_full, queries_z, overflow_c = _implicit_z_update(
+            spec, data, key_z, new_sampler.theta, state.bright, delta_full,
+            new_sampler.aux,
+        )
+    else:
+        z_new, delta_full, queries_z, overflow_c = _explicit_z_update(
+            spec, data, key_z, new_sampler.theta, state.bright, delta_full
+        )
+    bright_new = brightness.from_z(z_new)
+    overflow = overflow_c | (bright_new.num > spec.capacity)
+    if spec.axis_names:
+        overflow = jax.lax.pmax(overflow.astype(jnp.int32),
+                                spec.axis_names).astype(bool)
+
+    refreshed, extra_q = _refresh_sampler(
+        spec, data, stats, new_sampler.theta, bright_new, delta_full
+    )
+
+    log_step = state.log_step
+    if spec.adapt_target is not None:
+        log_step = samplers.adapt_step_size(
+            log_step, info.accept_prob, spec.adapt_target, state.iteration
+        )
+
+    new_state = FlyMCState(
+        sampler=refreshed,
+        bright=bright_new,
+        delta_full=delta_full,
+        log_step=log_step,
+        rng=key_next,
+        iteration=state.iteration + 1,
+    )
+    n_bright = bright_new.num
+    lik_queries = queries_theta + queries_z + extra_q
+    if spec.axis_names:
+        n_bright = jax.lax.psum(n_bright, spec.axis_names)
+        lik_queries = jax.lax.psum(lik_queries, spec.axis_names)
+    stats_out = StepStats(
+        n_bright=n_bright,
+        lik_queries=lik_queries,
+        accept_prob=info.accept_prob,
+        overflow=overflow,
+        joint_lp=refreshed.lp,
+    )
+    return new_state, stats_out
+
+
+# ---------------------------------------------------------------------------
+# Initialization & host driver (capacity doubling keeps the chain exact)
+# ---------------------------------------------------------------------------
+
+
+def init_chain(
+    spec: FlyMCSpec,
+    data: GLMData,
+    stats: CollapsedStats,
+    theta0: jax.Array,
+    key: jax.Array,
+    z0: jax.Array | None = None,
+    step_size: float = 0.1,
+) -> tuple[FlyMCState, int, FlyMCSpec]:
+    """Initialize the chain; returns (state, setup likelihood queries, spec).
+
+    The returned spec may have grown capacities if the initial bright set
+    did not fit the requested buffer.
+    """
+    n = data.x.shape[0]
+    k_z, k_chain = jax.random.split(key)
+    for ax in spec.axis_names:
+        k_z = jax.random.fold_in(k_z, jax.lax.axis_index(ax))
+    if z0 is None:
+        z0 = jax.random.bernoulli(k_z, min(2.0 * spec.q_db, 1.0), (n,))
+    bright = brightness.from_z(z0)
+    if not spec.axis_names:
+        while int(jax.device_get(bright.num)) > spec.capacity:
+            spec = _grow(spec, n)
+
+    idx, mask = brightness.bright_buffer(bright, spec.capacity)
+    f = make_joint_logpost(spec, data, stats, idx, mask)
+    sampler = samplers.init_state(f, theta0, with_grad=spec.needs_grad())
+    delta_full = jnp.zeros(n, sampler.lp.dtype).at[idx].set(
+        jnp.where(mask, sampler.aux, 0.0)
+    )
+    state = FlyMCState(
+        sampler=sampler,
+        bright=bright,
+        delta_full=delta_full,
+        log_step=jnp.log(jnp.asarray(step_size, sampler.lp.dtype)),
+        rng=k_chain,
+        iteration=jnp.int32(0),
+    )
+    if spec.axis_names:
+        return state, bright.num, spec
+    return state, int(jax.device_get(bright.num)), spec
+
+
+def _grow(spec: FlyMCSpec, n: int) -> FlyMCSpec:
+    return dataclasses.replace(
+        spec,
+        capacity=min(2 * spec.capacity, n),
+        cand_capacity=min(2 * spec.cand_capacity, n),
+    )
+
+
+def resize_state(spec: FlyMCSpec, state: FlyMCState) -> FlyMCState:
+    """Rebuild the capacity-shaped δ buffer after a capacity change.
+
+    θ, joint lp, gradient and the bright partition are capacity-independent;
+    the (C,)-shaped aux is re-gathered from ``delta_full`` — zero likelihood
+    queries, bitwise-identical chain law.
+    """
+    idx, _ = brightness.bright_buffer(state.bright, spec.capacity)
+    aux = jnp.take(state.delta_full, idx)
+    return state._replace(sampler=state.sampler._replace(aux=aux))
+
+
+def run_chain(
+    spec: FlyMCSpec,
+    data: GLMData,
+    stats: CollapsedStats,
+    state: FlyMCState,
+    num_iters: int,
+    collect: Callable[[FlyMCState], Any] | None = None,
+):
+    """Host-side chain driver with exactness-preserving capacity doubling.
+
+    Each jitted step reports an overflow flag computed *before* the state is
+    committed. On overflow the step is re-run from the saved pre-step state
+    with the same RNG key and doubled capacities, so the realized chain is
+    identical to one run at infinite capacity (DESIGN.md §3.1).
+    """
+    n = data.x.shape[0]
+    collect = collect or (lambda s: jax.device_get(s.sampler.theta))
+    # No buffer donation: the pre-step state must stay alive for exact
+    # re-execution when a capacity overflow is detected.
+    jitted = jax.jit(partial(flymc_step, spec))
+
+    samples, trace = [], []
+    total_queries = 0
+    for _ in range(num_iters):
+        prev = state
+        new_state, st = jitted(data, stats, state)
+        while bool(jax.device_get(st.overflow)):
+            spec = _grow(spec, n)
+            jitted = jax.jit(partial(flymc_step, spec))
+            # Re-run the step exactly: same pre-step state (δ buffer resized
+            # from the capacity-independent delta_full), same RNG key.
+            prev = resize_state(spec, prev)
+            new_state, st = jitted(data, stats, prev)
+        state = new_state
+        total_queries += int(jax.device_get(st.lik_queries))
+        samples.append(collect(state))
+        trace.append(
+            {
+                "n_bright": int(jax.device_get(st.n_bright)),
+                "lik_queries": int(jax.device_get(st.lik_queries)),
+                "accept_prob": float(jax.device_get(st.accept_prob)),
+                "joint_lp": float(jax.device_get(st.joint_lp)),
+            }
+        )
+    return samples, trace, total_queries, spec

@@ -1,0 +1,81 @@
+"""Pseudo-marginal MCMC as a FlyMC special case (paper §5).
+
+"If we sampled each of the variables {z_n} as a Bernoulli random variable
+with success probability 0.5, then the joint posterior we have been using
+becomes an unbiased estimator of the original posterior over θ, up to
+normalization. Running pseudo-marginal MCMC using this unbiased estimator
+would be a special case of FlyMC: namely FlyMC with z and θ updated
+simultaneously with Metropolis–Hastings updates."
+
+We implement exactly that joint-update kernel. The z proposal is iid
+Bernoulli(½), independent of the current state, so the proposal ratio for z
+cancels and the MH ratio is the plain joint-density ratio. This module is a
+validity check (the marginal over θ must match the FlyMC/full-data
+posterior), not a performance path: with p=½ half the data is bright.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bounds import CollapsedStats, GLMData
+from repro.core.flymc import log_expm1
+
+
+class PMState(NamedTuple):
+    theta: jax.Array
+    z: jax.Array  # (N,) bool
+    lp: jax.Array
+    rng: jax.Array
+
+
+def joint_log_density(
+    bound: Any,
+    log_prior: Callable,
+    data: GLMData,
+    stats: CollapsedStats,
+    theta: jax.Array,
+    z: jax.Array,
+) -> jax.Array:
+    """log p̃(θ) + Σ_{z=1} log L̃_n — evaluated densely (validity harness)."""
+    delta = bound.log_lik(theta, data) - bound.log_bound(theta, data)
+    s = jnp.sum(jnp.where(z, log_expm1(delta), 0.0))
+    return log_prior(theta) + bound.collapsed(theta, stats) + s
+
+
+def init(
+    bound, log_prior, data, stats, theta0: jax.Array, key: jax.Array
+) -> PMState:
+    k_z, k_chain = jax.random.split(key)
+    z0 = jax.random.bernoulli(k_z, 0.5, (data.x.shape[0],))
+    lp0 = joint_log_density(bound, log_prior, data, stats, theta0, z0)
+    return PMState(theta0, z0, lp0, k_chain)
+
+
+def step(
+    bound,
+    log_prior,
+    data: GLMData,
+    stats: CollapsedStats,
+    state: PMState,
+    step_size: float,
+) -> tuple[PMState, jax.Array]:
+    """One joint (θ, z) MH update with z' ~ Bernoulli(½)^N."""
+    k_theta, k_z, k_acc, k_next = jax.random.split(state.rng, 4)
+    theta_p = state.theta + step_size * jax.random.normal(
+        k_theta, state.theta.shape, state.theta.dtype
+    )
+    z_p = jax.random.bernoulli(k_z, 0.5, state.z.shape)
+    lp_p = joint_log_density(bound, log_prior, data, stats, theta_p, z_p)
+    log_ratio = lp_p - state.lp  # symmetric θ proposal; z proposal cancels
+    accepted = jnp.log(jax.random.uniform(k_acc, (), state.lp.dtype)) < log_ratio
+    new = PMState(
+        theta=jnp.where(accepted, theta_p, state.theta),
+        z=jnp.where(accepted, z_p, state.z),
+        lp=jnp.where(accepted, lp_p, state.lp),
+        rng=k_next,
+    )
+    return new, accepted

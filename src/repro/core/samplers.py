@@ -1,0 +1,259 @@
+"""Parameter-update kernels for the θ | z conditional (paper §2, §4).
+
+FlyMC composes with any conventional MCMC operator. We implement the three
+the paper evaluates — random-walk Metropolis–Hastings (§4.1), MALA (§4.2),
+and slice sampling (§4.3) — plus HMC as a bonus, all as pure JAX kernels over
+a user-supplied log-density.
+
+Interface: the target is ``f(θ) -> (logpdf, aux)``. ``aux`` is an arbitrary
+pytree recomputed at every density evaluation; FlyMC uses it to cache the
+bright-point log-likelihood gap δ_n = log L_n - log B_n at the *current* θ so
+the z-update can reuse those evaluations (Algorithm 2 line 4: "cached from θ
+update"). Every kernel returns the number of density evaluations it made —
+FlyMC converts that into likelihood-query counts (Table 1's cost metric).
+
+All kernels are shard-agnostic: run replicated with identical RNG keys, they
+make identical decisions on every shard while ``f`` internally psums
+shard-local likelihood sums (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+LogDensityFn = Callable[[jax.Array], tuple[jax.Array, Any]]
+
+
+class SamplerState(NamedTuple):
+    theta: jax.Array
+    lp: jax.Array  # cached log-density at theta
+    grad: jax.Array  # cached gradient (zeros for gradient-free kernels)
+    aux: Any  # cached aux from the last evaluation at theta
+
+
+class StepInfo(NamedTuple):
+    accept_prob: jax.Array  # acceptance probability (or 1.0 for slice)
+    accepted: jax.Array  # bool — proposal accepted
+    n_evals: jax.Array  # int32 — density evaluations this step
+
+
+def init_state(
+    f: LogDensityFn, theta: jax.Array, with_grad: bool = False
+) -> SamplerState:
+    if with_grad:
+        (lp, aux), grad = jax.value_and_grad(f, has_aux=True)(theta)
+    else:
+        lp, aux = f(theta)
+        grad = jnp.zeros_like(theta)
+    return SamplerState(theta, lp, grad, aux)
+
+
+# ---------------------------------------------------------------------------
+# Random-walk Metropolis–Hastings
+# ---------------------------------------------------------------------------
+
+
+def rwmh_step(
+    f: LogDensityFn, key: jax.Array, state: SamplerState, step_size: jax.Array
+) -> tuple[SamplerState, StepInfo]:
+    k_prop, k_acc = jax.random.split(key)
+    eta = step_size * jax.random.normal(k_prop, state.theta.shape, state.theta.dtype)
+    theta_p = state.theta + eta
+    lp_p, aux_p = f(theta_p)
+    log_ratio = lp_p - state.lp
+    accept_prob = jnp.minimum(1.0, jnp.exp(jnp.minimum(log_ratio, 0.0)))
+    accepted = jnp.log(jax.random.uniform(k_acc, (), state.lp.dtype)) < log_ratio
+    new = jax.tree.map(
+        lambda a, b: jnp.where(accepted, a, b),
+        SamplerState(theta_p, lp_p, state.grad, aux_p),
+        state,
+    )
+    return new, StepInfo(accept_prob, accepted, jnp.int32(1))
+
+
+# ---------------------------------------------------------------------------
+# Metropolis-adjusted Langevin (MALA)
+# ---------------------------------------------------------------------------
+
+
+def mala_step(
+    f: LogDensityFn, key: jax.Array, state: SamplerState, step_size: jax.Array
+) -> tuple[SamplerState, StepInfo]:
+    vg = jax.value_and_grad(f, has_aux=True)
+    k_prop, k_acc = jax.random.split(key)
+    eps2 = step_size * step_size
+    mean_fwd = state.theta + 0.5 * eps2 * state.grad
+    theta_p = mean_fwd + step_size * jax.random.normal(
+        k_prop, state.theta.shape, state.theta.dtype
+    )
+    (lp_p, aux_p), grad_p = vg(theta_p)
+    mean_rev = theta_p + 0.5 * eps2 * grad_p
+    log_q_fwd = -jnp.sum(jnp.square(theta_p - mean_fwd)) / (2.0 * eps2)
+    log_q_rev = -jnp.sum(jnp.square(state.theta - mean_rev)) / (2.0 * eps2)
+    log_ratio = (lp_p - state.lp) + (log_q_rev - log_q_fwd)
+    accept_prob = jnp.minimum(1.0, jnp.exp(jnp.minimum(log_ratio, 0.0)))
+    accepted = jnp.log(jax.random.uniform(k_acc, (), state.lp.dtype)) < log_ratio
+    new = jax.tree.map(
+        lambda a, b: jnp.where(accepted, a, b),
+        SamplerState(theta_p, lp_p, grad_p, aux_p),
+        state,
+    )
+    return new, StepInfo(accept_prob, accepted, jnp.int32(1))
+
+
+# ---------------------------------------------------------------------------
+# Slice sampling (Neal 2003) along a random direction
+# ---------------------------------------------------------------------------
+
+
+def slice_step(
+    f: LogDensityFn,
+    key: jax.Array,
+    state: SamplerState,
+    width: jax.Array,
+    max_step_out: int = 8,
+    max_shrink: int = 32,
+) -> tuple[SamplerState, StepInfo]:
+    """One slice-sampling update along a uniformly random direction.
+
+    Stepping-out + shrinkage per Neal (2003) §4, run in lax.while_loops so the
+    (variable) number of likelihood evaluations is data-dependent exactly as
+    in the paper's OPV experiment. Loops are capped (``max_step_out``,
+    ``max_shrink``); at the shrinkage cap we return the current point, which
+    is always inside the slice.
+    """
+    k_dir, k_h, k_u, k_shrink = jax.random.split(key, 4)
+    d = jax.random.normal(k_dir, state.theta.shape, state.theta.dtype)
+    d = d / jnp.sqrt(jnp.sum(jnp.square(d)))
+    log_y = state.lp + jnp.log(jax.random.uniform(k_h, (), state.lp.dtype))
+
+    f_at = lambda s: f(state.theta + s * d)
+
+    # --- stepping out -----------------------------------------------------
+    u = jax.random.uniform(k_u, (), state.lp.dtype)
+    lo0, hi0 = -width * u, width * (1.0 - u)
+
+    def expand(bound, sign):
+        def cond(c):
+            b, lp_b, i = c
+            return (lp_b > log_y) & (i < max_step_out)
+
+        def body(c):
+            b, _, i = c
+            b2 = b + sign * width
+            lp2, _ = f_at(b2)
+            return (b2, lp2, i + 1)
+
+        lp_b, _ = f_at(bound)
+        b, _, i = jax.lax.while_loop(cond, body, (bound, lp_b, jnp.int32(0)))
+        return b, i + 1  # +1 for the initial edge evaluation
+
+    lo, n_lo = expand(lo0, -1.0)
+    hi, n_hi = expand(hi0, +1.0)
+
+    # --- shrinkage ---------------------------------------------------------
+    def cond(c):
+        _, _, _, _, _, done, i = c
+        return (~done) & (i < max_shrink)
+
+    def body(c):
+        lo_, hi_, s, lp_s, aux_s, _, i = c
+        k = jax.random.fold_in(k_shrink, i)
+        s2 = lo_ + (hi_ - lo_) * jax.random.uniform(k, (), state.lp.dtype)
+        lp2, aux2 = f_at(s2)
+        ok = lp2 > log_y
+        lo2 = jnp.where(ok | (s2 >= 0.0), lo_, s2)
+        hi2 = jnp.where(ok | (s2 < 0.0), hi_, s2)
+        s_n = jnp.where(ok, s2, s)
+        lp_n = jnp.where(ok, lp2, lp_s)
+        aux_n = jax.tree.map(lambda a, b: jnp.where(ok, a, b), aux2, aux_s)
+        return (lo2, hi2, s_n, lp_n, aux_n, ok, i + 1)
+
+    init = (lo, hi, jnp.zeros((), state.lp.dtype), state.lp, state.aux,
+            jnp.bool_(False), jnp.int32(0))
+    lo, hi, s, lp_new, aux_new, done, n_shrink = jax.lax.while_loop(
+        cond, body, init
+    )
+    theta_new = state.theta + s * d
+    n_evals = n_lo + n_hi + n_shrink
+    new = SamplerState(theta_new, lp_new, state.grad, aux_new)
+    return new, StepInfo(jnp.ones((), state.lp.dtype), done, n_evals)
+
+
+# ---------------------------------------------------------------------------
+# Hamiltonian Monte Carlo (bonus operator)
+# ---------------------------------------------------------------------------
+
+
+def hmc_step(
+    f: LogDensityFn,
+    key: jax.Array,
+    state: SamplerState,
+    step_size: jax.Array,
+    n_leapfrog: int = 10,
+) -> tuple[SamplerState, StepInfo]:
+    vg = jax.value_and_grad(f, has_aux=True)
+    k_mom, k_acc = jax.random.split(key)
+    p0 = jax.random.normal(k_mom, state.theta.shape, state.theta.dtype)
+
+    def leapfrog(carry, _):
+        theta, p, grad = carry
+        p_half = p + 0.5 * step_size * grad
+        theta_n = theta + step_size * p_half
+        (_, _), grad_n = vg(theta_n)
+        p_n = p_half + 0.5 * step_size * grad_n
+        return (theta_n, p_n, grad_n), None
+
+    (theta_p, p_p, grad_p), _ = jax.lax.scan(
+        leapfrog, (state.theta, p0, state.grad), None, length=n_leapfrog
+    )
+    (lp_p, aux_p) = f(theta_p)
+    h0 = -state.lp + 0.5 * jnp.sum(jnp.square(p0))
+    h1 = -lp_p + 0.5 * jnp.sum(jnp.square(p_p))
+    log_ratio = h0 - h1
+    accept_prob = jnp.minimum(1.0, jnp.exp(jnp.minimum(log_ratio, 0.0)))
+    accepted = jnp.log(jax.random.uniform(k_acc, (), state.lp.dtype)) < log_ratio
+    new = jax.tree.map(
+        lambda a, b: jnp.where(accepted, a, b),
+        SamplerState(theta_p, lp_p, grad_p, aux_p),
+        state,
+    )
+    return new, StepInfo(accept_prob, accepted, jnp.int32(n_leapfrog + 1))
+
+
+# ---------------------------------------------------------------------------
+# Step-size adaptation (burn-in only; paper tunes to 0.234 / 0.574)
+# ---------------------------------------------------------------------------
+
+
+def adapt_step_size(
+    log_step: jax.Array,
+    accept_prob: jax.Array,
+    target: float,
+    iteration: jax.Array,
+    gain: float = 0.05,
+) -> jax.Array:
+    """Robbins–Monro update of log step size toward a target accept rate."""
+    lr = gain / jnp.sqrt(1.0 + iteration.astype(log_step.dtype))
+    return log_step + lr * (accept_prob - target)
+
+
+KERNELS: dict[str, Callable] = {
+    "rwmh": rwmh_step,
+    "mala": mala_step,
+    "slice": slice_step,
+    "hmc": hmc_step,
+}
+
+NEEDS_GRAD = {"rwmh": False, "mala": True, "slice": False, "hmc": True}
+TARGET_ACCEPT = {"rwmh": 0.234, "mala": 0.574, "hmc": 0.8, "slice": 1.0}
+
+
+def make_kernel(name: str, f: LogDensityFn, **kwargs) -> Callable:
+    """Bind a named θ-kernel to a log-density; returns (key, state, step)->(state, info)."""
+    step_fn = KERNELS[name]
+    return partial(step_fn, f, **kwargs)

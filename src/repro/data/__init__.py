@@ -1,0 +1,9 @@
+"""Data pipeline: synthetic generators at paper scale + sharded global arrays."""
+
+from repro.data.synthetic import (
+    logistic_data,
+    robust_data,
+    softmax_data,
+)
+
+__all__ = ["logistic_data", "robust_data", "softmax_data"]

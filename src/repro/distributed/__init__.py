@@ -1,0 +1,1 @@
+"""Distributed runtime: mesh conventions, parallel primitives, sharded FlyMC."""

@@ -1,0 +1,294 @@
+"""Parallelism primitives shared by every model layer.
+
+All model code is written once against :class:`Par` and runs in two modes:
+
+  * trivial ``Par()`` — no mesh axes; every collective helper is an identity.
+    Used by single-device smoke tests and reduced-config examples.
+  * sharded ``Par(dp=("pod", "data"), mp="model", ...)`` — inside
+    ``shard_map``; helpers lower to jax.lax collectives.
+
+Parameter placement is described per-leaf by :class:`WSpec`:
+
+  * ``tp_dim``    — dimension sharded over the ``model`` axis (stays sharded
+    in compute: Megatron column/row parallel, vocab parallel, head parallel,
+    expert ff slices).
+  * ``fsdp_dim``  — dimension sharded at rest over as many remaining mesh
+    axes as divide it (ZeRO-3); all-gathered just-in-time for compute, which
+    makes autodiff produce the matching reduce-scatter for gradients.
+  * ``sync``      — mesh axes that neither tp nor fsdp cover. The param is
+    replicated over them in compute, so gradients need one explicit psum
+    (and the global-norm accounting divides by the replica count).
+
+The placement rule is resolved *per architecture* at build time
+(:func:`resolve`): e.g. whisper-tiny's d_model=384 cannot shard 512-ways, so
+its weights keep ``sync=('model',)`` while qwen1.5-110b shards everything.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class Par:
+    """Axis context a model function runs under."""
+
+    dp: tuple[str, ...] = ()  # batch/FSDP axes, e.g. ("pod", "data")
+    mp: str | None = None  # model axis
+    dp_size: int = 1
+    mp_size: int = 1
+
+    @property
+    def all_axes(self) -> tuple[str, ...]:
+        return self.dp + ((self.mp,) if self.mp else ())
+
+    def axis_sizes(self) -> dict[str, int]:
+        # dp sizes are aggregate; exact per-axis sizes provided at build.
+        raise NotImplementedError
+
+
+def psum(x, axes):
+    if not axes:
+        return x
+    return jax.lax.psum(x, tuple(axes))
+
+
+def pmax(x, axes):
+    if not axes:
+        return x
+    return jax.lax.pmax(x, tuple(axes))
+
+
+def all_gather(x, axes, axis: int):
+    """Tiled all-gather along dimension ``axis`` over mesh ``axes``."""
+    if not axes:
+        return x
+    return jax.lax.all_gather(x, tuple(axes), axis=axis, tiled=True)
+
+
+def reduce_scatter(x, axes, axis: int):
+    """Tiled reduce-scatter (psum_scatter) along ``axis`` over ``axes``."""
+    if not axes:
+        return x
+    return jax.lax.psum_scatter(x, tuple(axes), scatter_dimension=axis, tiled=True)
+
+
+def axis_index(axis: str | None):
+    if axis is None:
+        return jnp.int32(0)
+    return jax.lax.axis_index(axis)
+
+
+# ---------------------------------------------------------------------------
+# Weight placement specs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class WSpec:
+    """Resolved placement of one parameter."""
+
+    shape: tuple[int, ...]  # global logical shape
+    dtype: Any
+    tp_dim: int | None = None  # dim sharded over `model` in compute
+    fsdp_dim: int | None = None  # dim sharded at rest, gathered for compute
+    fsdp_axes: tuple[str, ...] = ()
+    sync: tuple[str, ...] = ()  # axes needing explicit grad psum
+    init: str = "normal"  # normal | zeros | ones | scaled
+    init_scale: float = 1.0
+
+    def pspec(self, mp_axis: str | None) -> P:
+        """Storage PartitionSpec (for shard_map in_specs / NamedSharding)."""
+        entries: list = [None] * len(self.shape)
+        if self.tp_dim is not None and mp_axis:
+            entries[self.tp_dim] = mp_axis
+        if self.fsdp_dim is not None and self.fsdp_axes:
+            if entries[self.fsdp_dim] is not None:
+                raise ValueError("tp and fsdp on same dim")
+            entries[self.fsdp_dim] = self.fsdp_axes
+        return P(*entries)
+
+    def replicas(self, mesh_sizes: dict[str, int]) -> int:
+        return math.prod(mesh_sizes.get(a, 1) for a in self.sync) or 1
+
+    def local_shape(self, mesh_sizes: dict[str, int], mp_axis: str | None):
+        s = list(self.shape)
+        if self.tp_dim is not None and mp_axis:
+            s[self.tp_dim] //= mesh_sizes.get(mp_axis, 1)
+        if self.fsdp_dim is not None:
+            s[self.fsdp_dim] //= math.prod(
+                mesh_sizes.get(a, 1) for a in self.fsdp_axes
+            )
+        return tuple(s)
+
+
+@dataclasses.dataclass(frozen=True)
+class WDef:
+    """Pre-resolution parameter definition emitted by layer builders."""
+
+    shape: tuple[int, ...]
+    tp_dim: int | None = None
+    fsdp_pref: tuple[int, ...] = (0,)  # candidate fsdp dims, in order
+    init: str = "normal"
+    init_scale: float = 1.0
+    dtype: Any = jnp.float32
+
+
+def resolve(
+    defn: WDef,
+    mesh_sizes: dict[str, int],
+    mp_axis: str | None,
+    exclude_fsdp: tuple[str, ...] = (),
+) -> WSpec:
+    """Pick fsdp axes for a param given the mesh (largest dividing subset).
+
+    ``exclude_fsdp`` removes axes from sharding candidates — used to keep
+    parameters replicated across the DCN (pod) axis so the pod gradient
+    reduction can be compressed (optim.compression); those axes land in
+    ``sync`` instead.
+    """
+    axes_order = [
+        a for a in ("pod", "data")
+        if a in mesh_sizes and a not in exclude_fsdp
+    ]
+    if defn.tp_dim is None and mp_axis in mesh_sizes:
+        axes_order = axes_order + [mp_axis]
+    # Candidate axis sets: contiguous windows of the axis order, tried from
+    # the largest total shard count down (ties prefer dropping 'pod' first —
+    # DCN is the slowest place to put an fsdp gather).
+    candidates: list[tuple[str, ...]] = []
+    n = len(axes_order)
+    for width in range(n, 0, -1):
+        for start in range(n - width, -1, -1):
+            combo = tuple(axes_order[start : start + width])
+            if combo not in candidates:
+                candidates.append(combo)
+    candidates.sort(
+        key=lambda c: math.prod(mesh_sizes[a] for a in c) if c else 1,
+        reverse=True,
+    )
+    candidates.append(())
+
+    tp_frac = 1
+    best: tuple[tuple[str, ...], int | None] = ((), None)
+    for combo in candidates:
+        size = math.prod(mesh_sizes[a] for a in combo) if combo else 1
+        for dim in defn.fsdp_pref:
+            d = defn.shape[dim]
+            if defn.tp_dim == dim:
+                continue
+            if defn.tp_dim is not None and mp_axis:
+                pass  # tp dim already excluded
+            if d % size == 0:
+                best = (combo, dim if combo else None)
+                break
+        if best[0]:
+            break
+    fsdp_axes, fsdp_dim = best
+    covered = set(fsdp_axes)
+    if defn.tp_dim is not None and mp_axis:
+        covered.add(mp_axis)
+    sync = tuple(a for a in mesh_sizes if a not in covered)
+    del tp_frac
+    return WSpec(
+        shape=defn.shape,
+        dtype=defn.dtype,
+        tp_dim=defn.tp_dim if mp_axis else None,
+        fsdp_dim=fsdp_dim,
+        fsdp_axes=fsdp_axes,
+        sync=sync,
+        init=defn.init,
+        init_scale=defn.init_scale,
+    )
+
+
+def gather_param(w: jax.Array, spec: WSpec, compute_dtype=jnp.bfloat16):
+    """Cast → all-gather the fsdp axes (JIT weight gather, ZeRO-3).
+
+    Casting *before* the gather halves the collective bytes; the cast's
+    transpose returns gradients to f32 after the (bf16) reduce-scatter.
+    """
+    w = w.astype(compute_dtype)
+    if spec.fsdp_dim is None or not spec.fsdp_axes:
+        return w
+    return all_gather(w, spec.fsdp_axes, axis=spec.fsdp_dim)
+
+
+def sync_grads(grads: dict, specs: dict, tree_path=()):
+    """Explicit psum for grads of sync-replicated params (leaf-wise)."""
+
+    def walk(g, s):
+        if isinstance(g, dict):
+            return {k: walk(g[k], s[k]) for k in g}
+        if s.sync:
+            return psum(g, s.sync)
+        return g
+
+    return walk(grads, specs)
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization from spec trees
+# ---------------------------------------------------------------------------
+
+
+def init_param(key: jax.Array, spec: WSpec, local: bool, mesh_sizes, mp_axis):
+    shape = spec.local_shape(mesh_sizes, mp_axis) if local else spec.shape
+    if spec.init == "zeros":
+        return jnp.zeros(shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(shape, spec.dtype)
+    if spec.init == "const":
+        return jnp.full(shape, spec.init_scale, spec.dtype)
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = spec.init_scale / math.sqrt(max(fan_in, 1))
+    return (scale * jax.random.normal(key, shape)).astype(spec.dtype)
+
+
+def init_tree(key: jax.Array, specs: dict, local=False, mesh_sizes=None, mp_axis=None):
+    """Initialize a (possibly nested) dict of params from WSpecs."""
+    mesh_sizes = mesh_sizes or {}
+    leaves = []
+
+    def collect(s, path):
+        if isinstance(s, dict):
+            for k in sorted(s):
+                collect(s[k], path + (k,))
+        else:
+            leaves.append((path, s))
+
+    collect(specs, ())
+    keys = jax.random.split(key, max(len(leaves), 1))
+    out: dict = {}
+    for (path, spec), k in zip(leaves, keys):
+        node = out
+        for p in path[:-1]:
+            node = node.setdefault(p, {})
+        node[path[-1]] = init_param(k, spec, local, mesh_sizes, mp_axis)
+    return out
+
+
+def spec_tree_to_pspecs(specs: dict, mp_axis: str | None):
+    def walk(s):
+        if isinstance(s, dict):
+            return {k: walk(v) for k, v in s.items()}
+        return s.pspec(mp_axis)
+
+    return walk(specs)
+
+
+def abstract_tree(specs: dict):
+    """ShapeDtypeStructs of the *global* params (for dry-run lowering)."""
+
+    def walk(s):
+        if isinstance(s, dict):
+            return {k: walk(v) for k, v in s.items()}
+        return jax.ShapeDtypeStruct(s.shape, s.dtype)
+
+    return walk(specs)

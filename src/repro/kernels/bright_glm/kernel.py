@@ -1,0 +1,132 @@
+"""Pallas TPU kernel: fused gather + bound-corrected likelihood (FlyMC core).
+
+TPU adaptation of the paper's "loop over bright data" (DESIGN.md §3.1): the
+bright index buffer arrives as a *scalar-prefetch* operand, so each grid
+step's BlockSpec index_map DMAs exactly the HBM rows of the bright points —
+the gather never materializes in HBM. Per block of BR rows the kernel fuses:
+
+    row · θ  (MXU)  →  log L, log B (VPU scalar math)  →  δ
+    →  log(expm1 δ) masked  (the Alg.-1 line-19 factor)
+
+Outputs per-row δ (reused as the z-kernel's cache, Alg. 2) and the masked
+contribution; the O(C) reduction happens in the jit wrapper.
+
+Layout: D is padded to a multiple of 128 lanes; BR rows (8-multiple
+sublanes) per grid step. VMEM footprint per step: BR·Dp·4 + Dp·4 bytes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _logistic_delta(s, xi):
+    """δ = log L - log B for the Jaakkola–Jordan bound, s = t·θᵀx."""
+    safe = jnp.where(jnp.abs(xi) < 1e-4, 1.0, xi)
+    a = -jnp.tanh(safe / 2.0) / (4.0 * safe)
+    a = jnp.where(jnp.abs(xi) < 1e-4, -0.125 + xi * xi / 96.0, a)
+    c = -a * xi * xi + xi / 2.0 - jax.nn.softplus(xi)
+    log_l = -jax.nn.softplus(-s)
+    log_b = a * s * s + 0.5 * s + c
+    return log_l - log_b
+
+
+def _student_t_delta(r, xi, nu, sigma):
+    """δ for the tangent-in-r² Gaussian bound on the Student-t density."""
+    z2 = (r / sigma) ** 2
+    u0 = (xi / sigma) ** 2
+    fprime = -((nu + 1.0) / 2.0) / (nu + u0)
+    # log L - log B = f(z²) - [f(u₀) + f'(u₀)(z² - u₀)] with f's constants
+    # cancelling:
+    f_z = -((nu + 1.0) / 2.0) * jnp.log1p(z2 / nu)
+    f_u0 = -((nu + 1.0) / 2.0) * jnp.log1p(u0 / nu)
+    return f_z - (f_u0 + fprime * (z2 - u0))
+
+
+def _log_expm1(d):
+    d = jnp.maximum(d, 1e-10)
+    small = d < 15.0
+    d_small = jnp.where(small, d, 1.0)
+    d_big = jnp.where(small, 20.0, d)
+    return jnp.where(
+        small,
+        jnp.log(jnp.expm1(d_small)),
+        d_big + jnp.log1p(-jnp.exp(-d_big)),
+    )
+
+
+def bright_glm_pallas(
+    x: jax.Array,  # (N, Dp) — D padded to 128-lane multiple
+    t: jax.Array,  # (N, 1)
+    xi: jax.Array,  # (N, 1)
+    idx: jax.Array,  # (C,) int32 bright row ids (padded; C % BR == 0)
+    n_bright: jax.Array,  # () int32
+    theta: jax.Array,  # (1, Dp)
+    family: str = "logistic",
+    nu: float = 4.0,
+    sigma: float = 1.0,
+    block_rows: int = 8,
+    interpret: bool = True,
+):
+    c = idx.shape[0]
+    dp = x.shape[1]
+    assert c % block_rows == 0, (c, block_rows)
+
+    # One DMA per bright row: block (1, Dp) whose source row comes from the
+    # scalar-prefetched index buffer. Pallas BlockSpec cannot express
+    # per-sublane gathers within one block, so the row dimension is part of
+    # the grid: grid = (C/BR, BR) with (1, Dp) blocks per step.
+    def gather_im(i, r, idx_ref, nb_ref):
+        return (idx_ref[i * block_rows + r], 0)
+
+    grid = (c // block_rows, block_rows)
+
+    def out_im(i, r, idx_ref, nb_ref):
+        return (i * block_rows + r, 0)
+
+    def kernel(idx_ref, nb_ref, x_ref, t_ref, xi_ref, theta_ref,
+               delta_ref, contrib_ref):
+        i, r = pl.program_id(0), pl.program_id(1)
+        row = x_ref[...]  # (1, Dp)
+        theta_v = theta_ref[...]
+        s = jnp.sum(row * theta_v)
+        t_v = t_ref[0, 0]
+        xi_v = xi_ref[0, 0]
+        if family == "logistic":
+            delta = _logistic_delta(t_v * s, xi_v)
+        else:
+            delta = _student_t_delta(t_v - s, xi_v, nu, sigma)
+        row_id = i * block_rows + r
+        mask = row_id < nb_ref[0]
+        delta_ref[0, 0] = delta
+        contrib_ref[0, 0] = jnp.where(mask, _log_expm1(delta), 0.0)
+
+    out_shape = (
+        jax.ShapeDtypeStruct((c, 1), jnp.float32),
+        jax.ShapeDtypeStruct((c, 1), jnp.float32),
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # idx, n_bright
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, dp), gather_im),  # x rows (gathered)
+            pl.BlockSpec((1, 1), gather_im),  # t
+            pl.BlockSpec((1, 1), gather_im),  # xi
+            pl.BlockSpec((1, dp), lambda i, r, *_: (0, 0)),  # theta
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), out_im),
+            pl.BlockSpec((1, 1), out_im),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(idx, jnp.reshape(n_bright, (1,)), x, t, xi, theta)

@@ -1,0 +1,55 @@
+"""jit'd wrapper for the bright-GLM kernel: padding, layout, reduction."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bright_glm.kernel import bright_glm_pallas
+
+
+def _pad_lanes(d: int, mult: int = 128) -> int:
+    return ((d + mult - 1) // mult) * mult
+
+
+@partial(
+    jax.jit,
+    static_argnames=("family", "nu", "sigma", "block_rows", "interpret"),
+)
+def bright_glm(
+    x: jax.Array,  # (N, D)
+    t: jax.Array,  # (N,)
+    xi: jax.Array,  # (N,)
+    idx: jax.Array,  # (C,)
+    n_bright: jax.Array,  # ()
+    theta: jax.Array,  # (D,)
+    family: str = "logistic",
+    nu: float = 4.0,
+    sigma: float = 1.0,
+    block_rows: int = 8,
+    interpret: bool = True,
+):
+    """Fused bright-point evaluation. Returns (delta (C,), total scalar)."""
+    n, d = x.shape
+    dp = _pad_lanes(d)
+    c = idx.shape[0]
+    cp = ((c + block_rows - 1) // block_rows) * block_rows
+    xp = jnp.pad(x.astype(jnp.float32), ((0, 0), (0, dp - d)))
+    thetap = jnp.pad(theta.astype(jnp.float32), (0, dp - d))[None, :]
+    idxp = jnp.pad(idx.astype(jnp.int32), (0, cp - c))
+    delta, contrib = bright_glm_pallas(
+        xp,
+        t.astype(jnp.float32)[:, None],
+        xi.astype(jnp.float32)[:, None],
+        idxp,
+        n_bright.astype(jnp.int32),
+        thetap,
+        family=family,
+        nu=nu,
+        sigma=sigma,
+        block_rows=block_rows,
+        interpret=interpret,
+    )
+    return delta[:c, 0], jnp.sum(contrib[:c, 0])

@@ -1,0 +1,121 @@
+"""Pallas TPU kernel: flash-decode attention over a sharded ring KV cache.
+
+One new token attends a ring cache shard (B, W_loc, Hk, D). Grid:
+(B, Hk, W_loc/BK) with the KV-block dimension innermost, so the online
+softmax accumulators (m, l, acc) live in VMEM scratch across the sequential
+KV sweep — the classic flash-decode schedule mapped to the TPU grid.
+
+Block layout: q group block (G, D) padded to ≥8 sublanes; KV blocks
+(BK, D) with D a 128-lane multiple. Position masking (ring validity,
+causality, optional sliding window) uses a prefetched position buffer.
+Outputs include the local (m, l) statistics so the caller can merge
+partial softmaxes across context-parallel shards with two psums
+(DESIGN.md §5 / serving._decode_attend).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def decode_attention_pallas(
+    q: jax.Array,  # (B, Hk, G, D)
+    k: jax.Array,  # (B, W, Hk, D)
+    v: jax.Array,  # (B, W, Hk, D)
+    pos: jax.Array,  # (W,) int32
+    t: jax.Array,  # () int32
+    window: int | None = None,
+    block_k: int = 128,
+    interpret: bool = True,
+):
+    b, hk, g, d = q.shape
+    w = k.shape[1]
+    assert w % block_k == 0, (w, block_k)
+    grid = (b, hk, w // block_k)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,  # t
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda bi, hi, ci, t_ref: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, block_k, 1, d), lambda bi, hi, ci, t_ref: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, block_k, 1, d), lambda bi, hi, ci, t_ref: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, block_k), lambda bi, hi, ci, t_ref: (0, ci)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda bi, hi, ci, t_ref: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, g, 1), lambda bi, hi, ci, t_ref: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, g, 1), lambda bi, hi, ci, t_ref: (bi, hi, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+    )
+
+    def kernel(t_ref, q_ref, k_ref, v_ref, pos_ref, o_ref, m_ref, l_ref,
+               m_scr, l_scr, acc_scr):
+        ci = pl.program_id(2)
+        nck = pl.num_programs(2)
+
+        @pl.when(ci == 0)
+        def _init():
+            m_scr[...] = jnp.full_like(m_scr, NEG)
+            l_scr[...] = jnp.zeros_like(l_scr)
+            acc_scr[...] = jnp.zeros_like(acc_scr)
+
+        qv = q_ref[0, 0].astype(jnp.float32) / math.sqrt(d)  # (G, D)
+        kv = k_ref[0, :, 0].astype(jnp.float32)  # (BK, D)
+        vv = v_ref[0, :, 0].astype(jnp.float32)
+        posv = pos_ref[0]  # (BK,)
+        tv = t_ref[0]
+
+        s = jax.lax.dot_general(
+            qv, kv, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        valid = (posv >= 0) & (posv <= tv)
+        if window is not None:
+            valid &= posv > tv - window
+        s = jnp.where(valid[None, :], s, NEG)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, vv, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_scr[...] = m_new
+
+        @pl.when(ci == nck - 1)
+        def _finalize():
+            l = l_scr[...]
+            o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l, 1e-30)).astype(
+                o_ref.dtype
+            )
+            m_ref[0, 0] = m_scr[...]
+            l_ref[0, 0] = l
+
+    out_shape = [
+        jax.ShapeDtypeStruct((b, hk, g, d), jnp.float32),
+        jax.ShapeDtypeStruct((b, hk, g, 1), jnp.float32),
+        jax.ShapeDtypeStruct((b, hk, g, 1), jnp.float32),
+    ]
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(jnp.reshape(t, (1,)), q, k, v, pos[None, :])

@@ -1,0 +1,40 @@
+"""jit'd wrapper: layout (GQA grouping, padding) for flash-decode."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import decode_attention_pallas
+
+
+@partial(jax.jit, static_argnames=("window", "block_k", "interpret"))
+def decode_attention(
+    q: jax.Array,  # (B, H, D)
+    k: jax.Array,  # (B, W, Hk, D)
+    v: jax.Array,  # (B, W, Hk, D)
+    pos: jax.Array,  # (W,)
+    t: jax.Array,  # ()
+    window: int | None = None,
+    block_k: int = 128,
+    interpret: bool = True,
+):
+    """Returns (out (B, H, D), m (B, Hk, G), l (B, Hk, G)) — local softmax
+    stats exposed for cross-shard (context-parallel) merging."""
+    b, h, d = q.shape
+    w, hk = k.shape[1], k.shape[2]
+    g = h // hk
+    bk = min(block_k, w)
+    pad_w = (bk - w % bk) % bk
+    if pad_w:
+        k = jnp.pad(k, ((0, 0), (0, pad_w), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_w), (0, 0), (0, 0)))
+        pos = jnp.pad(pos, (0, pad_w), constant_values=-1)
+    qg = q.reshape(b, hk, g, d)
+    out, m, l = decode_attention_pallas(
+        qg, k, v, pos.astype(jnp.int32), t.astype(jnp.int32),
+        window=window, block_k=bk, interpret=interpret,
+    )
+    return out.reshape(b, h, d), m[..., 0], l[..., 0]

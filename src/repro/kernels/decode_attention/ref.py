@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for flash-decode over a (possibly partial) ring cache."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, pos, t, window=None):
+    """q: (B, H, D); k/v: (B, W, Hk, D); pos: (W,) absolute (-1 = empty).
+
+    Returns (out (B, H, D), m (B, Hk, G), l (B, Hk, G)) — the local
+    softmax statistics for cross-shard merging.
+    """
+    b, h, d = q.shape
+    hk = k.shape[2]
+    g = h // hk
+    qf = q.astype(jnp.float32).reshape(b, hk, g, d) / jnp.sqrt(d)
+    s = jnp.einsum("bhgd,bchd->bhgc", qf, k.astype(jnp.float32))
+    valid = (pos >= 0) & (pos <= t)
+    if window is not None:
+        valid &= pos > t - window
+    s = jnp.where(valid[None, None, None], s, -1e30)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bhgc,bchd->bhgd", p, v.astype(jnp.float32))
+    out = o / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, h, d), m, l

@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: fused streaming softmax cross-entropy.
+
+The train-step hot spot at 152k vocab: materializing (T, V) logits costs
+T·V·4 bytes of HBM; this kernel never leaves VMEM. Grid (T/BT, V/BV) with
+the vocab dimension innermost; per step one (BT, D)×(D, BV) MXU matmul and
+an online logsumexp update (m, se scratch), plus target-logit extraction
+against the prefetched labels. Output per token: (lse, target logit).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def fused_ce_pallas(
+    x: jax.Array,  # (T, D)
+    w: jax.Array,  # (D, V)
+    labels: jax.Array,  # (T,) int32
+    block_t: int = 8,
+    block_v: int = 512,
+    interpret: bool = True,
+):
+    t, d = x.shape
+    v = w.shape[1]
+    assert t % block_t == 0 and v % block_v == 0
+    grid = (t // block_t, v // block_v)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,  # labels
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t, d), lambda ti, vi, lab: (ti, 0)),
+            pl.BlockSpec((d, block_v), lambda ti, vi, lab: (0, vi)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_t, 1), lambda ti, vi, lab: (ti, 0)),
+            pl.BlockSpec((block_t, 1), lambda ti, vi, lab: (ti, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_t, 1), jnp.float32),  # running max
+            pltpu.VMEM((block_t, 1), jnp.float32),  # running sumexp
+            pltpu.VMEM((block_t, 1), jnp.float32),  # target logit
+        ],
+    )
+
+    def kernel(lab_ref, x_ref, w_ref, lse_ref, tgt_ref, m_scr, se_scr, tg_scr):
+        ti, vi = pl.program_id(0), pl.program_id(1)
+
+        @pl.when(vi == 0)
+        def _init():
+            m_scr[...] = jnp.full_like(m_scr, NEG)
+            se_scr[...] = jnp.zeros_like(se_scr)
+            tg_scr[...] = jnp.zeros_like(tg_scr)
+
+        logits = jax.lax.dot_general(
+            x_ref[...].astype(jnp.float32), w_ref[...].astype(jnp.float32),
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+        )  # (BT, BV)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(logits, -1, keepdims=True))
+        se_scr[...] = se_scr[...] * jnp.exp(m_prev - m_new) + jnp.sum(
+            jnp.exp(logits - m_new), -1, keepdims=True
+        )
+        m_scr[...] = m_new
+
+        rows = ti * block_t + jax.lax.broadcasted_iota(
+            jnp.int32, (block_t, 1), 0
+        )
+        local = lab_ref[rows[:, 0]][:, None] - vi * block_v
+        cols = jax.lax.broadcasted_iota(jnp.int32, (block_t, block_v), 1)
+        hit = cols == local
+        tg_scr[...] += jnp.sum(jnp.where(hit, logits, 0.0), -1, keepdims=True)
+
+        @pl.when(vi == pl.num_programs(1) - 1)
+        def _out():
+            lse_ref[...] = m_scr[...] + jnp.log(se_scr[...])
+            tgt_ref[...] = tg_scr[...]
+
+    out_shape = [
+        jax.ShapeDtypeStruct((t, 1), jnp.float32),
+        jax.ShapeDtypeStruct((t, 1), jnp.float32),
+    ]
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec, out_shape=out_shape, interpret=interpret
+    )(labels, x, w)

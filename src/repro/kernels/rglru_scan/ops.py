@@ -1,0 +1,38 @@
+"""jit'd wrapper for the chunked RG-LRU kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rglru_scan.kernel import rglru_pallas
+
+
+@partial(jax.jit, static_argnames=("chunk", "block_c", "interpret"))
+def rglru_scan(
+    log_a: jax.Array,  # (B, S, C) ≤ 0
+    bx: jax.Array,  # (B, S, C)
+    chunk: int = 128,
+    block_c: int = 128,
+    interpret: bool = True,
+):
+    """Returns (h (B, S, C), h_final (B, C))."""
+    b, s, ch = log_a.shape
+    c = min(chunk, s)
+    assert s % c == 0
+    n = s // c
+    chp = ((ch + block_c - 1) // block_c) * block_c
+    pad = chp - ch
+
+    def prep(t):
+        t = t.astype(jnp.float32)
+        if pad:
+            t = jnp.pad(t, ((0, 0), (0, 0), (0, pad)))
+        return t.reshape(b, n, c, chp)
+
+    # padded channels have log_a = 0, b = 0 → h stays 0: harmless
+    y, hf = rglru_pallas(prep(log_a), prep(bx), block_c=block_c,
+                         interpret=interpret)
+    return y.reshape(b, s, chp)[..., :ch], hf[:, 0, :ch]

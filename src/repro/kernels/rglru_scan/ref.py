@@ -1,0 +1,22 @@
+"""Pure-jnp oracle: sequential RG-LRU recurrence h_t = a_t·h_{t-1} + b_t."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_ref(log_a, bx, h0=None):
+    """log_a, bx: (B, S, C); h0: (B, C). Returns (h (B,S,C), h_final)."""
+    b, s, c = log_a.shape
+    h = jnp.zeros((b, c), jnp.float32) if h0 is None else h0
+
+    def step(hp, inp):
+        la, bv = inp
+        hn = jnp.exp(la) * hp + bv
+        return hn, hn
+
+    la = log_a.transpose(1, 0, 2).astype(jnp.float32)
+    bv = bx.transpose(1, 0, 2).astype(jnp.float32)
+    h, ys = jax.lax.scan(step, h, (la, bv))
+    return ys.transpose(1, 0, 2), h

@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: chunked WKV6 recurrence.
+
+Grid (B, H, S/c) with the chunk dimension innermost; the (D, D) per-head
+state lives in f32 VMEM scratch across the chunk sweep. Within a chunk the
+recurrence is re-expressed as two (c, c)/(c, D) matmuls with cumulative
+decay factors (DESIGN.md §6) — MXU work instead of a length-c scalar chain:
+
+    y = tril_strict(rq·kkᵀ)·v + rq·S₀ + diag(r·u·k)·v
+    S' = diag(P_c)·S₀ + (k·P_c/P_j)ᵀ·v
+
+with rq = r·P_{i-1}, kk = k/P_j, P = exp(cumsum(log w)). Per-step log-decay
+is clamped to [-1, 0) upstream so exp(±c·|log w|) stays in f32 range.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def rwkv6_pallas(
+    r: jax.Array,  # (B, H, n, c, D) f32
+    k: jax.Array,
+    v: jax.Array,
+    logw: jax.Array,  # ≤ 0
+    u: jax.Array,  # (H, D)
+    interpret: bool = True,
+):
+    b, h, n, c, d = r.shape
+    grid = (b, h, n)
+
+    io_spec = pl.BlockSpec(
+        (1, 1, 1, c, d), lambda bi, hi, ci: (bi, hi, ci, 0, 0)
+    )
+    u_spec = pl.BlockSpec((1, d), lambda bi, hi, ci: (hi, 0))
+
+    def kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, s_out_ref, s_scr):
+        ci = pl.program_id(2)
+
+        @pl.when(ci == 0)
+        def _init():
+            s_scr[...] = jnp.zeros_like(s_scr)
+
+        rv = r_ref[0, 0, 0]  # (c, D)
+        kv = k_ref[0, 0, 0]
+        vv = v_ref[0, 0, 0]
+        lw = w_ref[0, 0, 0]
+        uv = u_ref[...][0]  # (D,)
+        state = s_scr[...]
+
+        logp = jnp.cumsum(lw, axis=0)  # (c, D) inclusive
+        logp_excl = logp - lw
+        rq = rv * jnp.exp(logp_excl)
+        kk = kv * jnp.exp(-logp)
+        a = jax.lax.dot_general(
+            rq, kk, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # (c, c)
+        ii = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0)
+        jj = jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+        a = jnp.where(jj < ii, a, 0.0)  # strictly lower triangular
+        y = jax.lax.dot_general(
+            a, vv, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        y += jax.lax.dot_general(
+            rq, state, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        diag = jnp.sum(rv * uv[None, :] * kv, axis=-1, keepdims=True)
+        y += diag * vv
+        y_ref[0, 0, 0] = y
+
+        p_end = jnp.exp(logp[-1:, :])  # (1, D)
+        k2 = kv * jnp.exp(logp[-1:, :] - logp)
+        s_scr[...] = state * p_end.T + jax.lax.dot_general(
+            k2, vv, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+        @pl.when(ci == pl.num_programs(2) - 1)
+        def _out():
+            s_out_ref[0, 0] = s_scr[...]
+
+    out_shape = [
+        jax.ShapeDtypeStruct((b, h, n, c, d), jnp.float32),
+        jax.ShapeDtypeStruct((b, h, d, d), jnp.float32),
+    ]
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[io_spec, io_spec, io_spec, io_spec, u_spec],
+        out_specs=[
+            io_spec,
+            pl.BlockSpec((1, 1, d, d), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM((d, d), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, logw, u)

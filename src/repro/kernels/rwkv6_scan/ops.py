@@ -1,0 +1,36 @@
+"""jit'd wrapper for the chunked WKV6 kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6_scan.kernel import rwkv6_pallas
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_scan(
+    r: jax.Array,  # (B, H, S, D)
+    k: jax.Array,
+    v: jax.Array,
+    logw: jax.Array,  # ≤ 0 per-step log decay
+    u: jax.Array,  # (H, D)
+    chunk: int = 64,
+    interpret: bool = True,
+):
+    """Returns (y (B, H, S, D), final state (B, H, D, D))."""
+    b, h, s, d = r.shape
+    c = min(chunk, s)
+    assert s % c == 0, (s, c)
+    n = s // c
+
+    def split(t):
+        return t.astype(jnp.float32).reshape(b, h, n, c, d)
+
+    y, state = rwkv6_pallas(
+        split(r), split(k), split(v), split(logw), u.astype(jnp.float32),
+        interpret=interpret,
+    )
+    return y.reshape(b, h, s, d), state

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle: sequential WKV6 recurrence (data-dependent decay)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_ref(r, k, v, logw, u, state0=None):
+    """r,k,v,logw: (B, H, S, D); u: (H, D). Returns (y (B,H,S,D), state)."""
+    b, h, s, d = r.shape
+    state = (
+        jnp.zeros((b, h, d, d), jnp.float32) if state0 is None else state0
+    )
+
+    def step(st, inp):
+        rt, kt, vt, wt = inp  # (B, H, D) each
+        y = jnp.einsum("bhd,bhde->bhe", rt, st) + jnp.einsum(
+            "bhd,hd,bhd,bhe->bhe", rt, u, kt, vt
+        )
+        st2 = jnp.exp(wt)[..., None] * st + jnp.einsum(
+            "bhd,bhe->bhde", kt, vt
+        )
+        return st2, y
+
+    xs = tuple(t.transpose(2, 0, 1, 3) for t in (r, k, v, logw))
+    state, ys = jax.lax.scan(step, state, xs)
+    return ys.transpose(1, 2, 0, 3), state

@@ -1,0 +1,192 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (brief: deliverable e).
+
+Lowers + compiles every (architecture × input shape) cell on the single-pod
+(16×16) and multi-pod (2×16×16) production meshes, printing
+``memory_analysis()`` / ``cost_analysis()`` and recording the parsed HLO
+terms (dot FLOPs, HBM traffic, collective wire bytes — with while-loop trip
+counts applied) to JSON for the roofline (benchmarks/roofline.py).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun \
+        [--mesh single|multi|both] [--arch <id>|all] [--shape <name>|all] \
+        [--out benchmarks/results]
+
+The first two lines of this file force 512 host devices BEFORE any jax
+import, as required — jax locks the device count at first init.
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, shape_applicable
+from repro.launch import steps
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+
+V5E = {
+    "peak_flops": 197e12,  # bf16 / chip
+    "hbm_bw": 819e9,  # bytes/s
+    "ici_bw": 50e9,  # bytes/s/link
+    "hbm_bytes": 16 * 2**30,
+}
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS: 6·N·D (train), 2·N·D (prefill), 2·N·B (decode);
+    N = active params for MoE (global, whole step)."""
+    n = cfg.n_active_params()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch
+
+
+def build_cell(cfg, mesh, shape):
+    if shape.kind == "train":
+        fn, sds, _ = steps.make_sharded_train_step(cfg, mesh, shape)
+    elif shape.kind == "prefill":
+        fn, sds, _ = steps.make_sharded_prefill(cfg, mesh, shape)
+    else:
+        fn, sds, _ = steps.make_sharded_decode(cfg, mesh, shape)
+    return fn, sds
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str, out_dir: Path,
+             verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    n_chips = mesh.devices.size
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "kind": shape.kind,
+        "mesh": mesh_name,
+        "n_chips": n_chips,
+        "status": "skipped",
+    }
+    if not shape_applicable(cfg, shape):
+        rec["reason"] = "long_500k undefined for pure full-attention arch"
+        return rec
+    t0 = time.time()
+    try:
+        fn, sds = build_cell(cfg, mesh, shape)
+        lowered = fn.lower(*sds)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        hlo = analyze_hlo(compiled.as_text())
+
+        per_dev_bytes = ma.temp_size_in_bytes + ma.argument_size_in_bytes
+        mf = model_flops(cfg, shape)
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            memory={
+                "temp_bytes": ma.temp_size_in_bytes,
+                "argument_bytes": ma.argument_size_in_bytes,
+                "output_bytes": ma.output_size_in_bytes,
+                "alias_bytes": ma.alias_size_in_bytes,
+                "per_device_bytes": per_dev_bytes,
+                "fits_16g": bool(per_dev_bytes <= V5E["hbm_bytes"]),
+            },
+            cost_analysis_flops=float(ca.get("flops", 0.0)),
+            hlo_flops_per_device=hlo["flops"],
+            hlo_traffic_bytes_per_device=hlo["traffic_bytes"],
+            hlo_traffic_bytes_bf16corr=hlo["traffic_bytes_bf16corr"],
+            collective_bytes=hlo["collective_bytes"],
+            collective_bytes_bf16corr=hlo["collective_bytes_bf16corr"],
+            collective_total=hlo["collective_total"],
+            collective_total_bf16corr=hlo["collective_total_bf16corr"],
+            hlo_warnings=hlo["warnings"],
+            model_flops_global=mf,
+            model_flops_per_device=mf / n_chips,
+            n_params=cfg.n_params(),
+            n_active_params=cfg.n_active_params(),
+            roofline={
+                "compute_s": hlo["flops"] / V5E["peak_flops"],
+                "memory_s": hlo["traffic_bytes_bf16corr"] / V5E["hbm_bw"],
+                "memory_s_raw": hlo["traffic_bytes"] / V5E["hbm_bw"],
+                "collective_s": hlo["collective_total_bf16corr"] / V5E["ici_bw"],
+                "model_vs_hlo_flops": (
+                    (mf / n_chips) / hlo["flops"] if hlo["flops"] else 0.0
+                ),
+            },
+        )
+        terms = rec["roofline"]
+        rec["roofline"]["dominant"] = max(
+            ("compute_s", "memory_s", "collective_s"), key=lambda k: terms[k]
+        )
+        if verbose:
+            print(f"  memory_analysis: {ma}")
+            print(f"  cost_analysis flops={ca.get('flops')}")
+    except Exception as e:  # noqa: BLE001 — record and continue the sweep
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+    out_dir.mkdir(parents=True, exist_ok=True)
+    fname = f"dryrun_{mesh_name}_{arch.replace('.', '_')}_{shape_name}.json"
+    (out_dir / fname).write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--out", default="benchmarks/results")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    archs = list(ARCH_IDS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    out_dir = Path(args.out)
+
+    n_ok = n_skip = n_err = 0
+    for mesh_name in meshes:
+        for arch in archs:
+            for shape_name in shapes:
+                label = f"[{mesh_name}] {arch} × {shape_name}"
+                print(f"== {label}", flush=True)
+                rec = run_cell(arch, shape_name, mesh_name, out_dir,
+                               verbose=not args.quiet)
+                if rec["status"] == "ok":
+                    n_ok += 1
+                    r = rec["roofline"]
+                    fit = "fits" if rec["memory"]["fits_16g"] else "OVER-HBM"
+                    print(
+                        f"   ok compile={rec['compile_s']}s {fit} "
+                        f"per-dev={rec['memory']['per_device_bytes']/2**30:.2f}GiB "
+                        f"compute={r['compute_s']*1e3:.1f}ms "
+                        f"mem={r['memory_s']*1e3:.1f}ms "
+                        f"coll={r['collective_s']*1e3:.1f}ms "
+                        f"dominant={r['dominant']}",
+                        flush=True,
+                    )
+                elif rec["status"] == "skipped":
+                    n_skip += 1
+                    print(f"   skipped: {rec['reason']}")
+                else:
+                    n_err += 1
+                    print(f"   ERROR: {rec['error']}")
+    print(f"\ndone: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    return 0 if n_err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

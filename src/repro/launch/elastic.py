@@ -1,0 +1,77 @@
+"""Elastic scaling + straggler mitigation (DESIGN.md §5).
+
+Elastic restarts: ``plan_mesh`` picks the largest production-shaped mesh
+that fits the devices that survive a failure; the checkpointer stores
+logical (unsharded) arrays so ``Checkpointer.restore(shardings=new)``
+resumes on the new mesh bit-exact. The controller loop is:
+
+    while True:
+        devices = discover()                 # runtime/SRE signal
+        mesh = plan_mesh(len(devices))
+        state = ckpt.restore(target, shardings=shardings_for(mesh))
+        run_until_failure(mesh, state, ckpt)
+
+Straggler mitigation:
+  * FlyMC — per-shard bright-capacity C bounds data-dependent work: no
+    shard ever evaluates more than C likelihood rows per θ-update, so skew
+    between shards is bounded by construction (core.flymc).
+  * Training — the StragglerMonitor tracks per-step durations and flags
+    hosts whose EWMA exceeds the fleet median by a threshold; the launcher
+    responds by checkpoint + elastic restart without the flagged host
+    (backup-worker semantics). On a single-controller simulation the
+    monitor consumes recorded step times.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+
+def plan_mesh(n_devices: int, model_parallel: int = 16):
+    """Largest (pod, data, model) mesh with full model-parallel groups.
+
+    Keeps `model` fixed (TP degree is a property of the checkpointed layout)
+    and absorbs device loss into the data axes — the elastic dimension.
+    """
+    groups = n_devices // model_parallel
+    if groups < 1:
+        raise ValueError(
+            f"{n_devices} devices cannot host model_parallel={model_parallel}"
+        )
+    if groups >= 32 and groups % 16 == 0:
+        shape = (groups // 16, 16, model_parallel)
+        axes = ("pod", "data", "model")
+    else:
+        shape = (groups, model_parallel)
+        axes = ("data", "model")
+    axis_types = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, axis_types=axis_types,
+                         devices=jax.devices()[: groups * model_parallel])
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    """EWMA step-time tracker; flags hosts slower than median × threshold."""
+
+    alpha: float = 0.2
+    threshold: float = 1.5
+    ewma: dict = dataclasses.field(default_factory=dict)
+
+    def record(self, host: str, step_seconds: float):
+        prev = self.ewma.get(host)
+        self.ewma[host] = (
+            step_seconds
+            if prev is None
+            else (1 - self.alpha) * prev + self.alpha * step_seconds
+        )
+
+    def stragglers(self) -> list[str]:
+        if len(self.ewma) < 2:
+            return []
+        times = sorted(self.ewma.values())
+        median = times[len(times) // 2]
+        return [
+            h for h, t in self.ewma.items() if t > self.threshold * median
+        ]

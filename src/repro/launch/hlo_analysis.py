@@ -1,0 +1,372 @@
+"""Post-compile HLO analysis with while-loop trip-count accounting.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies **once**, which
+silently undercounts anything inside a ``lax.scan`` (layers, seq chunks) by
+the trip count. This module parses the optimized HLO text instead and walks
+the call graph:
+
+  * dot FLOPs       — 2 · |out| · contraction, per ``dot`` op (incl. inside
+    fusion computations);
+  * HBM traffic     — Σ (operand + output bytes) over *materializing* ops
+    (fusions, dots, collectives, copies…), treating fusion bodies as on-chip;
+  * collective wire bytes per device — all-gather (out−in), all-reduce
+    (2·in, ring), reduce-scatter (in), all-to-all (in), collective-permute
+    (in) — split into ICI (intra-pod axes) vs DCN ("pod" axis) when the
+    replica groups make that inferable (heuristic: group count).
+
+Each while op multiplies its body's totals by the trip count parsed from the
+loop condition (canonical ``lt(counter, constant)`` emitted by lax.scan);
+unparseable conditions fall back to trip=1 with a warning flag.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s*(\w[\w\-]*)\(")
+_CALLED_RE = re.compile(
+    r"(?:to_apply|body|condition|calls)=%?([\w.\-]+)"
+)
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+_COLLECTIVES = {
+    "all-gather", "all-gather-start", "all-reduce", "all-reduce-start",
+    "reduce-scatter", "all-to-all", "collective-permute",
+    "collective-permute-start",
+}
+
+_MATERIALIZING = _COLLECTIVES | {
+    "fusion", "dot", "convolution", "copy", "transpose", "reshape",
+    "broadcast", "concatenate", "slice", "dynamic-slice",
+    "dynamic-update-slice", "gather", "scatter", "reduce", "sort", "pad",
+    "select", "iota", "convert", "add", "multiply", "rng-bit-generator",
+    "custom-call",
+}
+
+
+def _shapes_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        nbytes = _DTYPE_BYTES.get(dt)
+        if nbytes is None:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * nbytes
+    return total
+
+
+def _first_shape(type_str: str):
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None, []
+    dt, dims = m.groups()
+    shape = [int(d) for d in dims.split(",") if d] if dims else []
+    return dt, shape
+
+
+@dataclasses.dataclass
+class OpInfo:
+    kind: str
+    out_bytes: int
+    operand_bytes: int
+    line: str
+
+
+@dataclasses.dataclass
+class CompStats:
+    flops: float = 0.0
+    traffic: float = 0.0
+    # bf16-corrected traffic: CPU XLA promotes the bf16 compute stream to
+    # f32; big f32 tensors are halved for the TPU-expected number (genuinely-
+    # f32 optimizer traffic is small against the activation/weight stream).
+    traffic_corr: float = 0.0
+    coll_bytes: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float)
+    )
+    # bf16-corrected collective bytes: CPU XLA promotes bf16 collectives to
+    # f32 (hoisted converts); every model-path collective is bf16 by
+    # construction (params cast before gather, grads RS in bf16), so f32
+    # collectives above 4 KiB are halved. Genuine f32 collectives (scalar
+    # loss/metric psums, CE partials) are below the cutoff or negligible.
+    coll_bytes_corr: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float)
+    )
+    calls: list = dataclasses.field(default_factory=list)  # (kind, name, extra)
+
+
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _operands(line: str, op_end: int) -> list[str]:
+    """Operand op-names inside the call parens (types are not inlined)."""
+    inner = line[op_end:].split(")", 1)[0]
+    return _OPERAND_RE.findall(inner)
+
+
+def _parse_dot_flops(line: str, out_shape, symtab) -> float:
+    out_elems = math.prod(out_shape) if out_shape else 1
+    cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+    ops = _operands(line, line.index("dot(") + 4)
+    lhs_type = symtab.get(ops[0], "") if ops else ""
+    _, lhs_dims = _first_shape(lhs_type)
+    if not cdims or not lhs_dims:
+        return 2.0 * out_elems  # degenerate / unresolvable
+    contraction = 1
+    for ci in cdims.group(1).split(","):
+        if ci and int(ci) < len(lhs_dims):
+            contraction *= lhs_dims[int(ci)]
+    return 2.0 * out_elems * contraction
+
+
+def _aliased_traffic(line, op_end, type_str, out_bytes, operand_bytes,
+                     symtab, kind) -> int:
+    """operand+output bytes with in-place aliasing: when an operand's type
+    equals the output type (dynamic-update-slice accumulators, elementwise
+    add-into), XLA reuses the buffer — count that operand once, not twice."""
+    ops = _operands(line, op_end)
+    for o in ops:
+        if symtab.get(o, "") == type_str:
+            return out_bytes + operand_bytes - _shapes_bytes(symtab[o])
+    return out_bytes + operand_bytes
+
+
+def _bf16_corr_bytes(line, op_end, type_str, symtab, kind) -> float:
+    """Aliased traffic with big f32 tensors halved (CPU promotes bf16→f32;
+    on TPU the activation/weight stream stays bf16)."""
+
+    def adj(ts: str) -> float:
+        total = 0.0
+        for dt, dims in _SHAPE_RE.findall(ts):
+            nbytes = _DTYPE_BYTES.get(dt, 0)
+            n = 1
+            if dims:
+                for d in dims.split(","):
+                    if d:
+                        n *= int(d)
+            b = n * nbytes
+            if dt == "f32" and b > 4096:
+                b /= 2.0
+            total += b
+        return total
+
+    ops = _operands(line, op_end)
+    out = adj(type_str)
+    aliased = False
+    opsum = 0.0
+    for o in ops:
+        ts = symtab.get(o, "")
+        if not aliased and ts == type_str:
+            aliased = True  # in-place: count once
+            continue
+        opsum += adj(ts)
+    return out + opsum
+
+
+def _collective_wire_bytes(kind: str, out_bytes: int, operand_bytes: int):
+    kind = kind.replace("-start", "")
+    if kind == "all-gather":
+        return max(out_bytes - operand_bytes, 0)
+    if kind == "all-reduce":
+        return 2 * operand_bytes
+    if kind == "reduce-scatter":
+        return max(operand_bytes - out_bytes, 0)
+    return operand_bytes  # all-to-all, collective-permute
+
+
+def _split_computations(text: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^)]*\))?.*\{$", stripped)
+        if m and ("->" in stripped or stripped.startswith("ENTRY")):
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if stripped == "}" or stripped.startswith("}"):
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+    return comps
+
+
+_TRIP_RE = re.compile(r'known_trip_count"?\s*:\s*\{"?n"?:"?(\d+)')
+
+
+def _trip_from_backend_config(line: str) -> int | None:
+    """XLA annotates scheduled while ops with known_trip_count — exact."""
+    m = _TRIP_RE.search(line)
+    return int(m.group(1)) if m else None
+
+
+def _trip_count(cond_lines: list[str]) -> int | None:
+    """Parse canonical lax.scan condition: compare(counter, constant), LT."""
+    consts = {}
+    for line in cond_lines:
+        m = re.match(r"\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=.*constant\((\d+)\)", line)
+        if m:
+            consts[m.group(1)] = int(m.group(2))
+    for line in cond_lines:
+        if "compare(" in line and "direction=LT" in line:
+            args = line.split("compare(", 1)[1].split(")", 1)[0]
+            names = re.findall(r"%?([\w.\-]+)(?:,|$)", args)
+            for n in names:
+                n = n.strip().split(" ")[-1].lstrip("%")
+                if n in consts:
+                    return consts[n]
+    return None
+
+
+def analyze_hlo(text: str, pod_axis_size: int = 1):
+    """Returns dict with flops, traffic bytes, collective bytes (per device),
+    per-collective-kind breakdown, and parse diagnostics."""
+    comps = _split_computations(text)
+    stats: dict[str, CompStats] = {}
+    warnings: list[str] = []
+
+    for name, lines in comps.items():
+        st = CompStats()
+        # first pass: symbol table op-name → output type string
+        symtab: dict[str, str] = {}
+        for line in lines:
+            m = _OP_RE.match(line)
+            if m:
+                symtab[m.group(1)] = m.group(2)
+        for line in lines:
+            m = _OP_RE.match(line)
+            if not m:
+                continue
+            _, type_str, kind = m.groups()
+            out_bytes = _shapes_bytes(type_str)
+            operand_bytes = sum(
+                _shapes_bytes(symtab.get(o, "")) for o in _operands(line, m.end())
+            )
+            if kind == "dot":
+                _, out_shape = _first_shape(type_str)
+                st.flops += _parse_dot_flops(line, out_shape, symtab)
+            if kind in _COLLECTIVES:
+                wire = _collective_wire_bytes(kind, out_bytes, operand_bytes)
+                k = kind.replace("-start", "")
+                st.coll_bytes[k] += wire
+                dt, _ = _first_shape(type_str)
+                corr = wire
+                if dt == "f32" and wire > 4096:
+                    corr = wire / 2.0  # promoted-from-bf16 (module doc)
+                st.coll_bytes_corr[k] += corr
+            if kind in _MATERIALIZING and kind != "fusion":
+                tb = _aliased_traffic(line, m.end(), type_str, out_bytes,
+                                      operand_bytes, symtab, kind)
+                st.traffic += tb
+                st.traffic_corr += _bf16_corr_bytes(
+                    line, m.end(), type_str, symtab, kind
+                )
+            called = _CALLED_RE.findall(line)
+            branches = _BRANCHES_RE.search(line)
+            if kind == "while":
+                mb = re.search(r"body=%?([\w.\-]+)", line)
+                mc = re.search(r"condition=%?([\w.\-]+)", line)
+                body = mb.group(1) if mb else None
+                cond = mc.group(1) if mc else None
+                st.calls.append(
+                    ("while", body, (cond, _trip_from_backend_config(line)))
+                )
+            elif kind == "fusion":
+                for c in called:
+                    st.calls.append(("fusion", c, None))
+                tb = _aliased_traffic(line, m.end(), type_str, out_bytes,
+                                      operand_bytes, symtab, kind)
+                st.traffic += tb
+                st.traffic_corr += _bf16_corr_bytes(
+                    line, m.end(), type_str, symtab, kind
+                )
+            elif kind == "conditional":
+                names = (
+                    [x.strip().lstrip("%") for x in branches.group(1).split(",")]
+                    if branches
+                    else called
+                )
+                for c in names:
+                    st.calls.append(("branch", c, None))
+            elif called:
+                for c in called:
+                    st.calls.append(("call", c, None))
+        stats[name] = st
+
+    memo: dict[str, tuple] = {}
+
+    def total(name: str, depth=0):
+        if name not in stats or depth > 64:
+            return 0.0, 0.0, 0.0, defaultdict(float), defaultdict(float)
+        if name in memo:
+            return memo[name]
+        st = stats[name]
+        fl, tr, trc = st.flops, st.traffic, st.traffic_corr
+        cb = defaultdict(float, st.coll_bytes)
+        cbc = defaultdict(float, st.coll_bytes_corr)
+        for kind, callee, extra in st.calls:
+            if callee is None or callee not in stats:
+                continue
+            cfl, ctr, ctrc, ccb, ccbc = total(callee, depth + 1)
+            mult = 1
+            if kind == "while":
+                cond_name, bc_trip = extra if isinstance(extra, tuple) else (extra, None)
+                trip = bc_trip
+                if trip is None:
+                    trip = _trip_count(comps.get(cond_name, []))
+                if trip is None:
+                    warnings.append(f"unparsed trip count for {callee}")
+                    trip = 1
+                mult = trip
+            if kind == "fusion":
+                # fusion body: count dots (flops) but not traffic (on-chip)
+                fl += cfl
+                for k, v in ccb.items():
+                    cb[k] += v
+                for k, v in ccbc.items():
+                    cbc[k] += v
+                continue
+            fl += mult * cfl
+            tr += mult * ctr
+            trc += mult * ctrc
+            for k, v in ccb.items():
+                cb[k] += mult * v
+            for k, v in ccbc.items():
+                cbc[k] += mult * v
+        memo[name] = (fl, tr, trc, cb, cbc)
+        return memo[name]
+
+    entry = None
+    for name in comps:
+        if name.startswith("main") or name == "entry":
+            entry = name
+    if entry is None:  # ENTRY marker line match fallback: pick largest
+        entry = max(comps, key=lambda n: len(comps[n]))
+    fl, tr, trc, cb, cbc = total(entry)
+    return {
+        "entry": entry,
+        "flops": fl,
+        "traffic_bytes": tr,
+        "traffic_bytes_bf16corr": trc,
+        "collective_bytes": dict(cb),
+        "collective_total": float(sum(cb.values())),
+        "collective_bytes_bf16corr": dict(cbc),
+        "collective_total_bf16corr": float(sum(cbc.values())),
+        "warnings": warnings[:10],
+        "n_computations": len(comps),
+    }

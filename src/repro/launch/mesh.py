@@ -1,0 +1,26 @@
+"""Production mesh construction (brief: function, not module constant).
+
+Single pod : (data=16, model=16) — 256 chips of TPU v5e.
+Multi-pod  : (pod=2, data=16, model=16) — 512 chips; the ``pod`` axis maps
+to DCN and carries only FSDP/DP traffic (gradient reduce-scatters and weight
+gathers), never per-layer TP collectives.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    axis_types = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, axis_types=axis_types)
+
+
+def mesh_axis_sizes(mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

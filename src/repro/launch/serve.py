@@ -1,0 +1,97 @@
+"""Serving driver: batched prefill + autoregressive decode.
+
+CPU-scale end-to-end path (reduced configs): prefill a batch of prompts,
+then greedy-decode continuations with the ring-cache / recurrent-state
+serving stack (models.serving). The same decode_step is what the dry run
+lowers for decode_32k / long_500k on the production meshes.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-7b \
+        --batch 4 --prompt-len 32 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.distributed.par import Par
+from repro.models import serving as SV
+from repro.models import transformer as T
+
+
+def serve_reduced(
+    arch: str,
+    batch: int = 4,
+    prompt_len: int = 32,
+    gen: int = 16,
+    seed: int = 0,
+):
+    cfg = get_reduced(arch)
+    par = Par()
+    params, specs = T.init_model(cfg, jax.random.key(seed))
+    seq_cap = prompt_len + gen
+
+    k1, k2 = jax.random.split(jax.random.key(seed + 1))
+    prompts = jax.random.randint(k1, (batch, prompt_len), 0, cfg.vocab_size)
+    b = {"tokens": prompts}
+    if cfg.family == "encdec":
+        b["frames"] = 0.1 * jax.random.normal(
+            k2, (batch, cfg.encoder_seq, cfg.d_model)
+        )
+    if cfg.family == "vlm":
+        b["patches"] = 0.1 * jax.random.normal(
+            k2, (batch, cfg.patch_positions, cfg.d_model)
+        )
+
+    t0 = time.time()
+    cache, h = SV.prefill(
+        params, specs, b, cfg, par, seq_cap, dtype=jnp.float32,
+        kv_dtype=jnp.float32,
+    )
+    head = params["embed"]["head"].astype(jnp.float32)
+    first = jnp.argmax((h[:, -1:] @ head), -1).astype(jnp.int32)
+    t_prefill = time.time() - t0
+
+    step = jax.jit(
+        lambda c, tok: SV.decode_step(
+            params, specs, c, tok, cfg, par, seq_cap, dtype=jnp.float32
+        )
+    )
+    tok = first
+    out = [np.asarray(tok)]
+    t0 = time.time()
+    for _ in range(gen - 1):
+        tok, _, cache = step(cache, tok)
+        out.append(np.asarray(tok))
+    t_decode = time.time() - t0
+    generated = np.concatenate(out, axis=1)
+    return generated, {"prefill_s": t_prefill, "decode_s": t_decode,
+                       "tok_per_s": batch * (gen - 1) / max(t_decode, 1e-9)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+    gen, stats = serve_reduced(
+        args.arch, args.batch, args.prompt_len, args.gen
+    )
+    print(f"generated shape {gen.shape}")
+    print(
+        f"prefill {stats['prefill_s']:.2f}s decode {stats['decode_s']:.2f}s "
+        f"({stats['tok_per_s']:.1f} tok/s incl. jit)"
+    )
+    print("first sequences:", gen[:2, :10].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,269 @@
+"""shard_map-wrapped train / prefill / decode steps on a production mesh.
+
+These builders return (jitted_fn, abstract_inputs) pairs: the abstract
+inputs are ShapeDtypeStructs with NamedShardings attached, so callers can
+either materialize real arrays (training) or ``.lower()`` directly
+(dry-run — no allocation, per the brief).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as PS
+
+from repro.distributed import par as parlib
+from repro.distributed.par import Par
+from repro.launch.mesh import data_axes, mesh_axis_sizes
+from repro.models import serving as SV
+from repro.models import transformer as T
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.optim.adamw import AdamWState
+
+Tree = dict[str, Any]
+
+
+def make_par(mesh) -> Par:
+    import math
+
+    sizes = mesh_axis_sizes(mesh)
+    dp = data_axes(mesh)
+    return Par(
+        dp=dp,
+        mp="model" if "model" in sizes else None,
+        dp_size=math.prod(sizes[a] for a in dp) if dp else 1,
+        mp_size=sizes.get("model", 1),
+    )
+
+
+def _named(tree_sds, tree_ps, mesh):
+    return jax.tree.map(
+        lambda s, p: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(mesh, p)
+        ),
+        tree_sds,
+        tree_ps,
+    )
+
+
+def batch_pspecs(cfg: ModelConfig, shape: ShapeConfig, par: Par, batch_sharded: bool):
+    dp = par.dp if (par.dp and batch_sharded) else None
+    specs: Tree = {"tokens": PS(dp, None)}
+    if shape.kind == "train":
+        specs["labels"] = PS(dp, None)
+    if cfg.family == "encdec":
+        specs["frames"] = PS(dp, par.mp, None)  # seq-sharded stub embeddings
+    if cfg.family == "vlm":
+        specs["patches"] = PS(dp, None, None)
+    return specs
+
+
+def batch_abstract(cfg: ModelConfig, shape: ShapeConfig, seq_len: int):
+    b = shape.global_batch
+    sds: Tree = {"tokens": jax.ShapeDtypeStruct((b, seq_len), jnp.int32)}
+    if shape.kind == "train":
+        sds["labels"] = jax.ShapeDtypeStruct((b, seq_len), jnp.int32)
+    if cfg.family == "encdec":
+        sds["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16
+        )
+    if cfg.family == "vlm":
+        sds["patches"] = jax.ShapeDtypeStruct(
+            (b, cfg.patch_positions, cfg.d_model), jnp.bfloat16
+        )
+    return sds
+
+
+# ---------------------------------------------------------------------------
+# Train
+# ---------------------------------------------------------------------------
+
+
+def make_sharded_train_step(cfg: ModelConfig, mesh, shape: ShapeConfig,
+                            dtype=jnp.bfloat16, remat: bool = True):
+    par = make_par(mesh)
+    sizes = mesh_axis_sizes(mesh)
+    step, specs = T.make_train_step(cfg, sizes, par, dtype=dtype, remat=remat)
+    params_ps = parlib.spec_tree_to_pspecs(specs, par.mp)
+    opt_ps = AdamWState(step=PS(), m=params_ps, v=params_ps)
+    batch_sharded = shape.global_batch % max(par.dp_size, 1) == 0
+    b_ps = batch_pspecs(cfg, shape, par, batch_sharded)
+    metrics_ps = {
+        k: PS()
+        for k in ("loss", "nll", "lb_loss", "drop_frac", "grad_norm", "lr")
+    }
+
+    sharded = jax.shard_map(
+        step,
+        mesh=mesh,
+        in_specs=(params_ps, opt_ps, b_ps),
+        out_specs=(params_ps, opt_ps, metrics_ps),
+        check_vma=False,
+    )
+
+    params_sds = _named(parlib.abstract_tree(specs), params_ps, mesh)
+    opt_dt = jnp.dtype(cfg.opt_dtype)
+    opt_sds = AdamWState(
+        step=jax.ShapeDtypeStruct((), jnp.int32, sharding=NamedSharding(mesh, PS())),
+        m=_named(
+            jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, opt_dt),
+                parlib.abstract_tree(specs),
+            ),
+            params_ps, mesh,
+        ),
+        v=_named(
+            jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, opt_dt),
+                parlib.abstract_tree(specs),
+            ),
+            params_ps, mesh,
+        ),
+    )
+    batch_sds = _named(batch_abstract(cfg, shape, shape.seq_len), b_ps, mesh)
+    # Donate params + optimizer state: outputs alias inputs (in-place
+    # update), halving the resident footprint — standard for real training.
+    return (
+        jax.jit(sharded, donate_argnums=(0, 1)),
+        (params_sds, opt_sds, batch_sds),
+        specs,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def make_sharded_prefill(cfg: ModelConfig, mesh, shape: ShapeConfig,
+                         dtype=jnp.bfloat16):
+    par = make_par(mesh)
+    sizes = mesh_axis_sizes(mesh)
+    specs = T.build_specs(cfg, sizes, par.mp)
+    params_ps = parlib.spec_tree_to_pspecs(specs, par.mp)
+    batch_sharded = shape.global_batch % max(par.dp_size, 1) == 0
+    b_ps = batch_pspecs(cfg, shape, par, batch_sharded)
+    cache_ps = SV.cache_pspecs(cfg, shape.seq_len, par, sizes)
+    if not batch_sharded:  # strip dp from cache batch dims
+        cache_ps = _strip_dp(cache_ps, par)
+    hidden_ps = PS(
+        par.dp if batch_sharded else None,
+        par.mp if cfg.parallel_mode == "sp" else None,
+        None,
+    )
+
+    def fn(params, batch):
+        return SV.prefill(params, specs, batch, cfg, par, shape.seq_len, dtype)
+
+    sharded = jax.shard_map(
+        fn, mesh=mesh, in_specs=(params_ps, b_ps),
+        out_specs=(cache_ps, hidden_ps), check_vma=False,
+    )
+    params_sds = _named(parlib.abstract_tree(specs), params_ps, mesh)
+    batch_sds = _named(batch_abstract(cfg, shape, shape.seq_len), b_ps, mesh)
+    return jax.jit(sharded), (params_sds, batch_sds), specs
+
+
+def _strip_dp(cache_ps, par: Par):
+    """Remove dp axes from cache specs (unsharded batch, e.g. long_500k B=1)."""
+    dp_names = set(par.dp)
+
+    def is_dp(e):
+        if e is None:
+            return False
+        if isinstance(e, (tuple, list)):
+            return any(x in dp_names for x in e)
+        return e in dp_names
+
+    def strip(p):
+        if not isinstance(p, PS):
+            return p
+        return PS(*[None if is_dp(e) else e for e in p])
+
+    return jax.tree.map(strip, cache_ps, is_leaf=lambda x: isinstance(x, PS))
+
+
+def make_sharded_decode(cfg: ModelConfig, mesh, shape: ShapeConfig,
+                        dtype=jnp.bfloat16, layout: str = "fsdp"):
+    """layout='fsdp' — training parameter layout (ZeRO-3 gathers/step);
+    layout='tp'   — serving-resident layout (§Perf iteration C): weights
+    bf16, TP over `model` (head-parallel attention, col/row MLP, vocab-
+    parallel head), replicated over the data axes — zero FSDP gathers.
+    Requires n_heads % model_parallel == 0 and a windowed/ring cache small
+    enough to replicate over `model` (SWA / local-attn / recurrent archs).
+    """
+    par = make_par(mesh)
+    sizes = mesh_axis_sizes(mesh)
+    serve_tp = layout == "tp"
+    if serve_tp:
+        assert cfg.n_heads % max(par.mp_size, 1) == 0, (
+            cfg.name, "tp layout needs head divisibility")
+    specs = T.build_specs(
+        cfg, sizes, par.mp,
+        exclude_fsdp=par.dp if serve_tp else (),
+        serve_tp=serve_tp,
+    )
+    params_ps = parlib.spec_tree_to_pspecs(specs, par.mp)
+    batch_sharded = shape.global_batch % max(par.dp_size, 1) == 0
+    cache_ps = SV.cache_pspecs(cfg, shape.seq_len, par, sizes,
+                               serve_tp=serve_tp)
+    if not batch_sharded:
+        cache_ps = _strip_dp(cache_ps, par)
+    dp = par.dp if batch_sharded else None
+    tok_ps = PS(dp, None)
+    out_ps = (tok_ps, PS(dp, None, par.mp), cache_ps)
+
+    def fn(params, cache, token):
+        return SV.decode_step(
+            params, specs, cache, token, cfg, par, shape.seq_len, dtype,
+            serve_tp=serve_tp,
+        )
+
+    sharded = jax.shard_map(
+        fn, mesh=mesh, in_specs=(params_ps, cache_ps, tok_ps),
+        out_specs=out_ps, check_vma=False,
+    )
+
+    abstract = parlib.abstract_tree(specs)
+    if serve_tp:  # serving weights live in bf16 (no optimizer states)
+        abstract = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16), abstract
+        )
+    params_sds = _named(abstract, params_ps, mesh)
+    # Global cache shapes = local shard shapes × the mesh axes each dim is
+    # sharded over (handles the kv-head duplication of the TP serve ring).
+    b_local = (
+        shape.global_batch // max(par.dp_size, 1)
+        if batch_sharded else shape.global_batch
+    )
+    cache_local = jax.eval_shape(
+        lambda: SV.init_cache(
+            cfg, b_local, shape.seq_len, par, serve_tp=serve_tp
+        )
+    )
+    sizes_map = mesh_axis_sizes(mesh)
+
+    def globalize(sd, ps):
+        dims = list(sd.shape)
+        for i, entry in enumerate(ps):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            for a in axes:
+                dims[i] *= sizes_map.get(a, 1)
+        return jax.ShapeDtypeStruct(tuple(dims), sd.dtype)
+
+    cache_global = jax.tree.map(
+        globalize, cache_local, cache_ps,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+    cache_sds = _named(cache_global, cache_ps, mesh)
+    tok_sds = jax.ShapeDtypeStruct(
+        (shape.global_batch, 1), jnp.int32,
+        sharding=NamedSharding(mesh, tok_ps),
+    )
+    return jax.jit(sharded), (params_sds, cache_sds, tok_sds), specs

@@ -1,0 +1,1 @@
+"""Model zoo: the paper's GLMs + the assigned LM architectures."""

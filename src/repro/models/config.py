@@ -1,0 +1,184 @@
+"""Architecture configuration for the assigned LM families.
+
+One frozen dataclass describes every supported architecture: dense decoder
+LMs (GQA/SWA), MoE (top-k, optional dense residual), RG-LRU hybrids, RWKV6,
+encoder-decoder (whisper) and VLM (llava — stub patch frontend).
+
+Parallelism modes (DESIGN.md §5):
+  * ``sp``  — sequence-parallel residual stream over the ``model`` axis.
+    Attention is head-count agnostic (each shard runs all heads on its local
+    seq rows against all-gathered K/V); MLP is Megatron-SP (AG → col/row
+    parallel → RS). Used by all attention-dominant archs.
+  * ``tp``  — replicated-seq residual stream; mixer states (RWKV/RG-LRU
+    heads or features) and MLP hidden are sharded over ``model`` with one
+    psum per sublayer. Used by recurrence archs where seq must stay local.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    dense_residual: bool = False  # arctic: dense FFN path in parallel
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: Literal["dense", "moe", "ssm", "hybrid", "encdec", "vlm"]
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 → d_model // n_heads
+    qkv_bias: bool = False
+    mlp: Literal["swiglu", "gelu"] = "swiglu"
+    norm: Literal["rmsnorm", "layernorm"] = "rmsnorm"
+    rope_theta: float = 10_000.0
+    swa_window: int | None = None  # sliding-window attention (mixtral)
+    moe: MoEConfig | None = None
+    # hybrid (recurrentgemma): repeating block pattern, e.g. ("rglru",
+    # "rglru", "attn"); dense/moe archs use ("attn",) implicitly.
+    block_pattern: tuple[str, ...] = ("attn",)
+    local_attn_window: int | None = None  # rgemma local attention
+    rnn_width: int = 0  # RG-LRU recurrence width (0 → d_model)
+    # encoder-decoder (whisper)
+    encoder_layers: int = 0
+    encoder_seq: int = 0  # stubbed frontend sequence length (audio frames)
+    # vlm (llava): number of patch-embedding positions (stub frontend)
+    patch_positions: int = 0
+    parallel_mode: Literal["sp", "tp"] = "sp"
+    # True when the architecture has a sub-quadratic decode path and should
+    # run the long_500k shape (DESIGN.md §4).
+    subquadratic: bool = False
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+    # Optimizer-state dtype: bf16 halves AdamW memory — required to fit
+    # arctic-480b on 16 GB/chip at these mesh sizes (DESIGN.md §5).
+    opt_dtype: str = "float32"
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.resolved_head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.resolved_head_dim
+
+    @property
+    def rnn_dim(self) -> int:
+        return self.rnn_width or self.d_model
+
+    def padded_vocab(self, multiple: int = 256) -> int:
+        """Vocab padded for TP divisibility (Megatron-style)."""
+        v = self.vocab_size
+        return ((v + multiple - 1) // multiple) * multiple
+
+    def n_params(self) -> int:
+        """Approximate parameter count (embeddings included once)."""
+        d, ff, hd = self.d_model, self.d_ff, self.resolved_head_dim
+        attn = d * (self.q_dim + 2 * self.kv_dim) + self.q_dim * d
+        if self.mlp == "swiglu":
+            mlp = 3 * d * ff
+        else:
+            mlp = 2 * d * ff
+        per_layer = 0.0
+        for kind in _expand_pattern(self.block_pattern, self.n_layers):
+            if kind == "attn":
+                per_layer += attn + mlp
+            elif kind == "rglru":
+                r = self.rnn_dim
+                per_layer += d * r * 3 + r * d + 2 * r + mlp  # in/gates/out
+            elif kind == "rwkv":
+                per_layer += 4 * d * d + d * d + 2 * d  # r,k,v,g,o + decay
+                per_layer += mlp
+        per_layer /= len(_expand_pattern(self.block_pattern, self.n_layers))
+        total = self.n_layers * per_layer
+        if self.moe is not None:
+            moe_mlp = 3 * d * ff * self.moe.n_experts + d * self.moe.n_experts
+            total += self.n_layers * (moe_mlp - (3 * d * ff if not self.moe.dense_residual else 0))
+        total += self.padded_vocab() * d * (1 if self.tie_embeddings else 2)
+        if self.encoder_layers:
+            total += self.encoder_layers * (attn + mlp)
+            total += self.n_layers * (d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d)  # cross-attn
+        return int(total)
+
+    def n_active_params(self) -> int:
+        """Parameters touched per token (MoE: top-k experts only)."""
+        if self.moe is None:
+            return self.n_params()
+        d, ff = self.d_model, self.d_ff
+        dense_equiv = dataclasses.replace(self, moe=None)
+        base = dense_equiv.n_params()
+        # dense MLP already counted once; MoE activates top_k experts
+        extra = (self.moe.top_k - 1) * 3 * d * ff * self.n_layers
+        if self.moe.dense_residual:
+            extra += self.moe.top_k * 3 * d * ff * self.n_layers
+        return int(base + extra)
+
+
+def _expand_pattern(pattern: tuple[str, ...], n_layers: int) -> tuple[str, ...]:
+    reps = (n_layers + len(pattern) - 1) // len(pattern)
+    return (pattern * reps)[:n_layers]
+
+
+def layer_kinds(cfg: ModelConfig) -> tuple[str, ...]:
+    return _expand_pattern(cfg.block_pattern, cfg.n_layers)
+
+
+def reduced(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """A smoke-test-sized config of the same family (per the brief)."""
+    small = dict(
+        n_layers=min(cfg.n_layers, len(cfg.block_pattern) * 2),
+        d_model=128,
+        n_heads=max(2, min(cfg.n_heads, 4)),
+        n_kv_heads=max(1, min(cfg.n_kv_heads, 2)),
+        head_dim=32,
+        d_ff=256,
+        vocab_size=512,
+        rnn_width=128 if cfg.rnn_width else 0,
+        encoder_layers=min(cfg.encoder_layers, 2),
+        encoder_seq=min(cfg.encoder_seq, 32) if cfg.encoder_seq else 0,
+        patch_positions=min(cfg.patch_positions, 16) if cfg.patch_positions else 0,
+        swa_window=64 if cfg.swa_window else None,
+        local_attn_window=32 if cfg.local_attn_window else None,
+    )
+    if cfg.moe is not None:
+        small["moe"] = dataclasses.replace(
+            cfg.moe, n_experts=min(cfg.moe.n_experts, 4)
+        )
+    small.update(overrides)
+    return dataclasses.replace(cfg, **small)
+
+
+# ---------------------------------------------------------------------------
+# Input shapes assigned to every LM architecture
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: Literal["train", "prefill", "decode"]
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}

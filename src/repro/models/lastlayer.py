@@ -1,0 +1,49 @@
+"""FlyMC over an LM head: the paper's technique on the assigned backbones.
+
+Full-parameter FlyMC is inapplicable to deep nets (no collapsible bound —
+DESIGN.md §4), but the LM readout is exactly the paper's softmax experiment:
+given frozen backbone features h ∈ R^{T×d} and next-token labels, the
+per-token likelihood is softmax(θh) with θ the (V, d) head, and the Böhning
+bound collapses through S = Σ h hᵀ and R = Σ h rᵀ. This module extracts the
+(features, labels) GLM view from any architecture in the zoo and returns a
+ready-to-sample GLMModel — exact Bayesian inference over the head with
+bright-subset likelihood evaluations.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.par import Par
+from repro.models import transformer as T
+from repro.models.bayes_glm import GLMModel
+from repro.models.config import ModelConfig
+
+
+def extract_features(
+    params, specs, cfg: ModelConfig, batch: dict, dtype=jnp.float32
+):
+    """Frozen-backbone features and shifted labels as a GLM dataset."""
+    h, _ = T.forward_hidden(
+        params, specs, cfg, Par(), batch, dtype=dtype, remat=False
+    )
+    feats = h[:, :-1].reshape(-1, cfg.d_model)
+    labels = batch["tokens"][:, 1:].reshape(-1)
+    return feats, labels
+
+
+def lastlayer_glm(
+    params, specs, cfg: ModelConfig, batch: dict, prior_scale: float = 1.0
+) -> GLMModel:
+    """GLMModel whose posterior is the Bayesian LM-head posterior."""
+    from repro.core.bounds import GLMData
+
+    feats, labels = extract_features(params, specs, cfg, batch)
+    data = GLMData(x=feats, t=labels.astype(jnp.int32), xi=feats)  # xi reset
+    model = GLMModel.softmax(
+        data._replace(xi=jnp.zeros((feats.shape[0], cfg.padded_vocab()))),
+        n_classes=cfg.padded_vocab(),
+        prior_scale=prior_scale,
+    )
+    return model

@@ -1,0 +1,886 @@
+"""Model layers, written once against ``repro.distributed.par.Par``.
+
+Every function here runs identically on a single device (trivial Par — all
+collectives are identities) and inside shard_map on the production mesh
+(DESIGN.md §5). Sharding conventions:
+
+SP mode (attention archs):
+  * residual stream x: (B_loc, S_loc, d) — batch over dp, seq over model
+  * attention: all heads per shard on local seq rows; K/V all-gathered over
+    model (head-count agnostic); Megatron-SP MLP (AG seq → ff-TP → RS seq),
+    chunked over seq to bound transients
+TP mode (recurrence archs):
+  * residual stream x: (B_loc, S, d) — batch over dp, seq local
+  * mixers (RWKV6 / RG-LRU / local attention) head- or feature-sharded over
+    model with one psum per sublayer; Megatron TP MLP
+
+Weights are declared as WDef trees (resolved to WSpec per mesh) and gathered
+just-in-time (ZeRO-3); autodiff then emits the matching reduce-scatter.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import par as P
+from repro.distributed.par import Par, WDef
+from repro.models.config import ModelConfig
+
+Tree = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def norm_defs(d: int) -> Tree:
+    return {"scale": WDef((d,), fsdp_pref=(0,), init="ones")}
+
+
+def apply_norm(x, w, ws, kind: str, dtype):
+    scale = P.gather_param(w["scale"], ws["scale"], dtype)
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + 1e-6)
+    else:  # layernorm (bias-free)
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), -1, keepdims=True)
+        xf = (xf - mu) * jax.lax.rsqrt(var + 1e-6)
+    return (xf * scale.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope(x, positions, theta: float):
+    """x: (..., S, H, D) with D even; positions: (S,) absolute."""
+    d = x.shape[-1]
+    freqs = theta ** (-jnp.arange(0, d, 2, dtype=jnp.float32) / d)
+    angles = positions.astype(jnp.float32)[:, None] * freqs[None, :]
+    cos = jnp.cos(angles)[None, :, None, :]
+    sin = jnp.sin(angles)[None, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked (online-softmax) attention — pure JAX flash-style reference
+# ---------------------------------------------------------------------------
+
+
+def chunked_attention(
+    q,  # (B, Sq, H, D)
+    k,  # (B, Sk, Hk, D)
+    v,  # (B, Sk, Hk, D)
+    q_pos,  # (Sq,) absolute query positions
+    k_pos,  # (Sk,) absolute key positions
+    causal: bool = True,
+    window: int | None = None,
+    chunk: int = 1024,
+):
+    """Memory-efficient attention: lax.scan over KV chunks with online
+    max/denominator accumulators. GQA via head grouping. O(Sq·chunk) live
+    score memory instead of O(Sq·Sk)."""
+    b, sq, h, d = q.shape
+    sk, hk = k.shape[1], k.shape[2]
+    g = h // hk
+    scale = 1.0 / math.sqrt(d)
+    qg = (q.astype(jnp.float32) * scale).reshape(b, sq, hk, g, d)
+
+    chunk = min(chunk, sk)
+    n_chunks = (sk + chunk - 1) // chunk
+    pad = n_chunks * chunk - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pad), constant_values=jnp.iinfo(jnp.int32).max)
+
+    kc = k.reshape(b, n_chunks, chunk, hk, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, chunk, hk, d).transpose(1, 0, 2, 3, 4)
+    pc = k_pos.reshape(n_chunks, chunk)
+
+    neg = jnp.float32(-1e30)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kci, vci, pci = inp
+        s = jnp.einsum(
+            "bqhgd,bchd->bhgqc", qg, kci.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        mask = jnp.ones((sq, chunk), bool)
+        if causal:
+            mask &= pci[None, :] <= q_pos[:, None]
+        if window is not None:
+            mask &= pci[None, :] > q_pos[:, None] - window
+        mask &= pci[None, :] < jnp.iinfo(jnp.int32).max  # padding
+        s = jnp.where(mask[None, None, None], s, neg)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhgqc,bchd->bhgqd", p, vci.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hk, g, sq), neg)
+    l0 = jnp.zeros((b, hk, g, sq))
+    a0 = jnp.zeros((b, hk, g, sq, d))
+    # checkpoint the chunk body: the backward pass recomputes the (Sq, chunk)
+    # score/probability blocks instead of stacking them per iteration --
+    # the flash-attention recompute, worth ~GBs at 32k context.
+    (m, l, acc), _ = jax.lax.scan(
+        jax.checkpoint(body), (m0, l0, a0), (kc, vc, pc)
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, d)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention sublayer — SP mode
+# ---------------------------------------------------------------------------
+
+
+def attn_defs(cfg: ModelConfig, cross: bool = False) -> Tree:
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    defs: Tree = {
+        "wq": WDef((d, qd), fsdp_pref=(0, 1)),
+        "wk": WDef((d, kvd), fsdp_pref=(0, 1)),
+        "wv": WDef((d, kvd), fsdp_pref=(0, 1)),
+        "wo": WDef((qd, d), fsdp_pref=(0, 1)),
+    }
+    if cfg.qkv_bias and not cross:
+        defs["bq"] = WDef((qd,), init="zeros")
+        defs["bk"] = WDef((kvd,), init="zeros")
+        defs["bv"] = WDef((kvd,), init="zeros")
+    return defs
+
+
+def attn_sp(
+    x,  # (B, S_loc, d) seq-sharded over model
+    w: Tree,
+    ws: Tree,
+    cfg: ModelConfig,
+    par: Par,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    kv_source=None,  # cross-attention: (B, S_enc_loc, d) seq-sharded
+    use_rope: bool = True,
+    return_kv: bool = False,  # also return gathered (k, v) for cache capture
+):
+    dtype = x.dtype
+    b, s_loc, _ = x.shape
+    hd = cfg.resolved_head_dim
+
+    def proj(name, src):
+        wt = P.gather_param(w[name], ws[name], dtype)
+        y = src @ wt
+        bias = "b" + name[1]
+        if bias in w:
+            y = y + P.gather_param(w[bias], ws[bias], dtype)
+        return y
+
+    kv_in = x if kv_source is None else kv_source
+    s_kv_loc = kv_in.shape[1]
+
+    q = proj("wq", x).reshape(b, s_loc, cfg.n_heads, hd)
+    k = proj("wk", kv_in).reshape(b, s_kv_loc, cfg.n_kv_heads, hd)
+    v = proj("wv", kv_in).reshape(b, s_kv_loc, cfg.n_kv_heads, hd)
+
+    shard = P.axis_index(par.mp)
+    q_pos = shard * s_loc + jnp.arange(s_loc, dtype=jnp.int32)
+    kv_pos_local = shard * s_kv_loc + jnp.arange(s_kv_loc, dtype=jnp.int32)
+    if use_rope:
+        q = rope(q, q_pos, cfg.rope_theta)
+        k = rope(k, kv_pos_local, cfg.rope_theta)
+
+    # Sequence-parallel attention: gather K/V (small for GQA) over model.
+    axes = (par.mp,) if par.mp else ()
+    k_full = P.all_gather(k, axes, axis=1)
+    v_full = P.all_gather(v, axes, axis=1)
+    s_kv = k_full.shape[1]
+    k_pos = jnp.arange(s_kv, dtype=jnp.int32)
+
+    # §Perf iteration A3: KV chunk 512 (not 1024) halves the f32 score
+    # blocks that dominate the backward's live set at d_model ≥ 8k.
+    out = chunked_attention(
+        q, k_full, v_full, q_pos, k_pos, causal=causal, window=window,
+        chunk=512,
+    )
+    out = out.reshape(b, s_loc, cfg.q_dim)
+    y = out @ P.gather_param(w["wo"], ws["wo"], dtype)
+    if return_kv:
+        return y, (k_full, v_full)
+    return y
+
+
+def attn_tp(
+    x,  # (B, S, d) seq-local, replicated over model
+    w: Tree,
+    ws: Tree,
+    cfg: ModelConfig,
+    par: Par,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    return_kv: bool = False,
+):
+    """Head-parallel attention for TP-mode archs (recurrentgemma local attn).
+
+    Q/O are head-sharded over model; K/V (MQA, kv=1) are replicated-compute.
+    One psum after the out-projection.
+    """
+    dtype = x.dtype
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    h_loc = cfg.n_heads // max(par.mp_size, 1)
+
+    wq = P.gather_param(w["wq"], ws["wq"], dtype)  # (d, q_loc)
+    wk = P.gather_param(w["wk"], ws["wk"], dtype)
+    wv = P.gather_param(w["wv"], ws["wv"], dtype)
+    q = (x @ wq).reshape(b, s, h_loc, hd)
+    k = (x @ wk).reshape(b, s, cfg.n_kv_heads, hd)
+    v = (x @ wv).reshape(b, s, cfg.n_kv_heads, hd)
+
+    pos = jnp.arange(s, dtype=jnp.int32)
+    q = rope(q, pos, cfg.rope_theta)
+    k = rope(k, pos, cfg.rope_theta)
+
+    # GQA grouping requires h_loc divisible by kv heads per shard; with MQA
+    # (kv=1 replicated) every local head attends the same K/V.
+    out = chunked_attention(q, k, v, pos, pos, causal=causal, window=window)
+    out = out.reshape(b, s, h_loc * hd)
+    y = out @ P.gather_param(w["wo"], ws["wo"], dtype)  # (q_loc, d) partial
+    y = P.psum(y, (par.mp,) if par.mp else ())
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def attn_tp_defs(cfg: ModelConfig) -> Tree:
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    return {
+        "wq": WDef((d, qd), tp_dim=1, fsdp_pref=(0,)),
+        "wk": WDef((d, kvd), fsdp_pref=(0, 1)),  # MQA: replicated compute
+        "wv": WDef((d, kvd), fsdp_pref=(0, 1)),
+        "wo": WDef((qd, d), tp_dim=0, fsdp_pref=(1,)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLP — SP (Megatron-SP AG→col/row→RS, seq-chunked) and TP variants
+# ---------------------------------------------------------------------------
+
+
+def mlp_defs(cfg: ModelConfig) -> Tree:
+    d, ff = cfg.d_model, cfg.d_ff
+    defs: Tree = {
+        "w1": WDef((d, ff), tp_dim=1, fsdp_pref=(0,)),
+        "w2": WDef((ff, d), tp_dim=0, fsdp_pref=(1,)),
+    }
+    if cfg.mlp == "swiglu":
+        defs["w3"] = WDef((d, ff), tp_dim=1, fsdp_pref=(0,))
+    return defs
+
+
+def _mlp_core(xg, w1, w2, w3, kind: str):
+    h = xg @ w1
+    if kind == "swiglu":
+        h = jax.nn.silu(h) * (xg @ w3)
+    else:
+        h = jax.nn.gelu(h)
+    return h @ w2
+
+
+def _auto_chunk(b: int, s_loc: int, d: int, mp: int, budget: int = 1 << 27):
+    """Largest power-of-two seq chunk whose gathered (B, chunk·mp, d) bf16
+    tensor stays under ``budget`` bytes (bounds Megatron-SP transients)."""
+    chunk = s_loc
+    while chunk > 16 and b * chunk * mp * d * 2 > budget:
+        chunk //= 2
+    while s_loc % chunk:
+        chunk //= 2
+    return max(chunk, 1)
+
+
+def mlp_sp(x, w: Tree, ws: Tree, cfg: ModelConfig, par: Par, chunk: int | None = None):
+    """x: (B, S_loc, d) seq-sharded. AG chunk over model → ff-TP → RS back."""
+    dtype = x.dtype
+    b, s_loc, d = x.shape
+    chunk = chunk or _auto_chunk(b, s_loc, d, max(par.mp_size, 1))
+    w1 = P.gather_param(w["w1"], ws["w1"], dtype)
+    w2 = P.gather_param(w["w2"], ws["w2"], dtype)
+    w3 = P.gather_param(w["w3"], ws["w3"], dtype) if "w3" in w else None
+    axes = (par.mp,) if par.mp else ()
+
+    def one_chunk(xc):
+        xg = P.all_gather(xc, axes, axis=1)
+        yg = _mlp_core(xg, w1, w2, w3, cfg.mlp)
+        return P.reduce_scatter(yg, axes, axis=1)
+
+    if s_loc <= chunk:
+        return one_chunk(x)
+    n = s_loc // chunk
+    assert s_loc % chunk == 0, (s_loc, chunk)
+    xcs = x.reshape(b, n, chunk, d).transpose(1, 0, 2, 3)
+    # scan + checkpoint: one chunk of gathered activations live at a time
+    # (the dry-run HLO parser multiplies while-body collectives by the
+    # parsed trip count, so accounting stays exact).
+    _, ycs = jax.lax.scan(
+        jax.checkpoint(lambda c, xc: (c, one_chunk(xc))), None, xcs
+    )
+    return ycs.transpose(1, 0, 2, 3).reshape(b, s_loc, d)
+
+
+def mlp_tp(x, w: Tree, ws: Tree, cfg: ModelConfig, par: Par):
+    """x: (B, S, d) replicated over model. Col/row parallel + psum."""
+    dtype = x.dtype
+    w1 = P.gather_param(w["w1"], ws["w1"], dtype)
+    w2 = P.gather_param(w["w2"], ws["w2"], dtype)
+    w3 = P.gather_param(w["w3"], ws["w3"], dtype) if "w3" in w else None
+    y = _mlp_core(x, w1, w2, w3, cfg.mlp)
+    return P.psum(y, (par.mp,) if par.mp else ())
+
+
+# ---------------------------------------------------------------------------
+# MoE — capacity-based sort dispatch, expert-ff TP (works for any E)
+# ---------------------------------------------------------------------------
+
+
+def moe_defs(cfg: ModelConfig) -> Tree:
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.moe.n_experts
+    defs: Tree = {
+        "router": WDef((d, e), fsdp_pref=(0,)),
+        "w1": WDef((e, d, ff), tp_dim=2, fsdp_pref=(1,)),
+        "w2": WDef((e, ff, d), tp_dim=1, fsdp_pref=(2,)),
+        "w3": WDef((e, d, ff), tp_dim=2, fsdp_pref=(1,)),
+    }
+    if cfg.moe.dense_residual:
+        defs["dense"] = mlp_defs(cfg)
+    return defs
+
+
+def _moe_tokens(tokens, gathered, cfg: ModelConfig):
+    """Dispatch (T, d) tokens to top-k experts with fixed capacity.
+
+    Sort-based: no (T, E, C) one-hot dispatch tensors (DESIGN.md §6), so HLO
+    FLOPs stay k·capacity_factor× the dense equivalent. Returns (out, aux).
+    """
+    w_router, w1, w2, w3 = gathered
+    t, d = tokens.shape
+    e, k = cfg.moe.n_experts, cfg.moe.top_k
+    cap = int(cfg.moe.capacity_factor * k * t / e)
+    cap = max(8, ((cap + 7) // 8) * 8)
+
+    logits = (tokens @ w_router).astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, expert = jax.lax.top_k(probs, k)  # (T, k)
+    gate = gate / jnp.sum(gate, -1, keepdims=True)
+
+    flat_e = expert.reshape(-1)  # (T*k,) token-major
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    pos = jnp.arange(t * k, dtype=jnp.int32) - jnp.searchsorted(
+        sorted_e, sorted_e, side="left"
+    ).astype(jnp.int32)
+    ok = pos < cap
+    slot = jnp.where(ok, sorted_e * cap + pos, e * cap)  # OOB → dropped
+    token_of = (order // k).astype(jnp.int32)
+
+    buf = (
+        jnp.zeros((e * cap, d), tokens.dtype)
+        .at[slot]
+        .set(tokens[token_of], mode="drop")
+        .reshape(e, cap, d)
+    )
+    h = jnp.einsum("ecd,edf->ecf", buf, w1)
+    h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", buf, w3)
+    yb = jnp.einsum("ecf,efd->ecd", h, w2).reshape(e * cap, d)
+
+    y_sorted = jnp.where(ok[:, None], yb.at[jnp.minimum(slot, e * cap - 1)].get(), 0)
+    y_assign = jnp.zeros((t * k, d), tokens.dtype).at[order].set(y_sorted)
+    y = (y_assign.reshape(t, k, d) * gate[..., None].astype(tokens.dtype)).sum(1)
+
+    # Load-balancing aux loss (Switch-style) + drop fraction metric.
+    frac_tokens = jnp.mean(
+        (jax.nn.one_hot(expert, e, dtype=jnp.float32)).sum(1), axis=0
+    )
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = {
+        "lb_loss": e * jnp.sum(frac_tokens * frac_probs) / k,
+        "drop_frac": 1.0 - jnp.mean(ok.astype(jnp.float32)),
+    }
+    return y, aux
+
+
+def moe_sp(x, w: Tree, ws: Tree, cfg: ModelConfig, par: Par, chunk: int | None = None):
+    """Seq-sharded MoE: AG chunk over model → dispatch/compute → RS back."""
+    dtype = x.dtype
+    b, s_loc, d = x.shape
+    chunk = chunk or _auto_chunk(b, s_loc, d, max(par.mp_size, 1))
+    gathered = tuple(
+        P.gather_param(w[n], ws[n], dtype) for n in ("router", "w1", "w2", "w3")
+    )
+    dense = None
+    if "dense" in w:
+        dense = tuple(
+            P.gather_param(w["dense"][n], ws["dense"][n], dtype)
+            for n in ("w1", "w2", "w3")
+        )
+    axes = (par.mp,) if par.mp else ()
+
+    def one_chunk(xc):
+        xg = P.all_gather(xc, axes, axis=1)
+        bsz, sg, _ = xg.shape
+        y, aux = _moe_tokens(xg.reshape(bsz * sg, d), gathered, cfg)
+        y = y.reshape(bsz, sg, d)
+        if dense is not None:
+            w1_d, w2_d, w3_d = dense
+            y = y + _mlp_core(xg, w1_d, w2_d, w3_d, "swiglu")
+        return P.reduce_scatter(y, axes, axis=1), aux
+
+    if s_loc <= chunk:
+        return one_chunk(x)
+    n = s_loc // chunk
+    assert s_loc % chunk == 0
+    xcs = x.reshape(b, n, chunk, d).transpose(1, 0, 2, 3)
+    _, (ycs, auxs) = jax.lax.scan(
+        jax.checkpoint(lambda c, xc: (c, one_chunk(xc))), None, xcs
+    )
+    y = ycs.transpose(1, 0, 2, 3).reshape(b, s_loc, d)
+    return y, jax.tree.map(jnp.mean, auxs)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 time mix (chunked WKV) + channel mix — TP mode
+# ---------------------------------------------------------------------------
+
+_RWKV_LORA = 32
+
+
+def rwkv_defs(cfg: ModelConfig) -> Tree:
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    h = cfg.n_heads
+    ff = cfg.d_ff
+    return {
+        "mu": WDef((5, d), fsdp_pref=(1,), init="zeros"),  # r,k,v,g,w shifts
+        "wr": WDef((d, d), tp_dim=1, fsdp_pref=(0,)),
+        "wk": WDef((d, d), tp_dim=1, fsdp_pref=(0,)),
+        "wv": WDef((d, d), tp_dim=1, fsdp_pref=(0,)),
+        "wg": WDef((d, d), tp_dim=1, fsdp_pref=(0,)),
+        # decay base: exp(w0) ≈ 0.05/step so cumulated chunk decays stay in
+        # f32 range (real RWKV decays are near 1; see clip in rwkv_mix)
+        "w0": WDef((d,), tp_dim=0, init="const", init_scale=-3.0),
+        "wa": WDef((d, _RWKV_LORA), fsdp_pref=(0,)),  # decay lora (replicated)
+        "wb": WDef((_RWKV_LORA, d), tp_dim=1, fsdp_pref=(0,), init="zeros"),
+        "u": WDef((h, hd), tp_dim=0, init="zeros"),  # per-head bonus
+        "ln_x": WDef((d,), tp_dim=0, init="ones"),  # per-head group norm
+        "wo": WDef((d, d), tp_dim=0, fsdp_pref=(1,)),
+        # channel mix
+        "cm_r": WDef((d, d), fsdp_pref=(0, 1)),  # full r gate (replicated)
+        "cm_k": WDef((d, ff), tp_dim=1, fsdp_pref=(0,)),
+        "cm_v": WDef((ff, d), tp_dim=0, fsdp_pref=(1,)),
+    }
+
+
+def _wkv_chunk(r, k, v, logw, u, state):
+    """One WKV chunk. r,k,v: (B,H,c,D); logw: (B,H,c,D) (≤0); u: (H,D);
+    state: (B,H,D,D) f32 (key × value). Returns (y, new_state)."""
+    c = r.shape[2]
+    logp = jnp.cumsum(logw, axis=2)  # inclusive ∏ decay through i
+    logp_excl = logp - logw  # exclusive: through i-1
+    rq = r * jnp.exp(logp_excl)  # (B,H,c,D)
+    kk = k * jnp.exp(-logp)  # k_j / P_j
+    a = jnp.einsum("bhid,bhjd->bhij", rq, kk)  # Σ_d r_i P_{i-1}/P_j k_j
+    mask = jnp.tril(jnp.ones((c, c), bool), -1)  # strictly j < i
+    a = jnp.where(mask[None, None], a, 0.0)
+    y = jnp.einsum("bhij,bhje->bhie", a, v)
+    y = y + jnp.einsum("bhid,bhde->bhie", rq, state)  # carry-in state
+    diag = jnp.einsum("bhid,hd,bhid->bhi", r, u, k)  # bonus self term
+    y = y + diag[..., None] * v
+    p_end = jnp.exp(logp[:, :, -1:, :])  # (B,H,1,D)
+    k2 = k * jnp.exp(logp[:, :, -1:, :] - logp)  # k_j · P_c/P_j
+    new_state = state * p_end[:, :, 0, :, None] + jnp.einsum(
+        "bhjd,bhje->bhde", k2, v
+    )
+    return y, new_state
+
+
+def rwkv_mix(
+    x, w: Tree, ws: Tree, cfg: ModelConfig, par: Par, chunk: int = 64,
+    return_state: bool = False, state0=None, shift0=None,
+):
+    """RWKV6 time mixing over the local sequence (training/prefill).
+
+    ``state0`` (B, H_loc, hd, hd) and ``shift0`` (B, d) continue the
+    recurrence from a previous time chunk (rwkv_block_chunked)."""
+    dtype = x.dtype
+    b, s, d = x.shape
+    hd = cfg.resolved_head_dim
+    h_loc = cfg.n_heads // max(par.mp_size, 1)
+
+    pre = w.get("_pre") if isinstance(w, dict) else None
+    g_ = (
+        (lambda n: pre[n])
+        if pre is not None
+        else (lambda n: P.gather_param(w[n], ws[n], dtype))
+    )
+    mu = g_("mu") if pre is not None else P.gather_param(w["mu"], ws["mu"], dtype)
+    first = (
+        jnp.zeros((b, 1, d), x.dtype) if shift0 is None
+        else shift0[:, None].astype(x.dtype)
+    )
+    xprev = jnp.concatenate([first, x[:, :-1]], axis=1)
+    mix = lambda i: x + mu[i] * (xprev - x)
+    r = mix(0) @ g_("wr")
+    k = mix(1) @ g_("wk")
+    v = mix(2) @ g_("wv")
+    g = mix(3) @ g_("wg")
+    w0 = (
+        pre["w0"] if pre is not None
+        else P.gather_param(w["w0"], ws["w0"], jnp.float32)
+    )
+    lora = jnp.tanh(mix(4) @ g_("wa")) @ g_("wb")
+    logw = -jnp.exp(jnp.clip(w0 + lora.astype(jnp.float32), -8.0, 8.0))
+    # Chunked WKV uses exp(-cumsum(logw)) inside a chunk; clamping per-step
+    # log-decay to ≥ -1 keeps exp(chunk·|logw|) finite in f32 (chunk ≤ 64)
+    # while still allowing sub-token half-lives.
+    logw = jnp.clip(logw, -1.0, -1e-6)
+
+    u = (
+        pre["u"] if pre is not None
+        else P.gather_param(w["u"], ws["u"], jnp.float32)
+    )  # (h_loc, hd)
+
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    n = s // chunk
+
+    def to_chunks(t, f32=True):
+        # (B, S, d_loc) → (n, B, H_loc, chunk, hd) with a single transpose
+        t = t.reshape(b, n, chunk, h_loc, hd).transpose(1, 0, 3, 2, 4)
+        return t.astype(jnp.float32) if f32 else t
+
+    rc, kc, vc, wc = to_chunks(r), to_chunks(k), to_chunks(v), to_chunks(logw)
+
+    def body(state, inp):
+        ri, ki, vi, wi = inp
+        y, state = _wkv_chunk(ri, ki, vi, wi, u, state)
+        return state, y.astype(dtype)  # stash stacked outputs in bf16
+
+    s0 = (
+        jnp.zeros((b, h_loc, hd, hd), jnp.float32)
+        if state0 is None else state0
+    )
+    # checkpoint: recompute intra-chunk decay matrices in the backward pass
+    s_final, ys = jax.lax.scan(jax.checkpoint(body), s0, (rc, kc, vc, wc))
+    # ys: (n_chunks, B, H_loc, chunk, hd) → (B, S, H_loc, hd)
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(b, s, h_loc, hd).astype(jnp.float32)
+
+    # per-head group norm + silu(g) gate
+    ln = (
+        pre["ln_x"] if pre is not None
+        else P.gather_param(w["ln_x"], ws["ln_x"], jnp.float32)
+    ).reshape(h_loc, hd)
+    yn = y * jax.lax.rsqrt(jnp.mean(y * y, -1, keepdims=True) + 1e-6) * ln
+    yn = yn.reshape(b, s, h_loc * hd).astype(dtype)
+    out = (yn * jax.nn.silu(g)) @ g_("wo")
+    out = P.psum(out, (par.mp,) if par.mp else ())
+    if return_state:
+        # decode continuation: WKV state + last (normed) input for the shift
+        return out, (s_final, x[:, -1].astype(jnp.float32))
+    return out
+
+
+def rwkv_channel_mix(
+    x, w: Tree, ws: Tree, cfg: ModelConfig, par: Par,
+    return_state: bool = False, shift0=None,
+):
+    dtype = x.dtype
+    b, _, d = x.shape
+    first = (
+        jnp.zeros((b, 1, d), x.dtype) if shift0 is None
+        else shift0[:, None].astype(x.dtype)
+    )
+    xprev = jnp.concatenate([first, x[:, :-1]], axis=1)
+    xk = 0.5 * (x + xprev)
+    pre = w.get("_pre") if isinstance(w, dict) else None
+    g_ = (
+        (lambda n: pre[n])
+        if pre is not None
+        else (lambda n: P.gather_param(w[n], ws[n], dtype))
+    )
+    r = jax.nn.sigmoid(xk @ g_("cm_r"))
+    h = jnp.square(jax.nn.relu(xk @ g_("cm_k")))
+    y = h @ g_("cm_v")
+    y = P.psum(y, (par.mp,) if par.mp else ())
+    if return_state:
+        return r * y, x[:, -1].astype(jnp.float32)
+    return r * y
+
+
+def rwkv_block_chunked(
+    x, w: Tree, ws: Tree, cfg: ModelConfig, par: Par, norm_kind: str,
+    chunk: int = 512, capture: bool = False,
+):
+    """Full RWKV block (ln→time-mix→ln→channel-mix) scanned over TIME chunks.
+
+    §Perf iteration (EXPERIMENTS): TP-mode blocks otherwise materialize ~10
+    full-sequence (B, S, d) streams per layer in the backward pass; carrying
+    (wkv state, shift boundaries) across S/chunk sequential chunks bounds
+    the live working set to (B, chunk, d) at identical math and FLOPs.
+    """
+    b, s, d = x.shape
+    hd = cfg.resolved_head_dim
+    h_loc = cfg.n_heads // max(par.mp_size, 1)
+    chunk = min(chunk, s)
+    while s % chunk:
+        chunk //= 2
+    nc = s // chunk
+    dtype = x.dtype
+
+    # §Perf iteration B2: gather every weight ONCE per block, outside the
+    # time-chunk scan — per-chunk re-gathers showed up as +30% memory and
+    # +1.7 s collective in the B1 measurement (EXPERIMENTS §Perf).
+    pre = {
+        n: P.gather_param(w["mix"][n], ws["mix"][n], dtype)
+        for n in ("mu", "wr", "wk", "wv", "wg", "wa", "wb", "wo",
+                  "cm_r", "cm_k", "cm_v")
+    }
+    pre["w0"] = P.gather_param(w["mix"]["w0"], ws["mix"]["w0"], jnp.float32)
+    pre["u"] = P.gather_param(w["mix"]["u"], ws["mix"]["u"], jnp.float32)
+    pre["ln_x"] = P.gather_param(
+        w["mix"]["ln_x"], ws["mix"]["ln_x"], jnp.float32
+    )
+    mix_w = {**w["mix"], "_pre": pre}
+
+    def body(carry, xc):
+        state, sh_tm, sh_cm = carry
+        h = apply_norm(xc, w["ln1"], ws["ln1"], norm_kind, dtype)
+        m, (state2, sh_tm2) = rwkv_mix(
+            h, mix_w, ws["mix"], cfg, par,
+            return_state=True, state0=state, shift0=sh_tm,
+        )
+        xc = xc + m
+        h2 = apply_norm(xc, w["ln2"], ws["ln2"], norm_kind, dtype)
+        cm, sh_cm2 = rwkv_channel_mix(
+            h2, mix_w, ws["mix"], cfg, par,
+            return_state=True, shift0=sh_cm,
+        )
+        return (state2, sh_tm2, sh_cm2), xc + cm
+
+    init = (
+        jnp.zeros((b, h_loc, hd, hd), jnp.float32),
+        jnp.zeros((b, d), jnp.float32),
+        jnp.zeros((b, d), jnp.float32),
+    )
+    if nc == 1:
+        carry, y = body(init, x)
+    else:
+        xcs = x.reshape(b, nc, chunk, d).transpose(1, 0, 2, 3)
+        carry, ycs = jax.lax.scan(jax.checkpoint(body), init, xcs)
+        y = ycs.transpose(1, 0, 2, 3).reshape(b, s, d)
+    if capture:
+        state, sh_tm, sh_cm = carry
+        return y, {"state": state, "shift_tm": sh_tm, "shift_cm": sh_cm}
+    return y, None
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (Griffin) recurrence block — TP mode
+# ---------------------------------------------------------------------------
+
+_RGLRU_C = 8.0
+
+
+def rglru_defs(cfg: ModelConfig) -> Tree:
+    d, r = cfg.d_model, cfg.rnn_dim
+    return {
+        "wx": WDef((d, r), tp_dim=1, fsdp_pref=(0,)),
+        "wgate": WDef((d, r), tp_dim=1, fsdp_pref=(0,)),  # gelu branch
+        "wa": WDef((d, r), tp_dim=1, fsdp_pref=(0,)),  # recurrence gate a_t
+        "wi": WDef((d, r), tp_dim=1, fsdp_pref=(0,)),  # input gate i_t
+        "conv": WDef((4, r), tp_dim=1, init="scaled", init_scale=0.5),
+        "lam": WDef((r,), tp_dim=0, init="ones"),  # Λ (softplus-parameterized)
+        "wo": WDef((r, d), tp_dim=0, fsdp_pref=(1,)),
+    }
+
+
+def _depthwise_conv(x, kern):
+    """Causal depthwise conv, width K. x: (B,S,C), kern: (K,C)."""
+    k = kern.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    return sum(xp[:, i : i + x.shape[1]] * kern[i] for i in range(k))
+
+
+def _rglru_scan(log_a, bx):
+    """h_t = a_t h_{t-1} + b_t via associative scan over seq axis 1."""
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 + a2, b1 * jnp.exp(a2) + b2
+
+    la, b = jax.lax.associative_scan(combine, (log_a, bx), axis=1)
+    return b
+
+
+def rglru_mix(
+    x, w: Tree, ws: Tree, cfg: ModelConfig, par: Par, return_state: bool = False
+):
+    dtype = x.dtype
+    g_ = lambda n: P.gather_param(w[n], ws[n], dtype)
+    bx_pre = x @ g_("wx")
+    bx = _depthwise_conv(bx_pre, g_("conv"))
+    a_gate = jax.nn.sigmoid((x @ g_("wa")).astype(jnp.float32))
+    i_gate = jax.nn.sigmoid((x @ g_("wi")).astype(jnp.float32))
+    lam = jax.nn.softplus(P.gather_param(w["lam"], ws["lam"], jnp.float32))
+    log_a = jnp.clip(-_RGLRU_C * lam * a_gate, -60.0, -1e-6)  # (B,S,r) ≤ 0
+    beta = jnp.sqrt(1.0 - jnp.exp(2.0 * log_a))
+    bterm = beta * (i_gate * bx.astype(jnp.float32))
+    h32 = _rglru_scan(log_a, bterm)
+    h = h32.astype(dtype)
+    gate = jax.nn.gelu(x @ g_("wgate"))
+    y = (h * gate) @ g_("wo")
+    y = P.psum(y, (par.mp,) if par.mp else ())
+    if return_state:
+        # state: final h; conv history: last 3 *pre-conv* inputs
+        hist = bx_pre[:, -3:].astype(jnp.float32)
+        return y, (h32[:, -1], hist)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Embedding & vocab-parallel cross-entropy head
+# ---------------------------------------------------------------------------
+
+
+def embed_defs(cfg: ModelConfig) -> Tree:
+    vp, d = cfg.padded_vocab(), cfg.d_model
+    defs = {"table": WDef((vp, d), tp_dim=0, fsdp_pref=(1,), init_scale=1.0)}
+    if not cfg.tie_embeddings:
+        defs["head"] = WDef((d, vp), tp_dim=1, fsdp_pref=(0,))
+    return defs
+
+
+def embed_tokens(ids, w, ws, cfg: ModelConfig, par: Par, dtype, sp: bool):
+    """ids: (B, S) replicated over model. Vocab-parallel lookup; in SP mode a
+    reduce-scatter over seq enters sequence parallelism (Megatron-SP)."""
+    table = P.gather_param(w["table"], ws["table"], dtype)  # (V_loc, d)
+    v_loc = table.shape[0]
+    shard = P.axis_index(par.mp)
+    local = ids - shard * v_loc
+    hit = (local >= 0) & (local < v_loc)
+    rows = jnp.take(table, jnp.clip(local, 0, v_loc - 1), axis=0)
+    partial = jnp.where(hit[..., None], rows, 0)
+    axes = (par.mp,) if par.mp else ()
+    if sp:
+        return P.reduce_scatter(partial, axes, axis=1)  # (B, S_loc, d)
+    return P.psum(partial, axes)  # (B, S, d)
+
+
+def _vp_ce_chunk(xi, li, head, v_loc, shard, axes):
+    """Vocab-parallel CE for rows REPLICATED over the model axis.
+
+    xi: (B, c, d) — identical on every model shard (Megatron rule: the
+    vocab psums below combine per-vocab-slice partials of the SAME rows;
+    feeding different rows per shard silently corrupts the lse).
+    """
+    logits = (xi @ head).astype(jnp.float32)  # (B, c, V_loc)
+    # max-shift is a constant wrt the gradient (softmax is shift
+    # invariant); stop_gradient also sidesteps pmax's missing JVP rule.
+    m = P.pmax(jnp.max(jax.lax.stop_gradient(logits), -1), axes)
+    se = jnp.sum(jnp.exp(logits - m[..., None]), -1)
+    lse = m + jnp.log(P.psum(se, axes))
+    local = li - shard * v_loc
+    hit = (local >= 0) & (local < v_loc)
+    tgt = jnp.take_along_axis(
+        logits, jnp.clip(local, 0, v_loc - 1)[..., None], axis=-1
+    )[..., 0]
+    tgt = P.psum(jnp.where(hit, tgt, 0.0), axes)
+    return jnp.sum(lse - tgt)
+
+
+def ce_loss_sp(
+    x,  # (B, S_loc, d) seq-sharded hidden states (post final norm)
+    labels,  # (B, S) replicated over model
+    w,
+    ws,
+    cfg: ModelConfig,
+    par: Par,
+    chunk: int = 256,
+):
+    """Vocab-parallel cross entropy for sequence-parallel hidden states.
+
+    Each local seq chunk is all-gathered over the model axis first (the SP
+    exit, mirroring Megatron-SP's head), so the vocab-parallel psums combine
+    partials of identical rows. The returned total is replicated over model;
+    callers psum over the data axes only. Never materializes (B, S, V)."""
+    dtype = x.dtype
+    head = P.gather_param(w["head"], ws["head"], dtype)  # (d, V_loc)
+    v_loc = head.shape[1]
+    b, s_loc, d = x.shape
+    mp = max(par.mp_size, 1)
+    shard = P.axis_index(par.mp)
+    axes = (par.mp,) if par.mp else ()
+
+    c_loc = max(1, min(s_loc, chunk // mp))
+    while s_loc % c_loc:
+        c_loc //= 2
+    n = s_loc // c_loc
+
+    def one_chunk(carry, inp):
+        # Gather one chunk of rows (and their labels) over model: tiled
+        # all_gather concatenates shards in axis-index order, so row/label
+        # pairing is preserved; CE is row-wise so global order is free.
+        xi_loc, li_loc = inp  # (B, c_loc, d), (B, c_loc)
+        xi = P.all_gather(xi_loc, axes, axis=1)
+        li = P.all_gather(li_loc, axes, axis=1)
+        return carry + _vp_ce_chunk(xi, li, head, v_loc, shard, axes), None
+
+    xc = x.reshape(b, n, c_loc, d).transpose(1, 0, 2, 3)
+    lab_loc = jax.lax.dynamic_slice_in_dim(labels, shard * s_loc, s_loc, 1)
+    lc = lab_loc.reshape(b, n, c_loc).transpose(1, 0, 2)
+    total, _ = jax.lax.scan(
+        jax.checkpoint(one_chunk), jnp.zeros((), jnp.float32), (xc, lc)
+    )
+    return total, b * s_loc * mp
+
+
+def ce_loss_tp(x, labels, w, ws, cfg: ModelConfig, par: Par, chunk: int = 256):
+    """TP-mode CE: x (B, S, d) seq-local; labels (B, S)."""
+    dtype = x.dtype
+    head = P.gather_param(w["head"], ws["head"], dtype)
+    v_loc = head.shape[1]
+    b, s, d = x.shape
+    shard = P.axis_index(par.mp)
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    n = s // chunk
+    axes = (par.mp,) if par.mp else ()
+
+    xc = x.reshape(b, n, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, n, chunk).transpose(1, 0, 2)
+    total, _ = jax.lax.scan(
+        jax.checkpoint(
+            lambda c, inp: (
+                c + _vp_ce_chunk(inp[0], inp[1], head, v_loc, shard, axes),
+                None,
+            )
+        ),
+        jnp.zeros((), jnp.float32), (xc, lc),
+    )
+    return total, b * s

@@ -1,0 +1,632 @@
+"""Serving: prefill + single-token decode for every architecture family.
+
+Cache design (DESIGN.md §5):
+  * Attention layers — ring KV cache of capacity W (= full context for dense
+    archs, = window for SWA/local-attn archs, which is what makes mixtral /
+    recurrentgemma sub-quadratic at 500k). The ring is *sequence-sharded*
+    over the ``model`` axis (context parallelism — head-count agnostic);
+    decode computes shard-local partial attention and merges the online-
+    softmax statistics with one pmax + two psums (flash-decode across chips).
+    A parallel ``pos`` buffer stores absolute positions (-1 = empty) so
+    causal/window masking works under ring wraparound.
+  * RWKV6 — per-head WKV state (B, H_loc, hd, hd) + token-shift caches.
+  * RG-LRU — per-channel state (B, r_loc) + depthwise-conv history.
+
+Decode keeps the training parameter layout (ZeRO-3 gathers per layer) as the
+*paper-faithful baseline*; §Perf swaps in the serving-optimized layout.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import par as P
+from repro.distributed.par import Par, WSpec
+from repro.models import layers as L
+from repro.models.config import ModelConfig, layer_kinds
+from repro.models.transformer import _tree_index, _unstack_spec
+
+Tree = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Cache construction
+# ---------------------------------------------------------------------------
+
+
+def serve_kv_heads(cfg: ModelConfig, mp: int) -> int:
+    """KV heads stored per shard under TP serving: max(1, Hk/mp)."""
+    h_loc = cfg.n_heads // mp
+    g_global = cfg.n_heads // cfg.n_kv_heads
+    return max(1, h_loc // g_global)
+
+
+def attn_cache_len(cfg: ModelConfig, kind: str, seq_len: int) -> int:
+    if kind == "attn" and cfg.swa_window:
+        return min(cfg.swa_window, seq_len)
+    if kind == "attn" and cfg.local_attn_window:
+        return min(cfg.local_attn_window, seq_len)
+    return seq_len
+
+
+def _slot_cache_shapes(
+    cfg: ModelConfig, kind: str, b: int, seq_len: int, par: Par,
+    kv_dtype=jnp.bfloat16, serve_tp: bool = False,
+):
+    hd = cfg.resolved_head_dim
+    mp = max(par.mp_size, 1)
+    if kind == "attn":
+        w = attn_cache_len(cfg, kind, seq_len)
+        # SP archs: ring seq-sharded over model (context parallel decode).
+        # TP serving (§Perf iteration C2): full window per shard but only
+        # the kv-head slice this shard's query heads attend — Hk/mp heads
+        # (min 1; shards within a GQA group duplicate that head).
+        seq_shard = cfg.parallel_mode == "sp" and not serve_tp and w % mp == 0
+        w_loc = w // mp if seq_shard else w
+        kv_heads = serve_kv_heads(cfg, mp) if serve_tp else cfg.n_kv_heads
+        return {
+            "k": ((b, w_loc, kv_heads, hd), kv_dtype),
+            "v": ((b, w_loc, kv_heads, hd), kv_dtype),
+            "pos": ((w_loc,), jnp.int32),
+        }
+    if kind == "rwkv":
+        h_loc = cfg.n_heads // mp
+        d = cfg.d_model
+        return {
+            "state": ((b, h_loc, hd, hd), jnp.float32),
+            "shift_tm": ((b, d), jnp.float32),
+            "shift_cm": ((b, d), jnp.float32),
+        }
+    if kind == "rglru":
+        r_loc = cfg.rnn_dim // mp if cfg.rnn_dim % mp == 0 else cfg.rnn_dim
+        return {
+            "state": ((b, r_loc), jnp.float32),
+            "conv": ((b, 3, r_loc), jnp.float32),
+        }
+    raise ValueError(kind)
+
+
+def init_cache(
+    cfg: ModelConfig, b_local: int, seq_len: int, par: Par,
+    kv_dtype=jnp.bfloat16, serve_tp: bool = False,
+) -> Tree:
+    """Zero-initialized local cache shards (pos = -1 ⇒ empty)."""
+    p = len(cfg.block_pattern)
+    n_groups, rem = divmod(cfg.n_layers, p)
+    kinds = layer_kinds(cfg)
+
+    def make(shapes, groups):
+        out = {}
+        for name, (shape, dt) in shapes.items():
+            full = (groups,) + shape if groups else shape
+            init = -jnp.ones(full, dt) if name == "pos" else jnp.zeros(full, dt)
+            out[name] = init
+        return out
+
+    cache: Tree = {"t": jnp.zeros((), jnp.int32)}
+    if n_groups:
+        cache["blocks"] = {
+            f"slot{i}": make(
+                _slot_cache_shapes(
+                    cfg, cfg.block_pattern[i], b_local, seq_len, par,
+                    kv_dtype, serve_tp,
+                ),
+                n_groups,
+            )
+            for i in range(p)
+        }
+    for j in range(rem):
+        cache[f"extra{j}"] = make(
+            _slot_cache_shapes(
+                cfg, kinds[n_groups * p + j], b_local, seq_len, par,
+                kv_dtype, serve_tp,
+            ),
+            0,
+        )
+    if cfg.family == "encdec":
+        # Cross-attention K/V computed once from the encoder at prefill.
+        mp = max(par.mp_size, 1)
+        hd = cfg.resolved_head_dim
+        ck = {
+            "ck": jnp.zeros(
+                (n_groups, b_local, cfg.encoder_seq // mp, cfg.n_kv_heads, hd),
+                kv_dtype,
+            ),
+            "cv": jnp.zeros(
+                (n_groups, b_local, cfg.encoder_seq // mp, cfg.n_kv_heads, hd),
+                kv_dtype,
+            ),
+        }
+        for i in range(p):
+            cache["blocks"][f"slot{i}"].update(jax.tree.map(lambda x: x, ck))
+    return cache
+
+
+def cache_pspecs(cfg: ModelConfig, seq_len: int, par: Par, mesh_sizes,
+                 serve_tp: bool = False):
+    """PartitionSpecs matching init_cache's local shapes (for shard_map)."""
+    from jax.sharding import PartitionSpec as PS
+
+    mp = par.mp if par.mp else None
+    dp = par.dp if par.dp else None
+
+    def spec_for(name, kind, groups):
+        lead = (None,) if groups else ()
+        if kind == "attn":
+            w = attn_cache_len(cfg, kind, seq_len)
+            seq_ok = (
+                cfg.parallel_mode == "sp" and not serve_tp
+                and w % max(par.mp_size, 1) == 0
+            )
+            seq_ax = mp if (mp and seq_ok) else None
+            head_ax = mp if (mp and serve_tp) else None
+            if name in ("k", "v"):
+                return PS(*lead, dp, seq_ax, head_ax, None)
+            if name == "pos":
+                return PS(*lead, seq_ax)
+        if kind == "rwkv":
+            if name == "state":
+                return PS(*lead, dp, mp, None, None)
+            return PS(*lead, dp, None)
+        if kind == "rglru":
+            seq_ax = mp if (mp and cfg.rnn_dim % max(par.mp_size, 1) == 0) else None
+            if name == "state":
+                return PS(*lead, dp, seq_ax)
+            return PS(*lead, dp, None, seq_ax)
+        if name in ("ck", "cv"):
+            return PS(None, dp, mp, None, None)
+        raise ValueError((name, kind))
+
+    p = len(cfg.block_pattern)
+    n_groups, rem = divmod(cfg.n_layers, p)
+    kinds = layer_kinds(cfg)
+    specs: Tree = {"t": PS()}
+    if n_groups:
+        specs["blocks"] = {}
+        for i in range(p):
+            kind = cfg.block_pattern[i]
+            names = _slot_cache_shapes(
+                cfg, kind, 1, seq_len, par, serve_tp=serve_tp
+            ).keys()
+            d = {n: spec_for(n, kind, True) for n in names}
+            if cfg.family == "encdec":
+                d["ck"] = spec_for("ck", kind, True)
+                d["cv"] = spec_for("cv", kind, True)
+            specs["blocks"][f"slot{i}"] = d
+    for j in range(rem):
+        kind = kinds[n_groups * p + j]
+        names = _slot_cache_shapes(
+            cfg, kind, 1, seq_len, par, serve_tp=serve_tp
+        ).keys()
+        specs[f"extra{j}"] = {n: spec_for(n, kind, False) for n in names}
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Decode-time sublayers
+# ---------------------------------------------------------------------------
+
+
+def _ring_write(buf, pos_buf, new, t, w_total, par: Par, seq_sharded: bool):
+    """Write `new` (B,1,H,D) into the ring at absolute position t."""
+    slot = t % w_total
+    if seq_sharded and par.mp:
+        w_loc = buf.shape[1]
+        owner = slot // w_loc
+        local = slot - owner * w_loc
+        me = P.axis_index(par.mp)
+        write = owner == me
+    else:
+        local = slot
+        write = jnp.bool_(True)
+    cur_k = jax.lax.dynamic_slice_in_dim(buf, local, 1, 1)
+    upd = jnp.where(write, new.astype(buf.dtype), cur_k)
+    buf = jax.lax.dynamic_update_slice_in_dim(buf, upd, local, 1)
+    cur_p = jax.lax.dynamic_slice_in_dim(pos_buf, local, 1, 0)
+    updp = jnp.where(write, jnp.full_like(cur_p, t), cur_p)
+    pos_buf = jax.lax.dynamic_update_slice_in_dim(pos_buf, updp, local, 0)
+    return buf, pos_buf
+
+
+def _decode_attend(q, kbuf, vbuf, pos_buf, t, window, par: Par, merge_axes):
+    """Flash-decode over the local ring shard + cross-shard softmax merge.
+
+    q: (B, 1, H, D); kbuf/vbuf: (B, W_loc, Hk, D); pos_buf: (W_loc,).
+    """
+    b, _, h, d = q.shape
+    hk = kbuf.shape[2]
+    g = h // hk
+    qf = q.astype(jnp.float32).reshape(b, hk, g, d) / jnp.sqrt(d).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bchd->bhgc", qf, kbuf.astype(jnp.float32))
+    valid = (pos_buf >= 0) & (pos_buf <= t)
+    if window is not None:
+        valid &= pos_buf > t - window
+    s = jnp.where(valid[None, None, None], s, -1e30)
+    m = jnp.max(s, axis=-1)
+    m_g = P.pmax(m, merge_axes)
+    p = jnp.exp(s - m_g[..., None])
+    l = P.psum(jnp.sum(p, -1), merge_axes)
+    o = jnp.einsum("bhgc,bchd->bhgd", p, vbuf.astype(jnp.float32))
+    o = P.psum(o, merge_axes)
+    out = o / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, 1, h, d)
+
+
+def _attn_decode(x, w, ws, cache, cfg: ModelConfig, par: Par, t, seq_len,
+                 kind_window, cross_enc=False, serve_tp=False):
+    """x: (B,1,d) replicated over model. Returns (y, cache').
+
+    SP archs: all heads locally, ring seq-sharded over model; partial
+    softmaxes merged with pmax+psums (context-parallel flash decode).
+    TP archs: heads sharded over model, replicated full-window ring;
+    one psum after the (row-parallel) out-projection.
+    """
+    dtype = x.dtype
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    tp_attn = cfg.parallel_mode == "tp" or serve_tp
+    h_loc = cfg.n_heads // max(par.mp_size, 1) if tp_attn else cfg.n_heads
+
+    def proj(name, src):
+        wt = P.gather_param(w[name], ws[name], dtype)
+        y = src @ wt
+        bias = "b" + name[1]
+        if bias in w:
+            y = y + P.gather_param(w[bias], ws[bias], dtype)
+        return y
+
+    q = proj("wq", x).reshape(b, 1, h_loc, hd)
+    k = proj("wk", x).reshape(b, 1, cfg.n_kv_heads, hd)
+    v = proj("wv", x).reshape(b, 1, cfg.n_kv_heads, hd)
+    pos = jnp.full((1,), t, jnp.int32)
+    q = L.rope(q, pos, cfg.rope_theta)
+    k = L.rope(k, pos, cfg.rope_theta)
+
+    w_total = attn_cache_len(cfg, "attn", seq_len)
+    seq_sharded = (
+        not tp_attn
+        and par.mp is not None
+        and w_total % max(par.mp_size, 1) == 0
+    )
+    if serve_tp and h_loc < cfg.n_heads:
+        # §Perf C2: the ring stores only this shard's kv-head slice; slice
+        # the freshly projected kv before writing (GQA-aligned).
+        g_global = cfg.n_heads // cfg.n_kv_heads
+        n_kv_loc = max(1, h_loc // g_global)
+        start = (P.axis_index(par.mp) * h_loc) // g_global
+        k = jax.lax.dynamic_slice_in_dim(k, start, n_kv_loc, 2)
+        v = jax.lax.dynamic_slice_in_dim(v, start, n_kv_loc, 2)
+    kbuf, pbuf = _ring_write(cache["k"], cache["pos"], k, t, w_total, par, seq_sharded)
+    vbuf, _ = _ring_write(cache["v"], cache["pos"], v, t, w_total, par, seq_sharded)
+    merge = (par.mp,) if (par.mp and seq_sharded) else ()
+    out = _decode_attend(q, kbuf, vbuf, pbuf, t, kind_window, par, merge)
+    out = out.astype(dtype).reshape(b, 1, h_loc * hd)
+    y = out @ P.gather_param(w["wo"], ws["wo"], dtype)
+    if tp_attn:
+        y = P.psum(y, (par.mp,) if par.mp else ())
+    new_cache = {**cache, "k": kbuf, "v": vbuf, "pos": pbuf}
+    return y, new_cache
+
+
+def _cross_decode(x, w, ws, cache, cfg: ModelConfig, par: Par):
+    """Whisper cross-attention at decode: q vs precomputed encoder K/V."""
+    dtype = x.dtype
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    wq = P.gather_param(w["wq"], ws["wq"], dtype)
+    q = (x @ wq).reshape(b, 1, cfg.n_heads, hd)
+    ck, cv = cache["ck"], cache["cv"]  # (B, S_enc_loc, Hk, D)
+    pos_buf = jnp.arange(ck.shape[1], dtype=jnp.int32)
+    merge = (par.mp,) if par.mp else ()
+    out = _decode_attend(
+        q, ck, cv, pos_buf, jnp.int32(10**9), None, par, merge
+    )
+    out = out.astype(dtype).reshape(b, 1, cfg.q_dim)
+    return out @ P.gather_param(w["wo"], ws["wo"], dtype)
+
+
+def _rwkv_decode(x, w, ws, cache, cfg: ModelConfig, par: Par):
+    """Single-step RWKV6: time mix + channel mix with cached shift/state."""
+    dtype = x.dtype
+    b, _, d = x.shape
+    hd = cfg.resolved_head_dim
+    h_loc = cfg.n_heads // max(par.mp_size, 1)
+    g_ = lambda n: P.gather_param(w[n], ws[n], dtype)
+
+    xt = x[:, 0].astype(jnp.float32)  # (B, d)
+    mu = P.gather_param(w["mu"], ws["mu"], jnp.float32)
+    xprev = cache["shift_tm"]
+    mix = lambda i: (xt + mu[i] * (xprev - xt)).astype(dtype)
+
+    r = (mix(0) @ g_("wr")).astype(jnp.float32).reshape(b, h_loc, hd)
+    k = (mix(1) @ g_("wk")).astype(jnp.float32).reshape(b, h_loc, hd)
+    v = (mix(2) @ g_("wv")).astype(jnp.float32).reshape(b, h_loc, hd)
+    gate = mix(3) @ g_("wg")
+    w0 = P.gather_param(w["w0"], ws["w0"], jnp.float32)
+    lora = (jnp.tanh(mix(4) @ g_("wa")) @ g_("wb")).astype(jnp.float32)
+    logw = jnp.clip(-jnp.exp(jnp.clip(w0 + lora, -8.0, 8.0)), -1.0, -1e-6)
+    wdec = jnp.exp(logw).reshape(b, h_loc, hd)
+
+    u = P.gather_param(w["u"], ws["u"], jnp.float32)
+    S = cache["state"]  # (B, h_loc, hd, hd)
+    y = jnp.einsum("bhd,bhde->bhe", r, S) + jnp.einsum(
+        "bhd,hd,bhd,bhe->bhe", r, u, k, v
+    )
+    S_new = wdec[..., None] * S + jnp.einsum("bhd,bhe->bhde", k, v)
+
+    ln = P.gather_param(w["ln_x"], ws["ln_x"], jnp.float32).reshape(h_loc, hd)
+    yn = y * jax.lax.rsqrt(jnp.mean(y * y, -1, keepdims=True) + 1e-6) * ln
+    yn = yn.reshape(b, 1, h_loc * hd).astype(dtype)
+    out = (yn * jax.nn.silu(gate[:, None])) @ g_("wo")
+    out = P.psum(out, (par.mp,) if par.mp else ())
+    new_cache = {**cache, "state": S_new, "shift_tm": xt}
+    return out, new_cache
+
+
+def _rwkv_cm_decode(x, w, ws, cache, cfg: ModelConfig, par: Par):
+    dtype = x.dtype
+    xt = x[:, 0].astype(jnp.float32)
+    xk = (0.5 * (xt + cache["shift_cm"])).astype(dtype)
+    r = jax.nn.sigmoid(xk @ P.gather_param(w["cm_r"], ws["cm_r"], dtype))
+    h = jnp.square(jax.nn.relu(xk @ P.gather_param(w["cm_k"], ws["cm_k"], dtype)))
+    y = h @ P.gather_param(w["cm_v"], ws["cm_v"], dtype)
+    y = P.psum(y, (par.mp,) if par.mp else ())
+    return (r * y)[:, None], {**cache, "shift_cm": xt}
+
+
+def _rglru_decode(x, w, ws, cache, cfg: ModelConfig, par: Par):
+    dtype = x.dtype
+    b = x.shape[0]
+    g_ = lambda n: P.gather_param(w[n], ws[n], dtype)
+    xt = x[:, 0]
+    bx = xt @ g_("wx")  # (B, r_loc)
+    hist = cache["conv"]  # (B, 3, r_loc)
+    kern = g_("conv")  # (4, r_loc)
+    seq = jnp.concatenate([hist, bx[:, None]], axis=1)  # (B, 4, r)
+    bconv = jnp.einsum("bkr,kr->br", seq, kern)
+    a_gate = jax.nn.sigmoid((xt @ g_("wa")).astype(jnp.float32))
+    i_gate = jax.nn.sigmoid((xt @ g_("wi")).astype(jnp.float32))
+    lam = jax.nn.softplus(P.gather_param(w["lam"], ws["lam"], jnp.float32))
+    log_a = jnp.clip(-L._RGLRU_C * lam * a_gate, -60.0, -1e-6)
+    beta = jnp.sqrt(1.0 - jnp.exp(2.0 * log_a))
+    h = jnp.exp(log_a) * cache["state"] + beta * (
+        i_gate * bconv.astype(jnp.float32)
+    )
+    gate = jax.nn.gelu(xt @ g_("wgate"))
+    y = ((h.astype(dtype) * gate) @ g_("wo"))[:, None]
+    y = P.psum(y, (par.mp,) if par.mp else ())
+    new_cache = {
+        **cache,
+        "state": h,
+        "conv": jnp.concatenate([hist[:, 1:], bx[:, None].astype(jnp.float32)], 1),
+    }
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Full decode step
+# ---------------------------------------------------------------------------
+
+
+def _decode_block(x, w, ws, cache, cfg, par, kind, t, seq_len,
+                  serve_tp=False):
+    dtype = x.dtype
+    if kind == "attn":
+        h = L.apply_norm(x, w["ln1"], ws["ln1"], cfg.norm, dtype)
+        win = cfg.swa_window or cfg.local_attn_window
+        a, cache = _attn_decode(h, w["attn"], ws["attn"], cache, cfg, par, t,
+                                seq_len, win, serve_tp=serve_tp)
+        x = x + a
+        if "cross" in w:
+            h = L.apply_norm(x, w["ln_cross"], ws["ln_cross"], cfg.norm, dtype)
+            x = x + _cross_decode(h, w["cross"], ws["cross"], cache, cfg, par)
+        h = L.apply_norm(x, w["ln2"], ws["ln2"], cfg.norm, dtype)
+        if cfg.moe is not None:
+            b, _, d = h.shape
+            gathered = tuple(
+                P.gather_param(w["ffn"][n], ws["ffn"][n], dtype)
+                for n in ("router", "w1", "w2", "w3")
+            )
+            y, _ = L._moe_tokens(h.reshape(b, d), gathered, cfg)
+            y = y.reshape(b, 1, d)
+            if "dense" in w["ffn"]:
+                dw = tuple(
+                    P.gather_param(w["ffn"]["dense"][n], ws["ffn"]["dense"][n], dtype)
+                    for n in ("w1", "w2", "w3")
+                )
+                y = y + L._mlp_core(h, dw[0], dw[1], dw[2], "swiglu")
+            y = P.psum(y, (par.mp,) if par.mp else ())
+        else:
+            y = L.mlp_tp(h, w["ffn"], ws["ffn"], cfg, par)
+        return x + y, cache
+    if kind == "rwkv":
+        h = L.apply_norm(x, w["ln1"], ws["ln1"], cfg.norm, dtype)
+        a, cache = _rwkv_decode(h, w["mix"], ws["mix"], cache, cfg, par)
+        x = x + a
+        h = L.apply_norm(x, w["ln2"], ws["ln2"], cfg.norm, dtype)
+        y, cache = _rwkv_cm_decode(h, w["mix"], ws["mix"], cache, cfg, par)
+        return x + y, cache
+    if kind == "rglru":
+        h = L.apply_norm(x, w["ln1"], ws["ln1"], cfg.norm, dtype)
+        a, cache = _rglru_decode(h, w["mix"], ws["mix"], cache, cfg, par)
+        x = x + a
+        h = L.apply_norm(x, w["ln2"], ws["ln2"], cfg.norm, dtype)
+        return x + L.mlp_tp(h, w["ffn"], ws["ffn"], cfg, par), cache
+    raise ValueError(kind)
+
+
+def vocab_parallel_argmax(logits, par: Par):
+    """Greedy sampling over vocab-sharded logits. logits: (B, 1, V_loc)."""
+    v_loc = logits.shape[-1]
+    shard = P.axis_index(par.mp)
+    local_max = jnp.max(logits, -1)
+    local_arg = jnp.argmax(logits, -1).astype(jnp.int32) + shard * v_loc
+    axes = (par.mp,) if par.mp else ()
+    m = P.pmax(local_max, axes)
+    winner = jnp.where(local_max >= m, local_arg, jnp.int32(2**30))
+    return -P.pmax(-winner, axes)  # pmin
+
+
+def decode_step(
+    params: Tree,
+    specs: Tree,
+    cache: Tree,
+    token: jax.Array,  # (B, 1) int32 — current input token
+    cfg: ModelConfig,
+    par: Par,
+    seq_len: int,
+    dtype=jnp.bfloat16,
+    serve_tp: bool = False,
+):
+    """One serve step: token_t → (next_token, logits over local vocab shard,
+    updated cache). ``cache['t']`` is the absolute position of `token`.
+
+    ``serve_tp``: TP-resident serving layout (§Perf iteration C) — weights
+    stay sharded over `model` (head-parallel attention, replicated window
+    ring), no per-layer FSDP gathers."""
+    t = cache["t"]
+    x = L.embed_tokens(token, params["embed"], specs["embed"], cfg, par, dtype, sp=False)
+
+    p = len(cfg.block_pattern)
+    n_groups, rem = divmod(cfg.n_layers, p)
+    kinds = layer_kinds(cfg)
+    new_cache: Tree = {"t": t + 1}
+
+    if n_groups:
+        slots = sorted(params["blocks"].keys())
+        new_cache["blocks"] = {}
+
+        def body(carry, inp):
+            xg = carry
+            idx = inp
+            updated = []
+            for si, slot in enumerate(slots):
+                wsl = _tree_index(params["blocks"][slot], idx)
+                cs = _tree_index(cache["blocks"][slot], idx)
+                ws_ = jax.tree.map(
+                    _unstack_spec, specs["blocks"][slot],
+                    is_leaf=lambda s: isinstance(s, WSpec),
+                )
+                xg, cs2 = _decode_block(
+                    xg, wsl, ws_, cs, cfg, par, cfg.block_pattern[si], t,
+                    seq_len, serve_tp=serve_tp,
+                )
+                updated.append(cs2)
+            return xg, tuple(updated)
+
+        x, stacked = jax.lax.scan(body, x, jnp.arange(n_groups))
+        for si, slot in enumerate(slots):
+            new_cache["blocks"][slot] = stacked[si]
+
+    for j in range(rem):
+        x, cs2 = _decode_block(
+            x, params[f"extra{j}"], specs[f"extra{j}"], cache[f"extra{j}"],
+            cfg, par, kinds[n_groups * p + j], t, seq_len, serve_tp=serve_tp,
+        )
+        new_cache[f"extra{j}"] = cs2
+
+    x = L.apply_norm(x, params["final_norm"], specs["final_norm"], cfg.norm, dtype)
+    head = P.gather_param(params["embed"]["head"], specs["embed"]["head"], dtype)
+    logits = (x @ head).astype(jnp.float32)  # (B, 1, V_loc)
+    next_token = vocab_parallel_argmax(logits, par)
+    return next_token, logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+
+def _ring_from_full(kf, vf, prompt_len: int, w_total: int, par: Par):
+    """Assemble ring-cache shards from full-sequence K/V.
+
+    kf/vf: (..., B, S, Hk, D) with the prompt along axis -3. Returns the
+    (k, v, pos) ring triple holding the last ``w_total`` positions, laid out
+    so that slot s holds absolute position p ≡ s (mod w_total).
+    """
+    s = prompt_len
+    mp = max(par.mp_size, 1)
+    seq_sharded = par.mp is not None and w_total % mp == 0
+    w_loc = w_total // mp if seq_sharded else w_total
+    shard = P.axis_index(par.mp) if seq_sharded else jnp.int32(0)
+    slots = shard * w_loc + jnp.arange(w_loc, dtype=jnp.int32)
+    # largest p ≤ s-1 with p ≡ slot (mod W)
+    p = slots + ((s - 1 - slots) // w_total) * w_total
+    valid = (p >= 0) & (p < s) & (p > s - 1 - w_total)
+    idx = jnp.clip(p, 0, s - 1)
+    k = jnp.take(kf, idx, axis=-3)
+    v = jnp.take(vf, idx, axis=-3)
+    pos = jnp.where(valid, p, -1)
+    return k, v, pos
+
+
+def prefill(
+    params: Tree,
+    specs: Tree,
+    batch: Tree,  # tokens (B, S) (+frames/patches)
+    cfg: ModelConfig,
+    par: Par,
+    seq_len: int,
+    dtype=jnp.bfloat16,
+    kv_dtype=jnp.bfloat16,
+):
+    """Process a full prompt; returns (cache, hidden (B, S_loc|S, d)).
+
+    The forward runs the normal flash/chunked training path; capture hooks
+    collect per-layer K/V (attention) or final states (recurrence) and this
+    function lays them out into the decode cache."""
+    from repro.models import transformer as T
+
+    h, _, captured = T.forward_hidden(
+        params, specs, cfg, par, batch, dtype, remat=True, capture=True
+    )
+    s_prompt = batch["tokens"].shape[1]
+    mp = max(par.mp_size, 1)
+    cache: Tree = {"t": jnp.asarray(s_prompt, jnp.int32)}
+
+    def assemble(cap: Tree, kind: str) -> Tree:
+        out: Tree = {}
+        if kind == "attn":
+            kf, vf = cap["kv_full"]
+            w_total = attn_cache_len(cfg, "attn", seq_len)
+            k, v, pos = _ring_from_full(kf, vf, s_prompt, w_total, par)
+            if kf.ndim == 5:  # stacked over groups → pos broadcast per group
+                pos = jnp.broadcast_to(pos, (kf.shape[0],) + pos.shape)
+            out.update({"k": k.astype(kv_dtype), "v": v.astype(kv_dtype), "pos": pos})
+            if "cross_kv_full" in cap:
+                ckf, cvf = cap["cross_kv_full"]  # (..., B, S_enc, Hk, D)
+                s_enc = ckf.shape[-3]
+                loc = s_enc // mp
+                shard = P.axis_index(par.mp)
+                start = shard * loc if par.mp else jnp.int32(0)
+                ax = ckf.ndim - 3
+                out["ck"] = jax.lax.dynamic_slice_in_dim(ckf, start, loc, ax).astype(kv_dtype)
+                out["cv"] = jax.lax.dynamic_slice_in_dim(cvf, start, loc, ax).astype(kv_dtype)
+            return out
+        if kind == "rwkv":
+            return {
+                "state": cap["state"],
+                "shift_tm": cap["shift_tm"],
+                "shift_cm": cap["shift_cm"],
+            }
+        if kind == "rglru":
+            return {"state": cap["state"], "conv": cap["conv"]}
+        raise ValueError(kind)
+
+    p = len(cfg.block_pattern)
+    n_groups, rem = divmod(cfg.n_layers, p)
+    kinds = layer_kinds(cfg)
+    if n_groups:
+        cache["blocks"] = {
+            slot: assemble(cap, cfg.block_pattern[int(slot[4:])])
+            for slot, cap in captured["blocks"].items()
+        }
+    for j in range(rem):
+        cache[f"extra{j}"] = assemble(
+            captured[f"extra{j}"], kinds[n_groups * p + j]
+        )
+    return cache, h

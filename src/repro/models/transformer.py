@@ -1,0 +1,518 @@
+"""Transformer assembly: specs, forward, loss, train step.
+
+A model is a dict pytree of parameters plus a mirrored dict of WSpecs.
+Layers are stacked per pattern-slot and executed with one lax.scan over
+layer groups (compile time independent of depth); the remainder layers of a
+non-divisible pattern (e.g. recurrentgemma's 38 = 12×3 + 2) are unrolled.
+
+Families:
+  dense / moe / vlm — decoder-only, SP mode
+  ssm / hybrid      — RWKV6 / RG-LRU (+ local attention), TP mode
+  encdec            — whisper: SP encoder + SP decoder with cross-attention
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import par as P
+from repro.distributed.par import Par, WDef, WSpec
+from repro.models import layers as L
+from repro.models.config import ModelConfig, layer_kinds
+from repro.optim import adamw_init, adamw_update, warmup_cosine
+
+Tree = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Spec assembly
+# ---------------------------------------------------------------------------
+
+
+def _slot_defs(
+    cfg: ModelConfig, kind: str, cross: bool = False, serve_tp: bool = False
+) -> Tree:
+    d = cfg.d_model
+    if kind == "attn":
+        defs: Tree = {
+            "ln1": L.norm_defs(d),
+            "attn": (
+                L.attn_defs(cfg)
+                if cfg.parallel_mode == "sp" and not serve_tp
+                else L.attn_tp_defs(cfg)
+            ),
+            "ln2": L.norm_defs(d),
+            "ffn": L.moe_defs(cfg) if cfg.moe is not None else L.mlp_defs(cfg),
+        }
+        if cross:
+            defs["ln_cross"] = L.norm_defs(d)
+            defs["cross"] = L.attn_defs(cfg, cross=True)
+        return defs
+    if kind == "rglru":
+        return {
+            "ln1": L.norm_defs(d),
+            "mix": L.rglru_defs(cfg),
+            "ln2": L.norm_defs(d),
+            "ffn": L.mlp_defs(cfg),
+        }
+    if kind == "rwkv":
+        return {
+            "ln1": L.norm_defs(d),
+            "ln2": L.norm_defs(d),
+            "mix": L.rwkv_defs(cfg),
+        }
+    raise ValueError(kind)
+
+
+def _stack_defs(defs: Tree, n: int) -> Tree:
+    """Prefix a group dimension onto every WDef in a subtree."""
+
+    def walk(x):
+        if isinstance(x, dict):
+            return {k: walk(v) for k, v in x.items()}
+        return dataclasses.replace(
+            x,
+            shape=(n,) + x.shape,
+            tp_dim=None if x.tp_dim is None else x.tp_dim + 1,
+            fsdp_pref=tuple(d + 1 for d in x.fsdp_pref),
+        )
+
+    return walk(defs)
+
+
+def model_defs(cfg: ModelConfig, serve_tp: bool = False) -> Tree:
+    kinds = layer_kinds(cfg)
+    p = len(cfg.block_pattern)
+    n_groups, rem = divmod(cfg.n_layers, p)
+    cross = cfg.family == "encdec"
+
+    defs: Tree = {"embed": L.embed_defs(cfg), "final_norm": L.norm_defs(cfg.d_model)}
+    if n_groups:
+        defs["blocks"] = {
+            f"slot{i}": _stack_defs(
+                _slot_defs(cfg, cfg.block_pattern[i], cross, serve_tp),
+                n_groups,
+            )
+            for i in range(p)
+        }
+    for j in range(rem):
+        defs[f"extra{j}"] = _slot_defs(
+            cfg, kinds[n_groups * p + j], cross, serve_tp
+        )
+
+    if cfg.family == "encdec":
+        enc_cfg = dataclasses.replace(cfg, moe=None)
+        defs["enc_blocks"] = _stack_defs(
+            _slot_defs(enc_cfg, "attn"), cfg.encoder_layers
+        )
+        defs["enc_norm"] = L.norm_defs(cfg.d_model)
+    return defs
+
+
+def build_specs(
+    cfg: ModelConfig, mesh_sizes: dict[str, int], mp_axis,
+    exclude_fsdp: tuple[str, ...] = (),
+    serve_tp: bool = False,
+) -> Tree:
+    def walk(x):
+        if isinstance(x, dict):
+            return {k: walk(v) for k, v in x.items()}
+        return P.resolve(x, mesh_sizes, mp_axis, exclude_fsdp)
+
+    return walk(model_defs(cfg, serve_tp=serve_tp))
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def _block_fwd(
+    x, w, ws, cfg: ModelConfig, par: Par, kind: str, enc=None, capture=False
+):
+    """One block. x: (B, S_loc, d) SP / (B, S, d) TP.
+
+    Returns (x, aux, cache) — cache is the serving-cache contribution of
+    this layer when ``capture`` (prefill), else {}.
+    """
+    dtype = x.dtype
+    aux = {}
+    cache = {}
+    if kind == "attn":
+        h = L.apply_norm(x, w["ln1"], ws["ln1"], cfg.norm, dtype)
+        if cfg.parallel_mode == "sp":
+            a = L.attn_sp(
+                h, w["attn"], ws["attn"], cfg, par,
+                causal=True,  # decoder self-attention (encoder has own path)
+                window=cfg.swa_window, return_kv=capture,
+            )
+        else:
+            a = L.attn_tp(
+                h, w["attn"], ws["attn"], cfg, par,
+                window=cfg.local_attn_window, return_kv=capture,
+            )
+        if capture:
+            a, (kf, vf) = a
+            cache["kv_full"] = (kf, vf)
+        x = x + a
+        if "cross" in w and enc is not None:
+            h = L.apply_norm(x, w["ln_cross"], ws["ln_cross"], cfg.norm, dtype)
+            c = L.attn_sp(
+                h, w["cross"], ws["cross"], cfg, par,
+                causal=False, kv_source=enc, use_rope=False, return_kv=capture,
+            )
+            if capture:
+                c, (ckf, cvf) = c
+                cache["cross_kv_full"] = (ckf, cvf)
+            x = x + c
+        h = L.apply_norm(x, w["ln2"], ws["ln2"], cfg.norm, dtype)
+        if cfg.moe is not None:
+            y, aux = L.moe_sp(h, w["ffn"], ws["ffn"], cfg, par)
+        elif cfg.parallel_mode == "sp":
+            y = L.mlp_sp(h, w["ffn"], ws["ffn"], cfg, par)
+        else:
+            y = L.mlp_tp(h, w["ffn"], ws["ffn"], cfg, par)
+        return x + y, aux, cache
+    if kind == "rglru":
+        h = L.apply_norm(x, w["ln1"], ws["ln1"], cfg.norm, dtype)
+        m = L.rglru_mix(h, w["mix"], ws["mix"], cfg, par, return_state=capture)
+        if capture:
+            m, (state, hist) = m
+            cache["state"], cache["conv"] = state, hist
+        x = x + m
+        h = L.apply_norm(x, w["ln2"], ws["ln2"], cfg.norm, dtype)
+        return x + L.mlp_tp(h, w["ffn"], ws["ffn"], cfg, par), aux, cache
+    if kind == "rwkv":
+        # Time-chunked whole-block processing (§Perf iteration B): bounds
+        # the live working set to (B, chunk, d) while the recurrence state
+        # and token-shift boundaries carry across chunks — identical math.
+        x, cap = L.rwkv_block_chunked(
+            x, w, ws, cfg, par, cfg.norm, chunk=512, capture=capture
+        )
+        if capture:
+            cache.update(cap)
+        return x, aux, cache
+    raise ValueError(kind)
+
+
+def _encoder_block_fwd(x, w, ws, cfg: ModelConfig, par: Par):
+    dtype = x.dtype
+    h = L.apply_norm(x, w["ln1"], ws["ln1"], cfg.norm, dtype)
+    x = x + L.attn_sp(h, w["attn"], ws["attn"], cfg, par, causal=False)
+    h = L.apply_norm(x, w["ln2"], ws["ln2"], cfg.norm, dtype)
+    return x + L.mlp_sp(h, w["ffn"], ws["ffn"], cfg, par)
+
+
+def _tree_index(tree: Tree, i) -> Tree:
+    return jax.tree.map(lambda a: a[i], tree)
+
+
+def _scan_groups(
+    x, params, specs, cfg, par, kinds_pattern, n_groups, enc, remat,
+    capture=False, unroll=False,
+):
+    """lax.scan over layer groups; each group runs the full block pattern."""
+    slots = sorted(params.keys())  # slot0, slot1, ...
+
+    def group_body(carry, idx):
+        xg = carry
+
+        def run(xg):
+            auxes = []
+            caches = {}
+            for si, slot in enumerate(slots):
+                w = _tree_index(params[slot], idx)
+                ws_leaf = jax.tree.map(
+                    _unstack_spec, specs[slot],
+                    is_leaf=lambda s: isinstance(s, WSpec),
+                )
+                xg, aux, cache = _block_fwd(
+                    xg, w, ws_leaf, cfg, par, kinds_pattern[si], enc,
+                    capture=capture,
+                )
+                if aux:
+                    auxes.append(aux)
+                if capture:
+                    caches[slot] = cache
+            aux_out = (
+                jax.tree.map(lambda *a: jnp.mean(jnp.stack(a)), *auxes)
+                if auxes
+                else {"lb_loss": jnp.zeros(()), "drop_frac": jnp.zeros(())}
+            )
+            return xg, (aux_out, caches)
+
+        if remat:
+            run = jax.checkpoint(run)
+        xg, out = run(xg)
+        return xg, out
+
+    # Two-level (√L) remat: for deep stacks the per-group carry stack
+    # dominates HBM (L × (B, S_loc, d)); nesting scans keeps only
+    # outer + inner carries live at the cost of one extra forward.
+    inner = 1
+    if not unroll and not capture and n_groups >= 8:
+        inner = max(
+            (f for f in range(2, int(n_groups**0.5) + 1) if n_groups % f == 0),
+            default=1,
+        )
+    if inner > 1:
+        outer = n_groups // inner
+
+        def outer_body(carry, idxs):
+            def run_inner(c):
+                return jax.lax.scan(group_body, c, idxs)
+
+            return jax.checkpoint(run_inner)(carry)
+
+        idx2 = jnp.arange(n_groups).reshape(outer, inner)
+        x, (auxes, caches) = jax.lax.scan(outer_body, x, idx2)
+        auxes = jax.tree.map(lambda a: a.reshape((-1,) + a.shape[2:]), auxes)
+    else:
+        x, (auxes, caches) = jax.lax.scan(
+            group_body, x, jnp.arange(n_groups),
+            unroll=n_groups if unroll else 1,
+        )
+    return x, jax.tree.map(jnp.mean, auxes), caches
+
+
+def _unstack_spec(s: WSpec) -> WSpec:
+    """Drop the group dimension from a stacked spec (for per-layer use)."""
+    return dataclasses.replace(
+        s,
+        shape=s.shape[1:],
+        tp_dim=None if s.tp_dim is None else s.tp_dim - 1,
+        fsdp_dim=None if s.fsdp_dim is None else s.fsdp_dim - 1,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def forward_hidden(
+    params: Tree,
+    specs: Tree,
+    cfg: ModelConfig,
+    par: Par,
+    batch: Tree,
+    dtype=jnp.bfloat16,
+    remat: bool = True,
+    capture: bool = False,
+    unroll: bool = False,
+):
+    """Token ids (+ stub frontend inputs) → final-norm hidden states.
+
+    SP: returns (B, S_loc, d) seq-sharded; TP: (B, S, d).
+    Returns (hidden, aux[, capture tree]) with MoE aux metrics.
+    """
+    sp = cfg.parallel_mode == "sp"
+    x = L.embed_tokens(
+        batch["tokens"], params["embed"], specs["embed"], cfg, par, dtype, sp
+    )
+
+    if cfg.family == "vlm":
+        # Stub anyres frontend: patch embeddings occupy global positions
+        # [0, patch_positions); overwrite the token embeddings there.
+        patches = batch["patches"].astype(dtype)  # (B, Ppos, d)
+        s_loc = x.shape[1]
+        shard = P.axis_index(par.mp)
+        gpos = shard * s_loc + jnp.arange(s_loc, dtype=jnp.int32)
+        rows = jnp.take(
+            patches, jnp.clip(gpos, 0, cfg.patch_positions - 1), axis=1
+        )
+        x = jnp.where((gpos < cfg.patch_positions)[None, :, None], rows, x)
+
+    enc = None
+    if cfg.family == "encdec":
+        enc = batch["frames"].astype(dtype)  # (B, S_enc_loc, d) seq-sharded
+        enc_params, enc_specs = params["enc_blocks"], specs["enc_blocks"]
+
+        def enc_body(carry, idx):
+            w = _tree_index(enc_params, idx)
+            ws_ = jax.tree.map(
+                _unstack_spec, enc_specs,
+                is_leaf=lambda s: isinstance(s, WSpec),
+            )
+
+            def run(c):
+                return _encoder_block_fwd(c, w, ws_, cfg, par)
+
+            if remat:
+                run = jax.checkpoint(run)
+            return run(carry), None
+
+        enc, _ = jax.lax.scan(enc_body, enc, jnp.arange(cfg.encoder_layers))
+        enc = L.apply_norm(enc, params["enc_norm"], specs["enc_norm"], cfg.norm, dtype)
+
+    p = len(cfg.block_pattern)
+    n_groups, rem = divmod(cfg.n_layers, p)
+    aux = {"lb_loss": jnp.zeros(()), "drop_frac": jnp.zeros(())}
+    captured: Tree = {}
+    if n_groups:
+        x, aux, blk_caps = _scan_groups(
+            x, params["blocks"], specs["blocks"], cfg, par,
+            cfg.block_pattern, n_groups, enc, remat, capture=capture,
+            unroll=unroll,
+        )
+        if capture:
+            captured["blocks"] = blk_caps
+    kinds = layer_kinds(cfg)
+    for j in range(rem):
+        x, _, cap = _block_fwd(
+            x, params[f"extra{j}"], specs[f"extra{j}"], cfg, par,
+            kinds[n_groups * p + j], enc, capture=capture,
+        )
+        if capture:
+            captured[f"extra{j}"] = cap
+
+    x = L.apply_norm(x, params["final_norm"], specs["final_norm"], cfg.norm, dtype)
+    if capture:
+        return x, aux, captured
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# Loss & train step
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(
+    params, specs, cfg: ModelConfig, par: Par, batch, dtype=jnp.bfloat16,
+    remat: bool = True, lb_coef: float = 0.01, unroll: bool = False,
+):
+    h, aux = forward_hidden(
+        params, specs, cfg, par, batch, dtype, remat, unroll=unroll
+    )
+    head_w = params["embed"]
+    head_s = specs["embed"]
+    if cfg.tie_embeddings:
+        raise NotImplementedError("untied embeddings only")
+    ce = L.ce_loss_sp if cfg.parallel_mode == "sp" else L.ce_loss_tp
+    nll_sum, count_local = ce(h, batch["labels"], head_w, head_s, cfg, par)
+    # both CE paths return totals replicated over model (vocab psums inside)
+    sum_axes = par.dp
+    total = P.psum(nll_sum, sum_axes)
+    count = P.psum(jnp.asarray(count_local, jnp.float32), sum_axes)
+    loss = total / count
+    if cfg.moe is not None:
+        loss = loss + lb_coef * aux["lb_loss"]
+    metrics = {"loss": loss, "nll": total / count, **aux}
+    return loss, metrics
+
+
+def _replica_sizes(specs: Tree, mesh_sizes: dict[str, int]):
+    return jax.tree.map(
+        lambda s: float(s.replicas(mesh_sizes)),
+        specs,
+        is_leaf=lambda s: isinstance(s, WSpec),
+    )
+
+
+def global_grad_norm(grads, specs, mesh_sizes, all_axes):
+    reps = _replica_sizes(specs, mesh_sizes)
+    sq = jax.tree.map(
+        lambda g, r: jnp.sum(jnp.square(g.astype(jnp.float32))) / r, grads, reps
+    )
+    total = functools.reduce(jnp.add, jax.tree.leaves(sq))
+    return jnp.sqrt(P.psum(total, all_axes))
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    mesh_sizes: dict[str, int],
+    par: Par,
+    dtype=jnp.bfloat16,
+    remat: bool = True,
+    clip_norm: float = 1.0,
+    peak_lr: float = 3e-4,
+    unroll: bool = False,
+    compress_axes: tuple[str, ...] = (),
+    warmup_steps: int = 200,
+) -> tuple[Callable, Tree]:
+    """Build (train_step, specs).
+
+    Default: train_step(params, opt, batch) → (params, opt, metrics).
+    With ``compress_axes`` (e.g. ("pod",)): parameters stay replicated over
+    those (DCN) axes and their gradient reduction is int8-compressed with
+    error feedback; the step signature grows an error-state pytree:
+    train_step(params, opt, err, batch) → (params, opt, err, metrics).
+    """
+    from repro.optim.compression import compressed_pmean
+
+    specs = build_specs(cfg, mesh_sizes, par.mp, exclude_fsdp=compress_axes)
+    all_axes = par.dp + ((par.mp,) if par.mp else ())
+
+    def _sync(grads, err_state):
+        """Per-leaf grad sync: compressed mean over compress_axes (error
+        feedback), plain psum over remaining sync axes."""
+
+        def walk(g, sp, err):
+            if isinstance(g, dict):
+                outs = {k: walk(g[k], sp[k], err[k]) for k in g}
+                return (
+                    {k: o[0] for k, o in outs.items()},
+                    {k: o[1] for k, o in outs.items()},
+                )
+            comp = tuple(a for a in sp.sync if a in compress_axes)
+            rest = tuple(a for a in sp.sync if a not in compress_axes)
+            if rest:
+                g = P.psum(g, rest)
+            if comp:
+                # pmean over the pod axis ≈ psum/n — matches the loss,
+                # which averages over the global batch via its own psums.
+                n = 1
+                for a in comp:
+                    n *= mesh_sizes.get(a, 1)
+                g2, err2 = compressed_pmean(g, err, comp)
+                return g2 * n, err2
+            return g, err
+
+        return walk(grads, specs, err_state)
+
+    def train_step(params, opt_state, *rest):
+        if compress_axes:
+            err_state, batch = rest
+        else:
+            (batch,) = rest
+            err_state = None
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(
+                p, specs, cfg, par, batch, dtype, remat, unroll=unroll
+            ),
+            has_aux=True,
+        )(params)
+        if compress_axes:
+            grads, err_state = _sync(grads, err_state)
+        else:
+            grads = P.sync_grads(grads, specs)
+        gnorm = global_grad_norm(grads, specs, mesh_sizes, all_axes)
+        scale = jnp.minimum(1.0, clip_norm / (gnorm + 1e-6))
+        lr = warmup_cosine(opt_state.step, peak_lr=peak_lr, warmup_steps=warmup_steps)
+        new_params, new_opt = adamw_update(
+            grads, opt_state, params, lr, grad_scale=scale
+        )
+        metrics = {**metrics, "grad_norm": gnorm, "lr": lr}
+        if compress_axes:
+            return new_params, new_opt, err_state, metrics
+        return new_params, new_opt, metrics
+
+    return train_step, specs
+
+
+def init_model(cfg: ModelConfig, key, mesh_sizes=None, mp_axis=None, local=False):
+    """Materialize params (+ AdamW state) — smoke tests & small runs."""
+    specs = build_specs(cfg, mesh_sizes or {}, mp_axis)
+    params = P.init_tree(key, specs, local=local, mesh_sizes=mesh_sizes or {}, mp_axis=mp_axis)
+    return params, specs
+
+
+def init_opt(params, dtype=None):
+    import jax.numpy as _jnp
+
+    return adamw_init(params, dtype=_jnp.dtype(dtype or "float32"))

@@ -1,0 +1,6 @@
+"""Optimizers and gradient machinery (sharding-agnostic, elementwise)."""
+
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from repro.optim.schedule import warmup_cosine
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "warmup_cosine"]

@@ -1,0 +1,63 @@
+"""AdamW, elementwise over arbitrarily sharded pytrees.
+
+Because every parameter is stored fully sharded (ZeRO-3, DESIGN.md §5) and
+gradients arrive via reduce-scatter in the same layout, the update is purely
+local — zero optimizer-step communication. States are f32 regardless of the
+parameter dtype.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array  # () int32
+    m: Any  # pytree like params, f32
+    v: Any  # pytree like params, f32
+
+
+def adamw_init(params, dtype=jnp.float32) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, dtype), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros, v=jax.tree.map(jnp.copy, zeros))
+
+
+def adamw_update(
+    grads,
+    state: AdamWState,
+    params,
+    lr: jax.Array,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    grad_scale=None,
+):
+    t = state.step + 1
+    tf = t.astype(jnp.float32)
+    c1 = 1.0 - b1**tf
+    c2 = 1.0 - b2**tf
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        if grad_scale is not None:
+            g = g * grad_scale  # fused clip: no scaled full-tree copy
+        mf, vf = m.astype(jnp.float32), v.astype(jnp.float32)
+        m2 = b1 * mf + (1.0 - b1) * g
+        v2 = b2 * vf + (1.0 - b2) * g * g
+        step = (m2 / c1) / (jnp.sqrt(v2 / c2) + eps)
+        p2 = p.astype(jnp.float32) - lr * (step + weight_decay * p.astype(jnp.float32))
+        return m2.astype(m.dtype), v2.astype(v.dtype), p2.astype(p.dtype)
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_m = treedef.unflatten([o[0] for o in out])
+    new_v = treedef.unflatten([o[1] for o in out])
+    new_p = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step=t, m=new_m, v=new_v)

@@ -1,0 +1,19 @@
+"""Learning-rate schedules."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(
+    step,
+    peak_lr: float = 3e-4,
+    warmup_steps: int = 200,
+    total_steps: int = 10_000,
+    floor: float = 0.1,
+):
+    s = step.astype(jnp.float32)
+    warm = peak_lr * jnp.minimum(1.0, s / max(warmup_steps, 1))
+    frac = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1), 0, 1)
+    cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+    return jnp.where(s < warmup_steps, warm, cos)

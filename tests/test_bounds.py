@@ -1,0 +1,179 @@
+"""Unit + property tests for the collapsible bounds (paper §3.1).
+
+The exactness of FlyMC rests on 0 < B_n ≤ L_n everywhere and on the collapsed
+quadratic form equaling the dense product — both are property-tested here.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core.bounds import (
+    GLMData,
+    LogisticBound,
+    SoftmaxBound,
+    StudentTBound,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+def _logistic_data(seed, n=32, d=5):
+    r = _rng(seed)
+    x = r.normal(size=(n, d)).astype(np.float32)
+    t = np.where(r.random(n) < 0.5, 1.0, -1.0).astype(np.float32)
+    xi = np.abs(r.normal(size=n)).astype(np.float32) * 2 + 1e-3
+    return GLMData(jnp.asarray(x), jnp.asarray(t), jnp.asarray(xi))
+
+
+class TestLogisticBound:
+    @settings(deadline=None, max_examples=25)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_lower_bounds_likelihood(self, seed):
+        data = _logistic_data(seed)
+        theta = jnp.asarray(_rng(seed + 1).normal(size=5).astype(np.float32))
+        ll = LogisticBound.log_lik(theta, data)
+        lb = LogisticBound.log_bound(theta, data)
+        assert np.all(np.asarray(lb) <= np.asarray(ll) + 1e-5)
+
+    @settings(deadline=None, max_examples=25)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_collapsed_matches_dense_product(self, seed):
+        data = _logistic_data(seed)
+        theta = jnp.asarray(_rng(seed + 1).normal(size=5).astype(np.float32))
+        stats = LogisticBound.suffstats(data)
+        dense = jnp.sum(LogisticBound.log_bound(theta, data))
+        collapsed = LogisticBound.collapsed(theta, stats)
+        np.testing.assert_allclose(collapsed, dense, rtol=2e-4, atol=2e-4)
+
+    def test_tight_at_xi(self):
+        # B is tight where |t·θᵀx| = ξ (both signs).
+        data = _logistic_data(0, n=16)
+        theta = jnp.asarray(_rng(7).normal(size=5).astype(np.float32))
+        tuned = LogisticBound.tighten(theta, data)
+        ll = LogisticBound.log_lik(theta, tuned)
+        lb = LogisticBound.log_bound(theta, tuned)
+        np.testing.assert_allclose(lb, ll, rtol=1e-4, atol=1e-5)
+
+    def test_xi_zero_limit_is_finite_and_valid(self):
+        data = _logistic_data(3)._replace(xi=jnp.zeros(32))
+        theta = jnp.asarray(_rng(5).normal(size=5).astype(np.float32))
+        lb = LogisticBound.log_bound(theta, data)
+        ll = LogisticBound.log_lik(theta, data)
+        assert np.all(np.isfinite(np.asarray(lb)))
+        assert np.all(np.asarray(lb) <= np.asarray(ll) + 1e-5)
+
+
+def _softmax_data(seed, n=32, d=4, k=3, tuned=False):
+    r = _rng(seed)
+    x = r.normal(size=(n, d)).astype(np.float32)
+    t = r.integers(0, k, size=n).astype(np.int32)
+    xi = (
+        r.normal(size=(n, k)).astype(np.float32)
+        if tuned
+        else np.zeros((n, k), np.float32)
+    )
+    return GLMData(jnp.asarray(x), jnp.asarray(t), jnp.asarray(xi))
+
+
+class TestSoftmaxBound:
+    @settings(deadline=None, max_examples=25)
+    @given(seed=st.integers(0, 2**31 - 1), tuned=st.booleans())
+    def test_lower_bounds_likelihood(self, seed, tuned):
+        data = _softmax_data(seed, tuned=tuned)
+        theta = jnp.asarray(_rng(seed + 1).normal(size=(3, 4)).astype(np.float32))
+        ll = SoftmaxBound.log_lik(theta, data)
+        lb = SoftmaxBound.log_bound(theta, data)
+        assert np.all(np.asarray(lb) <= np.asarray(ll) + 1e-5)
+
+    @settings(deadline=None, max_examples=25)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_collapsed_matches_dense_product(self, seed):
+        data = _softmax_data(seed, tuned=True)
+        theta = jnp.asarray(_rng(seed + 1).normal(size=(3, 4)).astype(np.float32))
+        stats = SoftmaxBound.suffstats(data)
+        dense = jnp.sum(SoftmaxBound.log_bound(theta, data))
+        collapsed = SoftmaxBound.collapsed(theta, stats)
+        np.testing.assert_allclose(collapsed, dense, rtol=2e-4, atol=2e-4)
+
+    def test_tight_at_map_logits(self):
+        data = _softmax_data(11)
+        theta = jnp.asarray(_rng(12).normal(size=(3, 4)).astype(np.float32))
+        tuned = SoftmaxBound.tighten(theta, data)
+        ll = SoftmaxBound.log_lik(theta, tuned)
+        lb = SoftmaxBound.log_bound(theta, tuned)
+        np.testing.assert_allclose(lb, ll, rtol=1e-4, atol=1e-5)
+
+
+def _robust_data(seed, n=32, d=5):
+    r = _rng(seed)
+    x = r.normal(size=(n, d)).astype(np.float32)
+    y = r.normal(size=n).astype(np.float32) * 3
+    xi = r.normal(size=n).astype(np.float32)
+    return GLMData(jnp.asarray(x), jnp.asarray(y), jnp.asarray(xi))
+
+
+class TestStudentTBound:
+    @settings(deadline=None, max_examples=25)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        nu=st.floats(1.5, 10.0),
+        sigma=st.floats(0.5, 3.0),
+    )
+    def test_lower_bounds_likelihood(self, seed, nu, sigma):
+        bound = StudentTBound(nu=nu, sigma=sigma)
+        data = _robust_data(seed)
+        theta = jnp.asarray(_rng(seed + 1).normal(size=5).astype(np.float32))
+        ll = bound.log_lik(theta, data)
+        lb = bound.log_bound(theta, data)
+        assert np.all(np.asarray(lb) <= np.asarray(ll) + 1e-5)
+
+    @settings(deadline=None, max_examples=25)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_collapsed_matches_dense_product(self, seed):
+        bound = StudentTBound(nu=4.0)
+        data = _robust_data(seed)
+        theta = jnp.asarray(_rng(seed + 1).normal(size=5).astype(np.float32))
+        stats = bound.suffstats(data)
+        dense = jnp.sum(bound.log_bound(theta, data))
+        collapsed = bound.collapsed(theta, stats)
+        np.testing.assert_allclose(collapsed, dense, rtol=2e-4, atol=2e-4)
+
+    def test_tight_at_map_residual(self):
+        bound = StudentTBound(nu=4.0)
+        data = _robust_data(21)
+        theta = jnp.asarray(_rng(22).normal(size=5).astype(np.float32))
+        tuned = bound.tighten(theta, data)
+        ll = bound.log_lik(theta, tuned)
+        lb = bound.log_bound(theta, tuned)
+        np.testing.assert_allclose(lb, ll, rtol=1e-4, atol=1e-5)
+
+    def test_matches_scipy_logpdf(self):
+        from scipy import stats as sps
+
+        bound = StudentTBound(nu=4.0, sigma=1.3)
+        data = _robust_data(31)
+        theta = jnp.asarray(_rng(32).normal(size=5).astype(np.float32))
+        ours = np.asarray(bound.log_lik(theta, data))
+        r = np.asarray(data.t) - np.asarray(data.x) @ np.asarray(theta)
+        ref = sps.t.logpdf(r, df=4.0, scale=1.3)
+        np.testing.assert_allclose(ours, ref, rtol=1e-4, atol=1e-5)
+
+
+def test_marginalization_identity():
+    """Σ_z p(x,z|θ) == L_n(θ): the bound partition is exact (paper §2)."""
+    data = _logistic_data(5, n=16)
+    theta = jnp.asarray(_rng(6).normal(size=5).astype(np.float32))
+    ll = np.asarray(LogisticBound.log_lik(theta, data), np.float64)
+    lb = np.asarray(LogisticBound.log_bound(theta, data), np.float64)
+    # (L - B) + B == L, in log space:
+    recon = np.logaddexp(lb, np.log(np.maximum(np.exp(ll) - np.exp(lb), 1e-300)))
+    np.testing.assert_allclose(recon, ll, rtol=1e-6)

@@ -1,0 +1,99 @@
+"""Tests for the bright/dark partition structure (paper §3.3, Fig. 3)."""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import brightness
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_init_all_dark():
+    s = brightness.init(10)
+    assert int(s.num) == 0
+    assert not np.any(np.asarray(brightness.z_of(s)))
+    assert brightness.check_invariants(s)
+
+
+def test_brighten_darken_roundtrip():
+    s = brightness.init(8)
+    s = brightness.brighten(s, jnp.int32(3))
+    s = brightness.brighten(s, jnp.int32(5))
+    z = np.asarray(brightness.z_of(s))
+    assert z[3] and z[5] and z.sum() == 2
+    assert brightness.check_invariants(s)
+    s = brightness.darken(s, jnp.int32(3))
+    z = np.asarray(brightness.z_of(s))
+    assert (not z[3]) and z[5] and z.sum() == 1
+    assert brightness.check_invariants(s)
+
+
+def test_brighten_idempotent():
+    s = brightness.init(6)
+    s = brightness.brighten(s, jnp.int32(2))
+    s2 = brightness.brighten(s, jnp.int32(2))
+    assert int(s2.num) == 1
+    assert brightness.check_invariants(s2)
+
+
+def test_darken_idempotent_on_dark():
+    s = brightness.init(6)
+    s2 = brightness.darken(s, jnp.int32(4))
+    assert int(s2.num) == 0
+    assert brightness.check_invariants(s2)
+
+
+@settings(deadline=None, max_examples=50)
+@given(st.lists(st.booleans(), min_size=1, max_size=64))
+def test_from_z_invariants(bits):
+    z = jnp.asarray(np.array(bits))
+    s = brightness.from_z(z)
+    assert brightness.check_invariants(s)
+    np.testing.assert_array_equal(np.asarray(brightness.z_of(s)), np.array(bits))
+    assert int(s.num) == sum(bits)
+
+
+@settings(deadline=None, max_examples=30)
+@given(
+    st.integers(1, 40),
+    st.lists(st.tuples(st.integers(0, 39), st.booleans()), max_size=30),
+)
+def test_sequential_ops_match_batch(n, ops):
+    """O(1) paper ops and the vectorized rebuild yield the same z set."""
+    ops = [(i % n, b) for i, b in ops]
+    s = brightness.init(n)
+    z_ref = np.zeros(n, bool)
+    for i, b in ops:
+        if b:
+            s = brightness.brighten(s, jnp.int32(i))
+        else:
+            s = brightness.darken(s, jnp.int32(i))
+        z_ref[i] = b
+    assert brightness.check_invariants(s)
+    np.testing.assert_array_equal(np.asarray(brightness.z_of(s)), z_ref)
+    s_batch = brightness.from_z(jnp.asarray(z_ref))
+    np.testing.assert_array_equal(
+        np.asarray(brightness.z_of(s_batch)), z_ref
+    )
+
+
+def test_bright_buffer_padding():
+    z = jnp.asarray([True, False, True, False, False, True])
+    s = brightness.from_z(z)
+    idx, mask = brightness.bright_buffer(s, 4)
+    assert idx.shape == (4,) and mask.shape == (4,)
+    assert set(np.asarray(idx)[np.asarray(mask)]) == {0, 2, 5}
+    assert int(mask.sum()) == 3
+
+
+def test_bright_buffer_under_jit():
+    @jax.jit
+    def f(z):
+        s = brightness.from_z(z)
+        return brightness.bright_buffer(s, 4)
+
+    idx, mask = f(jnp.asarray([False, True, False, True, False, False]))
+    assert set(np.asarray(idx)[np.asarray(mask)]) == {1, 3}

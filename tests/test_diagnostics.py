@@ -1,0 +1,56 @@
+"""ESS estimator validation against analytic AR(1) autocorrelation time."""
+
+import numpy as np
+
+from repro.core import diagnostics
+
+
+def _ar1(phi, n, seed=0):
+    r = np.random.default_rng(seed)
+    x = np.zeros(n)
+    eps = r.normal(size=n) * np.sqrt(1 - phi**2)
+    for i in range(1, n):
+        x[i] = phi * x[i - 1] + eps[i]
+    return x
+
+
+def test_iid_chain_tau_is_one():
+    x = np.random.default_rng(0).normal(size=20000)
+    tau = diagnostics.integrated_autocorr_time(x)
+    assert 0.8 < tau < 1.3
+
+
+def test_ar1_tau_matches_analytic():
+    # AR(1): τ = (1 + φ) / (1 - φ)
+    for phi in (0.5, 0.8, 0.95):
+        x = _ar1(phi, 200_000, seed=int(phi * 100))
+        tau = diagnostics.integrated_autocorr_time(x)
+        expected = (1 + phi) / (1 - phi)
+        assert abs(tau - expected) / expected < 0.25, (phi, tau, expected)
+
+
+def test_ess_per_1000():
+    x = _ar1(0.9, 100_000, seed=3)
+    # τ = 19 → ≈ 52.6 effective samples per 1000 iterations
+    e = diagnostics.ess_per_1000_iters(x)
+    assert 35 < e < 75
+
+
+def test_multidim_ess_takes_min():
+    r = np.random.default_rng(1)
+    a = r.normal(size=50_000)
+    b = _ar1(0.95, 50_000, seed=2)
+    ess = diagnostics.effective_sample_size(np.stack([a, b], 1))
+    assert ess < 5_000  # dominated by the sticky coordinate
+
+
+def test_degenerate_chain():
+    assert diagnostics.integrated_autocorr_time(np.ones(100)) == 100.0
+
+
+def test_split_r_hat_converged_vs_not():
+    r = np.random.default_rng(5)
+    good = r.normal(size=(4, 5000))
+    assert diagnostics.split_r_hat(good) < 1.02
+    bad = good + np.arange(4)[:, None] * 3.0
+    assert diagnostics.split_r_hat(bad) > 1.5

@@ -1,0 +1,46 @@
+"""Run the multi-device test modules in subprocesses with 8 fake devices.
+
+The main pytest process must keep jax at 1 device (smoke tests and kernels
+assume it, and the brief forbids a global XLA_FLAGS override), so the
+distributed suites execute in child processes that set the flag before jax
+initializes.
+"""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def _run_in_subprocess(test_file: str) -> None:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = str(ROOT / "src")
+    proc = subprocess.run(
+        [sys.executable, "-m", "pytest", str(ROOT / "tests" / test_file),
+         "-q", "-x", "--no-header"],
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=1200,
+        cwd=ROOT,
+    )
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"{test_file} failed in 8-device subprocess:\n"
+            f"{proc.stdout[-4000:]}\n{proc.stderr[-2000:]}"
+        )
+
+
+@pytest.mark.slow
+def test_flymc_distributed_8dev():
+    _run_in_subprocess("test_flymc_distributed.py")
+
+
+@pytest.mark.slow
+def test_distributed_training_8dev():
+    _run_in_subprocess("test_distributed_training.py")
