@@ -46,6 +46,16 @@ def main() -> None:
             f"speedup={r.speedup:.2f}"
         )
 
+    # --- driver overhead (writes BENCH_flymc.json) -------------------------
+    from benchmarks.driver_overhead import main as bench_driver
+
+    rec = bench_driver(quick=args.quick)
+    rows.append(
+        f"driver/scan,{rec['scan_driver']['us_per_step']:.1f},"
+        f"legacy_us={rec['legacy_host_loop']['us_per_step']:.1f};"
+        f"overhead_ratio={rec['host_overhead_ratio']:.2f}"
+    )
+
     # --- §3.1 bound tightness ---------------------------------------------
     bt = check_paper_claim()
     print(

@@ -22,7 +22,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import diagnostics, samplers
+from repro import api
+from repro.core import diagnostics
 from repro.data import logistic_data, robust_data, softmax_data
 from repro.models.bayes_glm import GLMModel
 
@@ -36,58 +37,40 @@ class AlgoResult:
     us_per_iter: float
 
 
-def _run_flymc(model, kernel, theta0, key, iters, burn, q_db, step0):
-    spec = model.flymc_spec(
-        kernel=kernel,
-        capacity=max(256, int(0.05 * model.data.x.shape[0])),
-        cand_capacity=max(256, int(0.05 * model.data.x.shape[0])),
-        q_db=q_db,
-        adapt_target=(
-            None if kernel == "slice" else samplers.TARGET_ACCEPT[kernel]
-        ),
-    )
-    state, _, spec = model.init_chain(spec, theta0, key, step_size=step0)
-    t0 = time.time()
-    thetas, trace, total_q, _ = model.run_chain(spec, state, iters)
-    wall = time.time() - t0
-    s = np.stack(thetas)[burn:]
+def _finish(trace, burn):
+    """Common post-processing: burn, flatten, ESS, queries/iter, µs/iter."""
+    s = np.asarray(trace.theta[0])[burn:]
     if s.ndim == 3:  # softmax: flatten classes
         s = s.reshape(s.shape[0], -1)
     ess = diagnostics.ess_per_1000_iters(s[:, : min(10, s.shape[1])])
-    q_per_iter = np.mean([t["lik_queries"] for t in trace[burn:]])
+    q_per_iter = float(np.asarray(trace.stats.lik_queries[0])[burn:].mean())
+    return s, ess, q_per_iter
+
+
+def _run_flymc(model, kernel, theta0, key, iters, burn, q_db, step0):
+    cap = max(256, int(0.05 * model.data.x.shape[0]))
+    alg = api.firefly(
+        model, kernel=kernel, capacity=cap, cand_capacity=cap, q_db=q_db,
+        step_size=step0, adapt_target="auto",
+    )
+    t0 = time.time()
+    trace = api.sample(alg, key, iters, init_position=theta0)
+    jax.block_until_ready(trace.theta)
+    wall = time.time() - t0
+    s, ess, q_per_iter = _finish(trace, burn)
     return s, ess, q_per_iter, wall * 1e6 / iters
 
 
 def _run_regular(model, kernel, theta0, key, iters, burn, step0):
-    f = model.full_logpdf_fn()
-    st = samplers.init_state(f, theta0, with_grad=samplers.NEEDS_GRAD[kernel])
-    n = model.data.x.shape[0]
-    log_step = jnp.log(jnp.asarray(step0))
-    kern = samplers.make_kernel(kernel, f)
-    target = samplers.TARGET_ACCEPT[kernel]
-
-    @jax.jit
-    def step(key, st, log_step, i):
-        if kernel == "slice":
-            st2, info = kern(key, st, width=jnp.exp(log_step))
-            return st2, info, log_step
-        st2, info = kern(key, st, step_size=jnp.exp(log_step))
-        ls = samplers.adapt_step_size(log_step, info.accept_prob, target, i)
-        return st2, info, ls
-
+    alg = api.regular_mcmc(
+        model, kernel=kernel, step_size=step0, adapt_target="auto"
+    )
     t0 = time.time()
-    out, queries = [], []
-    for i in range(iters):
-        key, sub = jax.random.split(key)
-        st, info, log_step = step(sub, st, log_step, jnp.asarray(i))
-        out.append(np.asarray(st.theta))
-        queries.append(int(info.n_evals) * n)
+    trace = api.sample(alg, key, iters, init_position=theta0)
+    jax.block_until_ready(trace.theta)
     wall = time.time() - t0
-    s = np.stack(out)[burn:]
-    if s.ndim == 3:
-        s = s.reshape(s.shape[0], -1)
-    ess = diagnostics.ess_per_1000_iters(s[:, : min(10, s.shape[1])])
-    return s, ess, float(np.mean(queries[burn:])), wall * 1e6 / iters
+    s, ess, q_per_iter = _finish(trace, burn)
+    return s, ess, q_per_iter, wall * 1e6 / iters
 
 
 def run_experiment(

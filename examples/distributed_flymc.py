@@ -15,8 +15,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.data import logistic_data
-from repro.distributed.flymc_dist import run_dist_chain
+from repro.distributed.flymc_dist import dist_algorithm, shard_data
 from repro.models.bayes_glm import GLMModel
 
 
@@ -29,13 +30,14 @@ def main(n=32_768, d=11, iters=1500, burn=400):
     theta_map = model.map_estimate(jax.random.key(1), steps=400)
     tuned = model.map_tuned(theta_map)
 
-    thetas, trace, total_q = run_dist_chain(
-        tuned.bound, tuned.log_prior, mesh, tuned.data,
-        jnp.zeros(d), jax.random.key(2), iters,
+    alg = dist_algorithm(
+        tuned.bound, tuned.log_prior, mesh, shard_data(tuned.data, mesh),
         kernel="rwmh", capacity=256, cand_capacity=256, q_db=0.01,
         adapt_target=0.234,
     )
-    s = np.stack(thetas)[burn:]
+    trace = api.sample(alg, jax.random.key(2), iters, init_position=jnp.zeros(d))
+    s = np.asarray(trace.theta[0])[burn:]
+    total_q = int(trace.total_queries)
     print(f"devices: {jax.device_count()}  N={n:,} sharded 8-way")
     print(f"posterior mean (first 4): {np.round(s.mean(0)[:4], 3)}")
     print(f"queries/iter: {total_q / iters:,.0f}  "

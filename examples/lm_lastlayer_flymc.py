@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.configs import get_reduced
 from repro.models import transformer as T
 from repro.models.lastlayer import lastlayer_glm
@@ -37,15 +38,14 @@ def main(arch="llama3.2-3b", batch=32, seq=129, iters=400, burn=100):
     theta_map = model.map_estimate(jax.random.key(2), steps=300, lr=0.05)
     tuned = model.map_tuned(theta_map)
 
-    spec = tuned.flymc_spec(
-        kernel="mala", capacity=max(64, n // 4), cand_capacity=max(64, n // 4),
-        q_db=0.05, adapt_target=0.574,
+    alg = api.firefly(
+        tuned, kernel="mala", capacity=max(64, n // 4),
+        cand_capacity=max(64, n // 4), q_db=0.05, step_size=1e-3,
+        adapt_target="auto",
     )
-    state, n0, spec = tuned.init_chain(
-        spec, theta_map, jax.random.key(3), step_size=1e-3
-    )
-    samples, trace, total_q, _ = tuned.run_chain(spec, state, iters)
-    bright = np.mean([t["n_bright"] for t in trace[burn:]])
+    trace = api.sample(alg, jax.random.key(3), iters, init_position=theta_map)
+    total_q = int(trace.total_queries)
+    bright = np.asarray(trace.stats.n_bright[0])[burn:].mean()
     print(f"arch={arch}: N={n} tokens, head θ ∈ R^{model.theta_shape}")
     print(f"avg bright tokens: {bright:,.0f}/{n} ({100*bright/n:.1f}%)")
     print(f"likelihood queries/iter: {total_q/iters:,.0f} "

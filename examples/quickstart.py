@@ -1,8 +1,11 @@
-"""Quickstart: exact MCMC with subsets of data, in 60 lines.
+"""Quickstart: exact MCMC with subsets of data, in 50 lines.
 
 Runs the paper's core demonstration on a synthetic logistic-regression
-problem: regular full-data MCMC vs MAP-tuned FlyMC — same posterior, an
-order of magnitude fewer likelihood evaluations.
+problem through the ``repro.api`` surface: build a model, get a pure
+``(init, step)`` algorithm from ``firefly(...)`` (or ``regular_mcmc(...)``
+for the full-data baseline), and hand it to the device-resident ``sample``
+driver — same posterior, an order of magnitude fewer likelihood
+evaluations, and zero per-iteration host syncs.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,9 +14,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.core import diagnostics
 from repro.data import logistic_data
-from repro.models.bayes_glm import GLMModel, run_regular_mcmc
+from repro.models.bayes_glm import GLMModel
 
 N, D, ITERS, BURN = 5000, 21, 2000, 500
 
@@ -23,25 +27,21 @@ def main():
     model = GLMModel.logistic(data, prior_scale=1.0, xi=1.5)
 
     # --- regular MCMC: every iteration evaluates all N likelihoods --------
-    ref, queries = run_regular_mcmc(
-        model, jnp.zeros(D), jax.random.key(1), ITERS, step_size=0.03
-    )
-    ref = np.stack(ref)[BURN:]
-    q_reg = float(np.mean(queries[BURN:]))
+    baseline = api.regular_mcmc(model, kernel="rwmh", step_size=0.03)
+    ref_tr = api.sample(baseline, jax.random.key(1), ITERS)
+    ref = np.asarray(ref_tr.theta[0])[BURN:]
+    q_reg = float(np.asarray(ref_tr.stats.lik_queries[0])[BURN:].mean())
 
     # --- FlyMC: MAP-tune the bounds, then sample with a bright subset -----
     theta_map = model.map_estimate(jax.random.key(2), steps=400)
     tuned = model.map_tuned(theta_map)
-    spec = tuned.flymc_spec(
-        kernel="rwmh", capacity=512, cand_capacity=512, q_db=0.01,
-        adapt_target=0.234,
+    alg = api.firefly(
+        tuned, kernel="rwmh", capacity=512, cand_capacity=512, q_db=0.01,
+        step_size=0.03, adapt_target="auto",
     )
-    state, _, spec = tuned.init_chain(
-        spec, jnp.zeros(D), jax.random.key(3), step_size=0.03
-    )
-    samples, trace, total_q, _ = tuned.run_chain(spec, state, ITERS)
-    fly = np.stack(samples)[BURN:]
-    q_fly = total_q / ITERS
+    trace = api.sample(alg, jax.random.key(3), ITERS)
+    fly = np.asarray(trace.theta[0])[BURN:]
+    q_fly = int(trace.total_queries) / ITERS
 
     print(f"posterior mean   |regular - flymc|_max = "
           f"{np.abs(ref.mean(0) - fly.mean(0)).max():.4f}")
@@ -54,7 +54,7 @@ def main():
     eff = (ess_f / q_fly) / (ess_r / q_reg)
     print(f"ESS/1000 iters:  regular {ess_r:.1f}  flymc {ess_f:.1f}  "
           f"-> speedup per likelihood query: {eff:.1f}x")
-    bright = np.mean([t["n_bright"] for t in trace[BURN:]])
+    bright = np.asarray(trace.stats.n_bright[0])[BURN:].mean()
     print(f"avg bright points: {bright:,.0f} of N={N} "
           f"({100 * bright / N:.1f}% — the fireflies)")
 

@@ -10,9 +10,9 @@ iteration, exactly the paper's third experiment).
 import argparse
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.data import robust_data
 from repro.models.bayes_glm import GLMModel
 
@@ -24,20 +24,21 @@ def main(n=50_000, d=57, iters=800, burn=200):
     theta_map = model.map_estimate(jax.random.key(1), steps=600, lr=0.02)
     tuned = model.map_tuned(theta_map)
 
-    spec = tuned.flymc_spec(
-        kernel="slice", capacity=2048, cand_capacity=2048, q_db=0.01
+    alg = api.firefly(
+        tuned, kernel="slice", capacity=2048, cand_capacity=2048, q_db=0.01,
+        step_size=0.05,
     )
-    state, _, spec = tuned.init_chain(
-        spec, theta_map, jax.random.key(2), step_size=0.05
+    trace = api.sample(
+        alg, jax.random.key(2), iters, init_position=theta_map
     )
-    samples, trace, total_q, _ = tuned.run_chain(spec, state, iters)
-    s = np.stack(samples)[burn:]
+    s = np.asarray(trace.theta[0])[burn:]
+    total_q = int(trace.total_queries)
 
     rmse = float(np.sqrt(np.mean((s.mean(0) - np.asarray(theta_true)) ** 2)))
     print(f"N={n:,}  posterior-mean RMSE vs true weights: {rmse:.4f}")
     print(f"likelihood queries/iter: {total_q / iters:,.0f} "
           f"(regular slice sampling would be ~{10 * n:,.0f})")
-    print(f"avg bright: {np.mean([t['n_bright'] for t in trace[burn:]]):,.0f} "
+    print(f"avg bright: {np.asarray(trace.stats.n_bright[0])[burn:].mean():,.0f} "
           f"of {n:,}")
 
 

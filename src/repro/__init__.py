@@ -1,6 +1,8 @@
 """repro — Firefly Monte Carlo (FlyMC) at pod scale, in JAX.
 
 Layers:
+  repro.api          — public sampling surface: (init, step) algorithms +
+                       the device-resident multi-chain driver
   repro.core         — the paper's contribution: exact MCMC with data subsets
   repro.models       — GLM zoo (paper's experiments) + assigned LM architectures
   repro.data         — synthetic data generators + sharded global-array builders
@@ -12,4 +14,6 @@ Layers:
   repro.configs      — one config per assigned architecture + paper experiments
 """
 
-__version__ = "1.0.0"
+from repro import compat  # noqa: F401  (jax forward-compat polyfills)
+
+__version__ = "1.1.0"

@@ -1,0 +1,37 @@
+"""repro.api — the public sampling surface (blackjax-style).
+
+Algorithms are pairs of pure functions bundled in a
+:class:`SamplingAlgorithm`:
+
+    init(key, position) -> State
+    step(key, state)    -> (State, StepStats)
+
+built by :func:`firefly` (the paper's exact-subset chain) or
+:func:`regular_mcmc` (the full-data baseline). Both are driven by
+:func:`sample`, a device-resident multi-chain driver: chunked ``lax.scan``
+with the capacity-overflow flag checked only at chunk boundaries, ``vmap``
+over chains, and a single :class:`Trace` pytree out.
+
+    >>> alg = firefly(model, kernel="rwmh", q_db=0.01, step_size=0.05)
+    >>> trace = sample(alg, jax.random.key(0), 2000, num_chains=4)
+    >>> trace.theta.shape           # (4, 2000, D)
+"""
+
+from repro.api.algorithm import (
+    MCMCState,
+    SamplingAlgorithm,
+    algorithm_from_spec,
+    firefly,
+    regular_mcmc,
+)
+from repro.api.driver import Trace, sample
+
+__all__ = [
+    "MCMCState",
+    "SamplingAlgorithm",
+    "Trace",
+    "algorithm_from_spec",
+    "firefly",
+    "regular_mcmc",
+    "sample",
+]

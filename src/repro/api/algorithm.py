@@ -1,0 +1,282 @@
+"""Sampling algorithms as pure ``(init, step)`` pairs.
+
+:func:`firefly` builds the paper's exact-subset chain; :func:`regular_mcmc`
+the full-data baseline. Both return a :class:`SamplingAlgorithm` whose
+``step`` emits :class:`~repro.core.flymc.StepStats` — the same Info pytree —
+so the :mod:`repro.api.driver` treats them identically.
+
+Kernels are resolved through :data:`repro.core.samplers.KERNEL_REGISTRY`
+(no stringly-typed special cases) and bounds through
+:data:`repro.core.bounds.BOUND_REGISTRY` (explicit :class:`Bound` protocol).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bounds as bounds_lib
+from repro.core import flymc, samplers
+from repro.core.bounds import CollapsedStats, GLMData
+from repro.core.flymc import FlyMCSpec, StepStats
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingAlgorithm:
+    """A pure (init, step) pair plus the hooks the driver needs.
+
+    init(key, position) -> State
+    step(key, state)    -> (State, StepStats)
+
+    ``grow``/``resize``/``init_overflow`` exist only for algorithms with
+    bounded on-device buffers (FlyMC's bright capacity): ``grow()`` returns
+    the same algorithm with doubled capacities, ``resize(state)`` re-shapes a
+    state for the grown buffers without new likelihood queries, and
+    ``init_overflow(state)`` flags an initial state that does not fit. All
+    three are None for algorithms that cannot overflow.
+    """
+
+    init: Callable[[jax.Array, Any], Any]
+    step: Callable[[jax.Array, Any], tuple[Any, StepStats]]
+    grow: Callable[[], "SamplingAlgorithm"] | None = None
+    resize: Callable[[Any], Any] | None = None
+    init_overflow: Callable[[Any], jax.Array] | None = None
+    position: Callable[[Any], jax.Array] | None = None
+    default_position: Any = None
+    spec: Any = None  # engine config (e.g. FlyMCSpec), for introspection
+
+    def position_of(self, state) -> jax.Array:
+        if self.position is not None:
+            return self.position(state)
+        return state.sampler.theta
+
+
+def _spec_from(
+    model,
+    *,
+    bound,
+    log_prior,
+    data,
+    stats,
+    kernel,
+    capacity,
+    cand_capacity,
+    q_db,
+    mode,
+    resample_fraction,
+    adapt_target,
+    kernel_params,
+    axis_names,
+):
+    """Normalize (model | explicit pieces) into (FlyMCSpec, data, stats)."""
+    if model is not None:
+        bound = bound if bound is not None else model.bound
+        log_prior = log_prior if log_prior is not None else model.log_prior
+        data = data if data is not None else model.data
+        stats = stats if stats is not None else getattr(model, "stats", None)
+    if data is None or log_prior is None or bound is None:
+        raise ValueError(
+            "firefly() needs a model, or explicit bound=, log_prior=, data="
+        )
+    bound = bounds_lib.get_bound(bound)
+    if stats is None:
+        stats = bound.suffstats(data)
+    samplers.get_kernel(kernel)  # fail fast on unknown kernels
+    if adapt_target == "auto":
+        adapt_target = samplers.get_kernel(kernel).target_accept
+        if adapt_target >= 1.0:  # slice: no accept rate to adapt on
+            adapt_target = None
+    n = data.x.shape[0]
+    spec = FlyMCSpec(
+        bound=bound,
+        log_prior=log_prior,
+        kernel=kernel,
+        capacity=min(int(capacity), n),
+        cand_capacity=min(int(cand_capacity), n),
+        q_db=q_db,
+        mode=mode,
+        resample_fraction=resample_fraction,
+        kernel_kwargs=tuple(kernel_params),
+        axis_names=tuple(axis_names),
+        adapt_target=adapt_target,
+    )
+    return spec, data, stats
+
+
+def firefly(
+    model=None,
+    *,
+    bound=None,
+    log_prior=None,
+    data: GLMData | None = None,
+    stats: CollapsedStats | None = None,
+    kernel: str = "rwmh",
+    capacity: int = 1024,
+    cand_capacity: int = 1024,
+    q_db: float = 0.01,
+    mode: str = "implicit",
+    resample_fraction: float = 0.1,
+    step_size: float = 0.1,
+    adapt_target: float | str | None = None,
+    kernel_params=(),
+    axis_names=(),
+) -> SamplingAlgorithm:
+    """Build the FlyMC sampling algorithm (paper §2–3) as an (init, step) pair.
+
+    ``model`` is anything carrying ``.bound/.log_prior/.data`` (and optionally
+    ``.stats``), e.g. :class:`repro.models.bayes_glm.GLMModel`; individual
+    pieces can be overridden by keyword. ``bound`` accepts a
+    :class:`~repro.core.bounds.Bound` instance or a registered name
+    ("logistic", "softmax", "student-t"). ``kernel`` names a registered
+    θ-kernel ("rwmh", "mala", "slice", "hmc"); pass ``adapt_target="auto"``
+    to adapt the step size toward the kernel's standard accept rate.
+    """
+    spec, data, stats = _spec_from(
+        model,
+        bound=bound, log_prior=log_prior, data=data, stats=stats,
+        kernel=kernel, capacity=capacity, cand_capacity=cand_capacity,
+        q_db=q_db, mode=mode, resample_fraction=resample_fraction,
+        adapt_target=adapt_target, kernel_params=kernel_params,
+        axis_names=axis_names,
+    )
+    return _firefly_from_spec(spec, data, stats, step_size)
+
+
+def _firefly_from_spec(
+    spec: FlyMCSpec, data: GLMData, stats: CollapsedStats, step_size: float
+) -> SamplingAlgorithm:
+    n = data.x.shape[0]
+
+    def init(key, position):
+        return flymc.init_chain_state(
+            spec, data, stats, position, key, step_size=step_size
+        )
+
+    def step(key, state):
+        # The chain state's rng slot is overwritten with the driver's key so
+        # the kernel stays a pure function of (key, state).
+        return flymc.flymc_step(spec, data, stats, state._replace(rng=key))
+
+    # Memoized: repeated growth (e.g. across sample() calls that hit the
+    # same overflow) must yield the *same* algorithm object so the driver's
+    # jit cache keys on a stable step identity and never re-traces.
+    grown = []
+
+    def grow():
+        if not grown:
+            grown.append(
+                _firefly_from_spec(flymc._grow(spec, n), data, stats, step_size)
+            )
+        return grown[0]
+
+    def resize(state):
+        return flymc.resize_state(spec, state)
+
+    def init_overflow(state):
+        return state.bright.num > spec.capacity
+
+    theta_dim = data.x.shape[-1]
+    if isinstance(spec.bound, bounds_lib.SoftmaxBound):
+        default_position = jnp.zeros((data.xi.shape[-1], theta_dim))
+    else:
+        default_position = jnp.zeros((theta_dim,))
+
+    can_grow = spec.capacity < n or spec.cand_capacity < n
+    return SamplingAlgorithm(
+        init=init,
+        step=step,
+        grow=grow if can_grow else None,
+        resize=resize,
+        init_overflow=init_overflow,
+        default_position=default_position,
+        spec=spec,
+    )
+
+
+def algorithm_from_spec(
+    spec: FlyMCSpec,
+    data: GLMData,
+    stats: CollapsedStats,
+    step_size: float = 0.1,
+) -> SamplingAlgorithm:
+    """Wrap a legacy FlyMCSpec as a SamplingAlgorithm (shim entry point)."""
+    return _firefly_from_spec(spec, data, stats, step_size)
+
+
+# ---------------------------------------------------------------------------
+# Full-data baseline
+# ---------------------------------------------------------------------------
+
+
+class MCMCState(NamedTuple):
+    sampler: samplers.SamplerState
+    log_step: jax.Array
+    iteration: jax.Array
+
+
+def regular_mcmc(
+    model=None,
+    *,
+    logdensity_fn=None,
+    n_data: int | None = None,
+    kernel: str = "rwmh",
+    step_size: float = 0.1,
+    adapt_target: float | str | None = None,
+    kernel_params=(),
+    theta_shape=None,
+) -> SamplingAlgorithm:
+    """Full-data MCMC baseline as an (init, step) pair.
+
+    ``model`` supplies the exact log posterior and the likelihood-query
+    accounting (every density evaluation costs N queries — Table 1's cost
+    model); alternatively pass ``logdensity_fn`` (θ -> (lp, aux)) plus
+    ``n_data`` directly. Emits the same StepStats as firefly (overflow is
+    always False, n_bright = N) so the driver and diagnostics are shared.
+    """
+    if model is not None:
+        logdensity_fn = logdensity_fn or model.full_logpdf_fn()
+        n_data = n_data if n_data is not None else model.data.x.shape[0]
+        theta_shape = theta_shape or model.theta_shape
+    if logdensity_fn is None or n_data is None:
+        raise ValueError("regular_mcmc() needs a model or logdensity_fn + n_data")
+    ks = samplers.get_kernel(kernel)
+    if adapt_target == "auto":
+        adapt_target = None if ks.target_accept >= 1.0 else ks.target_accept
+    kern = samplers.bind(kernel, logdensity_fn, kernel_params)
+    n = jnp.int32(n_data)
+
+    def init(key, position):
+        del key
+        st = samplers.init_state(logdensity_fn, position, with_grad=ks.needs_grad)
+        return MCMCState(
+            sampler=st,
+            log_step=jnp.log(jnp.asarray(step_size, st.lp.dtype)),
+            iteration=jnp.int32(0),
+        )
+
+    def step(key, state):
+        new, info = kern(key, state.sampler, jnp.exp(state.log_step))
+        log_step = state.log_step
+        if adapt_target is not None:
+            log_step = samplers.adapt_step_size(
+                log_step, info.accept_prob, adapt_target, state.iteration
+            )
+        out = MCMCState(new, log_step, state.iteration + 1)
+        stats = StepStats(
+            n_bright=n,
+            lik_queries=info.n_evals * n,
+            accept_prob=info.accept_prob,
+            overflow=jnp.bool_(False),
+            joint_lp=new.lp,
+        )
+        return out, stats
+
+    default_position = (
+        jnp.zeros(theta_shape) if theta_shape is not None else None
+    )
+    return SamplingAlgorithm(
+        init=init, step=step, default_position=default_position
+    )

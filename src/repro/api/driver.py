@@ -1,0 +1,244 @@
+"""Device-resident multi-chain sampling driver.
+
+The chain lives on device end to end: each chunk of ``chunk_size``
+iterations is one jitted ``lax.scan`` (``vmap``'d over chains), and the only
+host synchronization is a single overflow-flag read per chunk. Samples and
+per-step stats accumulate as device arrays and are concatenated once at the
+end — zero per-iteration ``device_get``s, unlike the legacy host loop
+(~4 syncs/step).
+
+Exactness under bounded buffers (DESIGN.md §3.1) is preserved at chunk
+granularity: the pre-chunk state is kept alive, and if any step in the chunk
+overflowed its bright/candidate capacity, the *whole chunk* is re-run from
+that saved state with doubled capacities and the identical per-iteration RNG
+keys (``fold_in(chain_key, iteration)``), so the realized chain is bitwise
+the one an infinite-capacity sampler would have produced.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.algorithm import SamplingAlgorithm
+from repro.core.flymc import StepStats
+
+
+# jit cache keyed on the algorithm's stable function identities: repeated
+# sample() calls on the same algorithm (or the same grown capacity) reuse
+# compiled chunk/init executables instead of re-tracing fresh closures.
+# LRU-bounded: entries keep the algorithm's closed-over data arrays alive,
+# so stale algorithms must age out (and hot ones must not be mass-evicted).
+_JIT_CACHE: OrderedDict = OrderedDict()
+_JIT_CACHE_MAX = 64
+
+
+def _cached(key, build):
+    fn = _JIT_CACHE.get(key)
+    if fn is None:
+        while len(_JIT_CACHE) >= _JIT_CACHE_MAX:
+            _JIT_CACHE.popitem(last=False)
+        fn = _JIT_CACHE[key] = build()
+    else:
+        _JIT_CACHE.move_to_end(key)
+    return fn
+
+
+class Trace(NamedTuple):
+    """Everything one `sample()` call produced, as stacked device arrays.
+
+    theta         : (num_chains, num_samples // thin, *theta_shape)
+    stats         : StepStats with (num_chains, num_samples) leaves (unthinned)
+    total_queries : int — total per-datum likelihood evaluations, all chains
+                    (a host int64 sum: per-step counts are int32 and an
+                    on-device total would wrap at paper scale, e.g.
+                    N=1.8M × slice × 1200 iters ≈ 2.6e10 > 2^31)
+    final_state   : chain state pytree (leading chain axis iff num_chains > 1),
+                    suitable for resuming via sample(..., init_state=...)
+    algorithm     : the (possibly capacity-grown) SamplingAlgorithm
+    """
+
+    theta: jax.Array
+    stats: StepStats
+    total_queries: jax.Array
+    final_state: Any
+    algorithm: SamplingAlgorithm
+
+
+def _broadcast_positions(position, num_chains: int, reference):
+    """Give every chain a starting position: accepts one position (shared)
+    or a pytree with a leading (num_chains, ...) axis. ``reference`` (the
+    algorithm's default position) disambiguates the two when shapes collide."""
+    shape_of = lambda tree: jax.tree.map(jnp.shape, tree)
+    if reference is not None and shape_of(position) == shape_of(reference):
+        return jax.tree.map(
+            lambda l: jnp.broadcast_to(l, (num_chains,) + jnp.shape(l)),
+            position,
+        )
+    leaves = jax.tree.leaves(position)
+    if leaves and all(
+        hasattr(l, "shape") and l.shape[:1] == (num_chains,) for l in leaves
+    ):
+        return position
+    return jax.tree.map(
+        lambda l: jnp.broadcast_to(l, (num_chains,) + jnp.shape(l)), position
+    )
+
+
+def sample(
+    alg: SamplingAlgorithm,
+    key: jax.Array,
+    num_samples: int,
+    *,
+    num_chains: int = 1,
+    thin: int = 1,
+    chunk_size: int = 128,
+    init_position=None,
+    init_state=None,
+) -> Trace:
+    """Run ``num_samples`` iterations of ``alg`` on device; return a Trace.
+
+    ``init_position`` seeds ``alg.init`` (default: ``alg.default_position``);
+    pass a (num_chains, ...) array for per-chain starts. ``init_state``
+    resumes from an existing chain state instead (single chain only), using
+    ``key`` as the per-iteration key root. ``thin`` keeps every thin-th θ
+    sample; stats stay per-iteration. Host syncs: one per chunk.
+    """
+    if num_samples <= 0:
+        raise ValueError("num_samples must be positive")
+    if num_chains < 1:
+        raise ValueError("num_chains must be >= 1")
+    chunk_size = max(1, min(int(chunk_size), num_samples))
+    multi = num_chains > 1
+
+    if init_state is not None:
+        if multi:
+            raise ValueError("init_state resume supports num_chains=1 only")
+        state = init_state
+        k_steps = key
+    else:
+        k_init, k_steps = jax.random.split(key)
+        position = init_position if init_position is not None else alg.default_position
+        if position is None:
+            raise ValueError(
+                "no init_position given and the algorithm has no default"
+            )
+        def init_fn(alg):
+            return _cached(
+                ("init", alg.init, multi),
+                lambda: jax.jit(jax.vmap(alg.init) if multi else alg.init),
+            )
+
+        if multi:
+            init_keys = jax.random.split(k_init, num_chains)
+            positions = _broadcast_positions(
+                position, num_chains, alg.default_position
+            )
+            state = init_fn(alg)(init_keys, positions)
+        else:
+            state = init_fn(alg)(k_init, position)
+        # Grow until the initial bright set fits (deterministic re-init from
+        # the same keys) — one host sync, before any sampling starts.
+        while alg.init_overflow is not None and bool(
+            jax.device_get(
+                jnp.any(
+                    (jax.vmap(alg.init_overflow) if multi else alg.init_overflow)(
+                        state
+                    )
+                )
+            )
+        ):
+            alg = _grown(alg)
+            if multi:
+                state = init_fn(alg)(init_keys, positions)
+            else:
+                state = init_fn(alg)(k_init, position)
+
+    chain_keys = jax.random.split(k_steps, num_chains) if multi else k_steps
+
+    def make_chunk_fn(alg: SamplingAlgorithm, cs: int):
+        def scan_chain(state, chain_key, start):
+            def body(carry, i):
+                new_state, info = alg.step(
+                    jax.random.fold_in(chain_key, i), carry
+                )
+                return new_state, (alg.position_of(new_state), info)
+
+            iters = start + jnp.arange(cs, dtype=jnp.int32)
+            return jax.lax.scan(body, state, iters)
+
+        def chunk(state, keys, start):
+            if multi:
+                final, (th, inf) = jax.vmap(
+                    scan_chain, in_axes=(0, 0, None)
+                )(state, keys, start)
+            else:
+                final, (th, inf) = scan_chain(state, keys, start)
+            return final, th, inf, jnp.any(inf.overflow)
+
+        return jax.jit(chunk)
+
+    def chunk_fn_for(alg, cs):
+        return _cached(
+            ("chunk", alg.step, alg.position, multi, cs),
+            lambda: make_chunk_fn(alg, cs),
+        )
+
+    thetas, infos = [], []
+    start = 0
+    while start < num_samples:
+        cs = min(chunk_size, num_samples - start)
+        chunk_fn = chunk_fn_for(alg, cs)
+        # Keep the pre-chunk state alive for the exact re-run on overflow.
+        prev = state
+        final, th, inf, overflow = chunk_fn(state, chain_keys, jnp.int32(start))
+        while bool(jax.device_get(overflow)):  # the chunk's one host sync
+            alg = _grown(alg)
+            resize = alg.resize if alg.resize is not None else (lambda s: s)
+            prev = _cached(
+                ("resize", resize, multi),
+                lambda: jax.jit(jax.vmap(resize) if multi else resize),
+            )(prev)
+            final, th, inf, overflow = chunk_fn_for(alg, cs)(
+                prev, chain_keys, jnp.int32(start)
+            )
+        state = final
+        thetas.append(th)
+        infos.append(inf)
+        start += cs
+
+    t_axis = 1 if multi else 0
+    theta = jnp.concatenate(thetas, axis=t_axis) if len(thetas) > 1 else thetas[0]
+    stats = jax.tree.map(
+        lambda *xs: jnp.concatenate(xs, axis=t_axis) if len(xs) > 1 else xs[0],
+        *infos,
+    )
+    if not multi:
+        theta = theta[None]
+        stats = jax.tree.map(lambda a: a[None], stats)
+    if thin > 1:
+        theta = theta[:, thin - 1 :: thin]
+    total_queries = int(
+        np.asarray(jax.device_get(stats.lik_queries), dtype=np.int64).sum()
+    )
+    return Trace(
+        theta=theta,
+        stats=stats,
+        total_queries=total_queries,
+        final_state=state,
+        algorithm=alg,
+    )
+
+
+def _grown(alg: SamplingAlgorithm) -> SamplingAlgorithm:
+    if alg.grow is None:
+        raise RuntimeError(
+            "capacity overflow reported but the algorithm cannot grow "
+            "(buffers already at data size, or a non-growing algorithm "
+            "emitted overflow=True)"
+        )
+    return alg.grow()

@@ -1,0 +1,60 @@
+"""Forward-compatibility polyfills for older installed jax versions.
+
+The codebase is written against the current jax surface (``jax.shard_map``
+with ``check_vma``, ``jax.sharding.AxisType``, ``jax.make_mesh(...,
+axis_types=...)``). On older runtimes (e.g. 0.4.x) those names live under
+``jax.experimental.shard_map`` / don't exist; this module installs thin
+adapters onto the jax namespace so the same call sites work on both. Every
+patch is guarded by a feature check and is a no-op on a current jax.
+
+Imported for its side effects from ``repro.__init__``.
+"""
+
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+import jax
+
+if not hasattr(jax, "shard_map"):  # pragma: no cover - version dependent
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, **kw):
+        if check_vma is not None and "check_rep" not in kw:
+            kw["check_rep"] = check_vma
+        return _shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw
+        )
+
+    jax.shard_map = shard_map
+
+
+if not hasattr(jax.sharding, "AxisType"):  # pragma: no cover
+
+    class AxisType(enum.Enum):
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    jax.sharding.AxisType = AxisType
+
+
+if not hasattr(jax.lax, "axis_size"):  # pragma: no cover
+
+    def _axis_size(axis_name):
+        return jax.lax.psum(1, axis_name)
+
+    jax.lax.axis_size = _axis_size
+
+
+if "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+    _make_mesh = jax.make_mesh
+
+    @functools.wraps(_make_mesh)
+    def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kw):
+        del axis_types  # pre-AxisType jax: every mesh axis behaves as Auto
+        return _make_mesh(axis_shapes, axis_names, **kw)
+
+    jax.make_mesh = make_mesh

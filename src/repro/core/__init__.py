@@ -11,14 +11,17 @@
 
 from repro.core import brightness, diagnostics, samplers
 from repro.core.bounds import (
+    Bound,
     CollapsedStats,
     GLMData,
     LogisticBound,
     SoftmaxBound,
     StudentTBound,
     gaussian_log_prior,
+    get_bound,
     laplace_log_prior,
     psum_stats,
+    register_bound,
 )
 from repro.core.flymc import (
     FlyMCSpec,
@@ -26,13 +29,16 @@ from repro.core.flymc import (
     StepStats,
     flymc_step,
     init_chain,
+    init_chain_state,
     log_expm1,
     make_joint_logpost,
     resize_state,
     run_chain,
 )
+from repro.core.samplers import get_kernel, register_kernel
 
 __all__ = [
+    "Bound",
     "CollapsedStats",
     "GLMData",
     "LogisticBound",
@@ -45,11 +51,16 @@ __all__ = [
     "diagnostics",
     "flymc_step",
     "gaussian_log_prior",
+    "get_bound",
+    "get_kernel",
     "init_chain",
+    "init_chain_state",
     "laplace_log_prior",
     "log_expm1",
     "make_joint_logpost",
     "psum_stats",
+    "register_bound",
+    "register_kernel",
     "resize_state",
     "run_chain",
     "samplers",

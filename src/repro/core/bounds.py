@@ -33,7 +33,7 @@ Every bound exposes the same surface:
 
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
@@ -70,6 +70,60 @@ class CollapsedStats(NamedTuple):
 def psum_stats(stats: CollapsedStats, axis_name) -> CollapsedStats:
     """All-reduce suff-stats across data shards (one-time setup collective)."""
     return CollapsedStats(*(jax.lax.psum(s, axis_name) for s in stats))
+
+
+# ---------------------------------------------------------------------------
+# Bound protocol + registry
+# ---------------------------------------------------------------------------
+
+
+@runtime_checkable
+class Bound(Protocol):
+    """The surface every collapsible FlyMC bound must implement (§3.1).
+
+    Exactness contract: ``0 < exp(log_bound) <= exp(log_lik)`` everywhere, and
+    ``collapsed(θ, suffstats(data)) == Σ_n log_bound(θ, data_n)``.
+    """
+
+    name: str
+
+    def log_lik(self, theta: jax.Array, data: GLMData) -> jax.Array: ...
+
+    def log_bound(self, theta: jax.Array, data: GLMData) -> jax.Array: ...
+
+    def suffstats(self, data: GLMData) -> CollapsedStats: ...
+
+    def collapsed(self, theta: jax.Array, stats: CollapsedStats) -> jax.Array: ...
+
+    def tighten(self, theta_map: jax.Array, data: GLMData) -> GLMData: ...
+
+
+BOUND_REGISTRY: dict[str, type] = {}
+
+
+def register_bound(cls: type, *aliases: str) -> type:
+    """Register a Bound class under its ``name`` attribute plus aliases."""
+    for key in (cls.name, *aliases):
+        BOUND_REGISTRY[key] = cls
+    return cls
+
+
+def get_bound(bound) -> Bound:
+    """Resolve a bound: pass through instances, instantiate registered names."""
+    if isinstance(bound, str):
+        try:
+            cls = BOUND_REGISTRY[bound]
+        except KeyError:
+            raise KeyError(
+                f"unknown bound {bound!r}; registered: {sorted(BOUND_REGISTRY)}"
+            ) from None
+        return cls()
+    if not isinstance(bound, Bound):
+        raise TypeError(
+            f"{type(bound).__name__} does not implement the Bound protocol "
+            "(log_lik/log_bound/suffstats/collapsed/tighten)"
+        )
+    return bound
 
 
 # ---------------------------------------------------------------------------
@@ -291,6 +345,11 @@ class StudentTBound:
 # ---------------------------------------------------------------------------
 # Priors
 # ---------------------------------------------------------------------------
+
+
+register_bound(LogisticBound, "logistic")
+register_bound(SoftmaxBound, "softmax")
+register_bound(StudentTBound, "student-t", "robust")
 
 
 def gaussian_log_prior(theta: jax.Array, scale: float) -> jax.Array:

@@ -29,7 +29,6 @@ collapsed bound product is O(D²), independent of N.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Callable, NamedTuple
 
 import jax
@@ -90,7 +89,7 @@ class FlyMCSpec:
     adapt_target: float | None = None  # accept-rate target during warmup
 
     def needs_grad(self) -> bool:
-        return samplers.NEEDS_GRAD[self.kernel]
+        return samplers.get_kernel(self.kernel).needs_grad
 
 
 class FlyMCState(NamedTuple):
@@ -193,6 +192,13 @@ def _implicit_z_update(
     proposes to darken, using the δ cached from the θ-update; dark points
     propose to brighten with prob q_{d→b} (geometric thinning) and only those
     *candidates* pay a likelihood evaluation.
+
+    All uniforms are drawn per *datum* (length-N vectors, gathered by index),
+    never per buffer slot: jax's counter-based PRNG is not prefix-stable
+    across shapes, so capacity-shaped draws would make the realized chain
+    depend on the buffer size. Per-datum draws keep the trajectory bitwise
+    identical across capacities, which is what lets the driver re-run an
+    overflowed chunk at doubled capacity without perturbing the chain.
     """
     n = data.x.shape[0]
     k_bd, k_cand, k_db = jax.random.split(key, 3)
@@ -201,7 +207,7 @@ def _implicit_z_update(
 
     # --- bright → dark (free: reuses cached δ) -----------------------------
     idx_b, mask_b = brightness.bright_buffer(bright, spec.capacity)
-    u1 = jax.random.uniform(k_bd, (spec.capacity,), delta_full.dtype)
+    u1 = jnp.take(jax.random.uniform(k_bd, (n,), delta_full.dtype), idx_b)
     # accept darkening iff u·L̃ < q_db  ⇔  log u + log L̃ < log q_db
     darken = mask_b & (jnp.log(u1) + log_expm1(delta_bright) < log_q)
     z = z.at[idx_b].set(jnp.where(darken, False, z[idx_b]))
@@ -225,7 +231,9 @@ def _implicit_z_update(
 
     rows = _tree_gather(data, cand_idx)
     delta_c = spec.bound.log_lik(theta, rows) - spec.bound.log_bound(theta, rows)
-    u3 = jax.random.uniform(k_db, (spec.cand_capacity,), delta_full.dtype)
+    u3 = jnp.take(
+        jax.random.uniform(k_db, (n,), delta_full.dtype), cand_idx, mode="clip"
+    )
     # accept brightening iff u·q_db < L̃  ⇔  log u + log q_db < log L̃
     brighten = mask_c & (jnp.log(u3) + log_q < log_expm1(delta_c))
     z = z.at[cand_idx].set(jnp.where(brighten, True, z[cand_idx]), mode="drop")
@@ -284,12 +292,8 @@ def flymc_step(
     # ---- θ | z -------------------------------------------------------------
     idx, mask = brightness.bright_buffer(state.bright, spec.capacity)
     f = make_joint_logpost(spec, data, stats, idx, mask)
-    kernel = samplers.make_kernel(spec.kernel, f, **dict(spec.kernel_kwargs))
-    step = jnp.exp(state.log_step)
-    if spec.kernel == "slice":
-        new_sampler, info = kernel(key_theta, state.sampler, width=step)
-    else:
-        new_sampler, info = kernel(key_theta, state.sampler, step_size=step)
+    kernel = samplers.bind(spec.kernel, f, spec.kernel_kwargs)
+    new_sampler, info = kernel(key_theta, state.sampler, jnp.exp(state.log_step))
     queries_theta = info.n_evals * state.bright.num
     # δ at (possibly) new θ for the bright buffer, from the kernel's aux cache.
     delta_full = state.delta_full.at[idx].set(
@@ -350,6 +354,45 @@ def flymc_step(
 # ---------------------------------------------------------------------------
 
 
+def init_chain_state(
+    spec: FlyMCSpec,
+    data: GLMData,
+    stats: CollapsedStats,
+    theta0: jax.Array,
+    key: jax.Array,
+    z0: jax.Array | None = None,
+    step_size: float = 0.1,
+) -> FlyMCState:
+    """Pure chain initialization: no host syncs, no capacity growth.
+
+    If the initial bright set exceeds ``spec.capacity`` the returned state's
+    δ buffer is truncated; callers (the repro.api driver, or the legacy
+    ``init_chain`` wrapper) detect ``state.bright.num > capacity`` and
+    rebuild at a grown capacity from the same key, which is deterministic.
+    """
+    n = data.x.shape[0]
+    k_z, k_chain = jax.random.split(key)
+    for ax in spec.axis_names:
+        k_z = jax.random.fold_in(k_z, jax.lax.axis_index(ax))
+    if z0 is None:
+        z0 = jax.random.bernoulli(k_z, min(2.0 * spec.q_db, 1.0), (n,))
+    bright = brightness.from_z(z0)
+    idx, mask = brightness.bright_buffer(bright, spec.capacity)
+    f = make_joint_logpost(spec, data, stats, idx, mask)
+    sampler = samplers.init_state(f, theta0, with_grad=spec.needs_grad())
+    delta_full = jnp.zeros(n, sampler.lp.dtype).at[idx].set(
+        jnp.where(mask, sampler.aux, 0.0)
+    )
+    return FlyMCState(
+        sampler=sampler,
+        bright=bright,
+        delta_full=delta_full,
+        log_step=jnp.log(jnp.asarray(step_size, sampler.lp.dtype)),
+        rng=k_chain,
+        iteration=jnp.int32(0),
+    )
+
+
 def init_chain(
     spec: FlyMCSpec,
     data: GLMData,
@@ -359,39 +402,20 @@ def init_chain(
     z0: jax.Array | None = None,
     step_size: float = 0.1,
 ) -> tuple[FlyMCState, int, FlyMCSpec]:
-    """Initialize the chain; returns (state, setup likelihood queries, spec).
+    """Deprecated host-side init; prefer ``repro.api.firefly(...)``.
 
-    The returned spec may have grown capacities if the initial bright set
-    did not fit the requested buffer.
+    Returns (state, setup likelihood queries, spec). The returned spec may
+    have grown capacities if the initial bright set did not fit the
+    requested buffer.
     """
     n = data.x.shape[0]
-    k_z, k_chain = jax.random.split(key)
-    for ax in spec.axis_names:
-        k_z = jax.random.fold_in(k_z, jax.lax.axis_index(ax))
-    if z0 is None:
-        z0 = jax.random.bernoulli(k_z, min(2.0 * spec.q_db, 1.0), (n,))
-    bright = brightness.from_z(z0)
-    if not spec.axis_names:
-        while int(jax.device_get(bright.num)) > spec.capacity:
-            spec = _grow(spec, n)
-
-    idx, mask = brightness.bright_buffer(bright, spec.capacity)
-    f = make_joint_logpost(spec, data, stats, idx, mask)
-    sampler = samplers.init_state(f, theta0, with_grad=spec.needs_grad())
-    delta_full = jnp.zeros(n, sampler.lp.dtype).at[idx].set(
-        jnp.where(mask, sampler.aux, 0.0)
-    )
-    state = FlyMCState(
-        sampler=sampler,
-        bright=bright,
-        delta_full=delta_full,
-        log_step=jnp.log(jnp.asarray(step_size, sampler.lp.dtype)),
-        rng=k_chain,
-        iteration=jnp.int32(0),
-    )
+    state = init_chain_state(spec, data, stats, theta0, key, z0, step_size)
     if spec.axis_names:
-        return state, bright.num, spec
-    return state, int(jax.device_get(bright.num)), spec
+        return state, state.bright.num, spec
+    while int(jax.device_get(state.bright.num)) > spec.capacity:
+        spec = _grow(spec, n)
+        state = init_chain_state(spec, data, stats, theta0, key, z0, step_size)
+    return state, int(jax.device_get(state.bright.num)), spec
 
 
 def _grow(spec: FlyMCSpec, n: int) -> FlyMCSpec:
@@ -422,31 +446,49 @@ def run_chain(
     num_iters: int,
     collect: Callable[[FlyMCState], Any] | None = None,
 ):
-    """Host-side chain driver with exactness-preserving capacity doubling.
+    """Deprecated shim over the device-resident driver (``repro.api.sample``).
 
-    Each jitted step reports an overflow flag computed *before* the state is
-    committed. On overflow the step is re-run from the saved pre-step state
-    with the same RNG key and doubled capacities, so the realized chain is
-    identical to one run at infinite capacity (DESIGN.md §3.1).
+    Preserves the old return shape (samples, trace dicts, total_queries,
+    possibly-grown spec). A custom ``collect`` callable needs per-iteration
+    host access, so that path falls back to a host-side step loop; the
+    default θ-collection runs entirely on device via chunked ``lax.scan``
+    with the same exactness-preserving capacity-doubling re-run semantics.
     """
-    n = data.x.shape[0]
-    collect = collect or (lambda s: jax.device_get(s.sampler.theta))
-    # No buffer donation: the pre-step state must stay alive for exact
-    # re-execution when a capacity overflow is detected.
-    jitted = jax.jit(partial(flymc_step, spec))
+    from repro import api  # local import: api is built on this module
 
+    alg = api.algorithm_from_spec(spec, data, stats)
+    if collect is not None:
+        return _run_chain_host(alg, state, num_iters, collect)
+    trace = api.sample(alg, state.rng, num_iters, init_state=state)
+    theta, st = jax.device_get((trace.theta[0], trace.stats))
+    samples = list(theta)
+    trace_dicts = [
+        {
+            "n_bright": int(st.n_bright[0, i]),
+            "lik_queries": int(st.lik_queries[0, i]),
+            "accept_prob": float(st.accept_prob[0, i]),
+            "joint_lp": float(st.joint_lp[0, i]),
+        }
+        for i in range(num_iters)
+    ]
+    total_queries = int(jax.device_get(trace.total_queries))
+    return samples, trace_dicts, total_queries, trace.algorithm.spec
+
+
+def _run_chain_host(alg, state: FlyMCState, num_iters: int, collect):
+    """Host loop fallback for run_chain(collect=...): one sync per iteration."""
+    key = state.rng
     samples, trace = [], []
     total_queries = 0
-    for _ in range(num_iters):
+    step = jax.jit(alg.step)
+    for i in range(num_iters):
         prev = state
-        new_state, st = jitted(data, stats, state)
+        new_state, st = step(jax.random.fold_in(key, i), state)
         while bool(jax.device_get(st.overflow)):
-            spec = _grow(spec, n)
-            jitted = jax.jit(partial(flymc_step, spec))
-            # Re-run the step exactly: same pre-step state (δ buffer resized
-            # from the capacity-independent delta_full), same RNG key.
-            prev = resize_state(spec, prev)
-            new_state, st = jitted(data, stats, prev)
+            alg = alg.grow()
+            prev = alg.resize(prev)
+            step = jax.jit(alg.step)
+            new_state, st = step(jax.random.fold_in(key, i), prev)
         state = new_state
         total_queries += int(jax.device_get(st.lik_queries))
         samples.append(collect(state))
@@ -458,4 +500,4 @@ def run_chain(
                 "joint_lp": float(jax.device_get(st.joint_lp)),
             }
         )
-    return samples, trace, total_queries, spec
+    return samples, trace, total_queries, alg.spec

@@ -242,18 +242,91 @@ def adapt_step_size(
     return log_step + lr * (accept_prob - target)
 
 
-KERNELS: dict[str, Callable] = {
-    "rwmh": rwmh_step,
-    "mala": mala_step,
-    "slice": slice_step,
-    "hmc": hmc_step,
-}
+# ---------------------------------------------------------------------------
+# Kernel registry (repro.api dispatches through this, not through strings)
+# ---------------------------------------------------------------------------
 
-NEEDS_GRAD = {"rwmh": False, "mala": True, "slice": False, "hmc": True}
-TARGET_ACCEPT = {"rwmh": 0.234, "mala": 0.574, "hmc": 0.8, "slice": 1.0}
+
+class KernelSpec(NamedTuple):
+    """Registry entry: a θ-kernel plus the metadata the drivers need.
+
+    ``step_fn(f, key, state, <scale_param>=..., **static_kwargs)`` is the raw
+    kernel; ``scale_param`` names its tuning-scale argument ("step_size" or
+    "width"), which :func:`bind` normalizes away so callers never special-case
+    individual kernels.
+    """
+
+    step_fn: Callable
+    needs_grad: bool
+    target_accept: float
+    scale_param: str = "step_size"
+
+
+KERNEL_REGISTRY: dict[str, KernelSpec] = {}
+
+# Legacy views, kept in sync by register_kernel().
+KERNELS: dict[str, Callable] = {}
+NEEDS_GRAD: dict[str, bool] = {}
+TARGET_ACCEPT: dict[str, float] = {}
+
+
+def register_kernel(
+    name: str,
+    step_fn: Callable,
+    *,
+    needs_grad: bool,
+    target_accept: float,
+    scale_param: str = "step_size",
+) -> None:
+    """Register a θ-kernel under ``name`` for use by specs and repro.api."""
+    KERNEL_REGISTRY[name] = KernelSpec(
+        step_fn, needs_grad, target_accept, scale_param
+    )
+    KERNELS[name] = step_fn
+    NEEDS_GRAD[name] = needs_grad
+    TARGET_ACCEPT[name] = target_accept
+
+
+def get_kernel(name: str) -> KernelSpec:
+    try:
+        return KERNEL_REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown θ-kernel {name!r}; registered: {sorted(KERNEL_REGISTRY)}"
+        ) from None
+
+
+def bind(name: str, f: LogDensityFn, static_kwargs=()) -> Callable:
+    """Uniform ``(key, state, scale) -> (state, info)`` for a registered kernel.
+
+    The kernel's own scale-parameter name (``step_size`` vs slice's ``width``)
+    is resolved from the registry, so drivers need no per-kernel branches.
+    """
+    ks = get_kernel(name)
+    kw = dict(static_kwargs)
+
+    def kernel(key: jax.Array, state: SamplerState, scale: jax.Array):
+        return ks.step_fn(f, key, state, **{ks.scale_param: scale}, **kw)
+
+    return kernel
+
+
+register_kernel(
+    "rwmh", rwmh_step, needs_grad=False, target_accept=0.234
+)
+register_kernel(
+    "mala", mala_step, needs_grad=True, target_accept=0.574
+)
+register_kernel(
+    "slice", slice_step, needs_grad=False, target_accept=1.0,
+    scale_param="width",
+)
+register_kernel(
+    "hmc", hmc_step, needs_grad=True, target_accept=0.8
+)
 
 
 def make_kernel(name: str, f: LogDensityFn, **kwargs) -> Callable:
     """Bind a named θ-kernel to a log-density; returns (key, state, step)->(state, info)."""
-    step_fn = KERNELS[name]
+    step_fn = get_kernel(name).step_fn
     return partial(step_fn, f, **kwargs)

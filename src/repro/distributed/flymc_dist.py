@@ -101,55 +101,111 @@ def make_dist_flymc(bound, log_prior, mesh, n_global: int, **spec_kw):
     return spec, init_fn, step_fn, stats_fn
 
 
-def run_dist_chain(
-    bound, log_prior, mesh, data: GLMData, theta0, key, num_iters: int,
-    **spec_kw,
-):
-    """Host driver for a sharded chain, with global capacity growth.
+def _spec_kw_of(spec: flymc.FlyMCSpec) -> dict:
+    return {
+        f.name: getattr(spec, f.name)
+        for f in dataclasses.fields(spec)
+        if f.name not in ("bound", "log_prior", "axis_names")
+    }
 
-    Returns (thetas, trace, total_queries).
+
+def dist_algorithm(bound, log_prior, mesh, data: GLMData, **spec_kw):
+    """A data-sharded FlyMC chain as a repro.api SamplingAlgorithm.
+
+    ``data`` must already be placed on the mesh (see :func:`shard_data`).
+    The returned algorithm plugs into ``repro.api.sample`` — the chunked
+    ``lax.scan`` runs over the shard-mapped step, so the whole chunk stays on
+    device and capacity growth follows the same chunk-boundary re-run
+    protocol as the single-host chain (per-shard capacities doubled
+    globally, same replicated RNG keys).
     """
+    from repro.api import SamplingAlgorithm
+
     n_global = data.x.shape[0]
-    data = shard_data(data, mesh)
+    # Capacities are PER-SHARD: growth must cap at the shard-local row count,
+    # not N — bright_buffer slices the shard-local arr inside shard_map.
+    n_local = n_global // mesh.devices.size
     spec, init_fn, step_fn, stats_fn = make_dist_flymc(
         bound, log_prior, mesh, n_global, **spec_kw
     )
     stats = stats_fn(data)
-    state, _ = init_fn(data, stats, theta0, key)
+    axes = tuple(mesh.axis_names)
 
-    thetas, trace = [], []
-    total_q = 0
-    for _ in range(num_iters):
-        prev = state
-        state2, st = step_fn(data, stats, state)
-        while bool(jax.device_get(st.overflow)):
-            # grow per-shard capacities globally; exact re-run (same keys)
-            grown = dataclasses.replace(
-                spec,
-                capacity=min(2 * spec.capacity, n_global),
-                cand_capacity=min(2 * spec.cand_capacity, n_global),
+    def init(key, position):
+        state, _ = init_fn(data, stats, position, key)
+        return state
+
+    def step(key, state):
+        return step_fn(data, stats, state._replace(rng=key))
+
+    grown = []  # memoized so the driver's jit cache sees a stable identity
+
+    def grow():
+        if not grown:
+            grown.append(
+                dist_algorithm(
+                    bound, log_prior, mesh, data,
+                    **_spec_kw_of(flymc._grow(spec, n_local)),
+                )
             )
-            spec, init_fn, step_fn, stats_fn = make_dist_flymc(
-                bound, log_prior, mesh, n_global,
-                **{
-                    f.name: getattr(grown, f.name)
-                    for f in dataclasses.fields(grown)
-                    if f.name not in ("bound", "log_prior", "axis_names")
-                },
-            )
-            prev = _resize_dist(spec, prev, mesh)
-            state2, st = step_fn(data, stats, prev)
-        state = state2
-        total_q += int(jax.device_get(st.lik_queries))
-        thetas.append(jax.device_get(state.sampler.theta))
-        trace.append(
-            {
-                "n_bright": int(jax.device_get(st.n_bright)),
-                "lik_queries": int(jax.device_get(st.lik_queries)),
-                "accept_prob": float(jax.device_get(st.accept_prob)),
-            }
+        return grown[0]
+
+    def resize(state):
+        return _resize_dist(spec, state, mesh)
+
+    # Replicated "any shard's initial bright set exceeds its capacity" flag,
+    # so the driver re-initializes at a grown capacity exactly like the
+    # single-host chain (init_chain_state leaves the state truncated).
+    _overflow_fn = jax.jit(
+        jax.shard_map(
+            lambda s: jax.lax.pmax(
+                (s.bright.num > spec.capacity).astype(jnp.int32), axes
+            ).astype(bool),
+            mesh=mesh,
+            in_specs=(_state_pspecs(axes),),
+            out_specs=PS(),
+            check_vma=False,
         )
-    return thetas, trace, total_q
+    )
+
+    can_grow = spec.capacity < n_local or spec.cand_capacity < n_local
+    return SamplingAlgorithm(
+        init=init,
+        step=step,
+        grow=grow if can_grow else None,
+        resize=resize,
+        init_overflow=_overflow_fn if can_grow else None,
+        default_position=jnp.zeros(data.x.shape[-1]),
+        spec=spec,
+    )
+
+
+def run_dist_chain(
+    bound, log_prior, mesh, data: GLMData, theta0, key, num_iters: int,
+    **spec_kw,
+):
+    """Sharded-chain driver (shim over ``repro.api.sample``).
+
+    Returns (thetas, trace, total_queries) like the original host loop, but
+    the chain now runs in chunked on-device scans with one host sync per
+    chunk instead of ~4 per iteration.
+    """
+    from repro import api
+
+    data = shard_data(data, mesh)
+    alg = dist_algorithm(bound, log_prior, mesh, data, **spec_kw)
+    trace = api.sample(alg, key, num_iters, init_position=theta0)
+    thetas = list(jax.device_get(trace.theta[0]))
+    st = jax.device_get(trace.stats)
+    trace_dicts = [
+        {
+            "n_bright": int(st.n_bright[0, i]),
+            "lik_queries": int(st.lik_queries[0, i]),
+            "accept_prob": float(st.accept_prob[0, i]),
+        }
+        for i in range(num_iters)
+    ]
+    return thetas, trace_dicts, int(jax.device_get(trace.total_queries))
 
 
 def _resize_dist(spec, state, mesh):

@@ -127,7 +127,21 @@ class GLMModel:
             self, data=data, stats=self.bound.suffstats(data)
         )
 
-    # ---- FlyMC glue ----------------------------------------------------------
+    # ---- repro.api glue ------------------------------------------------------
+
+    def algorithm(self, **kw):
+        """FlyMC SamplingAlgorithm over this model (see repro.api.firefly)."""
+        from repro import api
+
+        return api.firefly(self, **kw)
+
+    def baseline(self, **kw):
+        """Full-data MCMC SamplingAlgorithm (see repro.api.regular_mcmc)."""
+        from repro import api
+
+        return api.regular_mcmc(self, **kw)
+
+    # ---- deprecated FlyMC glue (thin wrappers over repro.api) ----------------
 
     def flymc_spec(
         self,
@@ -138,6 +152,7 @@ class GLMModel:
         mode: str = "implicit",
         **kw,
     ) -> flymc.FlyMCSpec:
+        """Deprecated: use ``model.algorithm(...)`` / ``repro.api.firefly``."""
         n = self.data.x.shape[0]
         return flymc.FlyMCSpec(
             bound=self.bound,
@@ -151,9 +166,11 @@ class GLMModel:
         )
 
     def init_chain(self, spec, theta0, key, **kw):
+        """Deprecated: use ``repro.api.sample`` (it initializes internally)."""
         return flymc.init_chain(spec, self.data, self.stats, theta0, key, **kw)
 
     def run_chain(self, spec, state, num_iters, **kw):
+        """Deprecated: delegates to the repro.api device-resident driver."""
         return flymc.run_chain(
             spec, self.data, self.stats, state, num_iters, **kw
         )
@@ -168,22 +185,18 @@ def run_regular_mcmc(
     step_size: float = 0.05,
     **kernel_kwargs,
 ):
-    """Full-data MCMC baseline. Returns (samples, lik_queries_per_iter list)."""
-    f = model.full_logpdf_fn()
-    state = samplers.init_state(f, theta0, with_grad=samplers.NEEDS_GRAD[kernel])
-    kern = samplers.make_kernel(kernel, f, **kernel_kwargs)
-    n = model.data.x.shape[0]
+    """Full-data MCMC baseline (deprecated shim over repro.api.regular_mcmc).
 
-    @jax.jit
-    def step(key, state):
-        if kernel == "slice":
-            return kern(key, state, width=jnp.asarray(step_size))
-        return kern(key, state, step_size=jnp.asarray(step_size))
+    Returns (samples, lik_queries_per_iter list) like the original host loop,
+    but runs on device through the chunked-scan driver.
+    """
+    from repro import api
 
-    samples, queries = [], []
-    for i in range(num_iters):
-        key, sub = jax.random.split(key)
-        state, info = step(sub, state)
-        samples.append(jax.device_get(state.theta))
-        queries.append(int(jax.device_get(info.n_evals)) * n)
+    alg = api.regular_mcmc(
+        model, kernel=kernel, step_size=step_size,
+        kernel_params=tuple(kernel_kwargs.items()),
+    )
+    trace = api.sample(alg, key, num_iters, init_position=theta0)
+    samples = list(jax.device_get(trace.theta[0]))
+    queries = [int(q) for q in jax.device_get(trace.stats.lik_queries[0])]
     return samples, queries

@@ -4,13 +4,11 @@ The exactness of FlyMC rests on 0 < B_n ≤ L_n everywhere and on the collapsed
 quadratic form equaling the dense product — both are property-tested here.
 """
 
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from _hypothesis_compat import given, settings, st
 
 from repro.core.bounds import (
     GLMData,

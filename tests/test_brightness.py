@@ -1,10 +1,9 @@
 """Tests for the bright/dark partition structure (paper §3.3, Fig. 3)."""
 
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
+from _hypothesis_compat import given, settings, st
 
 from repro.core import brightness
 

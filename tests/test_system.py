@@ -7,44 +7,48 @@
 """
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro import api
+from repro.core import diagnostics
 from repro.data import logistic_data
-from repro.models.bayes_glm import GLMModel, run_regular_mcmc
+from repro.models.bayes_glm import GLMModel
 
 jax.config.update("jax_platform_name", "cpu")
 
 
 def test_flymc_end_to_end_beats_regular_on_queries():
-    n, d = 2000, 11
+    n, d, iters, burn = 2000, 11, 4000, 1000
     data = logistic_data(jax.random.key(0), n=n, d=d, separation=2.0)
     model = GLMModel.logistic(data, prior_scale=1.0, xi=1.5)
 
-    ref, queries = run_regular_mcmc(
-        model, jnp.zeros(d), jax.random.key(1), 1500, step_size=0.05
+    baseline = api.regular_mcmc(
+        model, kernel="rwmh", step_size=0.05, adapt_target="auto"
     )
-    ref = np.stack(ref)[400:]
-    q_reg = np.mean(queries[400:])
+    ref_tr = api.sample(baseline, jax.random.key(1), iters)
+    ref = np.asarray(ref_tr.theta[0])[burn:]
+    q_reg = np.asarray(ref_tr.stats.lik_queries[0])[burn:].mean()
 
     theta_map = model.map_estimate(jax.random.key(2), steps=300)
     tuned = model.map_tuned(theta_map)
-    spec = tuned.flymc_spec(
-        kernel="rwmh", capacity=256, cand_capacity=256, q_db=0.01,
-        adapt_target=0.234,
+    alg = api.firefly(
+        tuned, kernel="rwmh", capacity=256, cand_capacity=256, q_db=0.01,
+        step_size=0.05, adapt_target="auto",
     )
-    state, _, spec = tuned.init_chain(
-        spec, jnp.zeros(d), jax.random.key(3), step_size=0.05
-    )
-    samples, trace, total_q, _ = tuned.run_chain(spec, state, 1500)
-    fly = np.stack(samples)[400:]
+    trace = api.sample(alg, jax.random.key(3), iters)
+    fly = np.asarray(trace.theta[0])[burn:]
+    total_q = int(trace.total_queries)
 
-    # same posterior...
-    np.testing.assert_allclose(
-        fly.mean(0), ref.mean(0), atol=4 * ref.std(0).max() / 10
+    # same posterior — tolerance calibrated to the chains' own Monte-Carlo
+    # error (3 joint standard errors from the measured ESS; a fixed fraction
+    # of the posterior std is mis-calibrated at any finite chain length)
+    se = ref.std(0).max() * (
+        1.0 / np.sqrt(diagnostics.effective_sample_size(ref))
+        + 1.0 / np.sqrt(diagnostics.effective_sample_size(fly))
     )
+    np.testing.assert_allclose(fly.mean(0), ref.mean(0), atol=3 * float(se))
     # ...at a fraction of the likelihood queries (paper's claim)
-    assert total_q / 1500 < 0.25 * q_reg
+    assert total_q / iters < 0.25 * q_reg
 
 
 def test_lm_training_driver(tmp_path):
