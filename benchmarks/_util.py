@@ -1,0 +1,42 @@
+"""Shared benchmark infrastructure: timing and the BENCH_flymc.json contract.
+
+Every benchmark that persists results co-owns top-level keys in one JSON
+file at the repo root; :func:`merge_write` is the single place that encodes
+the read-merge-write policy so benchmarks never clobber each other's keys.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import jax
+
+BENCH_PATH = Path(__file__).resolve().parents[1] / "BENCH_flymc.json"
+
+
+def best_of(fn, reps: int = 3):
+    """Best-of-N wall time for ``fn()`` (blocks on the result).
+
+    Timer noise on shared machines exceeds the effects most benchmarks
+    resolve, so a single rep is never trusted. Returns (seconds, last out).
+    """
+    walls = []
+    out = None
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out)
+        walls.append(time.perf_counter() - t0)
+    return min(walls), out
+
+
+def merge_write(update: dict, path: Path = BENCH_PATH) -> dict:
+    """Merge ``update`` into the benchmark JSON's top level and write it."""
+    merged = {}
+    if path.exists():
+        merged = json.loads(path.read_text())
+    merged.update(update)
+    path.write_text(json.dumps(merged, indent=2) + "\n")
+    return merged

@@ -50,10 +50,23 @@ def main() -> None:
     from benchmarks.driver_overhead import main as bench_driver
 
     rec = bench_driver(quick=args.quick)
+    ov_ratio = rec["host_overhead_ratio"]
     rows.append(
         f"driver/scan,{rec['scan_driver']['us_per_step']:.1f},"
         f"legacy_us={rec['legacy_host_loop']['us_per_step']:.1f};"
-        f"overhead_ratio={rec['host_overhead_ratio']:.2f}"
+        f"us_ratio={rec['us_per_step_ratio']:.2f};"
+        f"overhead_ratio="
+        f"{'n/a' if ov_ratio is None else f'{ov_ratio:.2f}'}"
+    )
+
+    # --- θ-update backend: jnp vs fused pallas kernel ----------------------
+    from benchmarks.bright_glm import main as bench_backend
+
+    brec = bench_backend(quick=args.quick)
+    rows.append(
+        f"bright_glm/pallas,{brec['pallas']['us_per_eval']:.1f},"
+        f"jnp_us={brec['jnp']['us_per_eval']:.1f};"
+        f"interpret={brec['pallas']['interpret']}"
     )
 
     # --- §3.1 bound tightness ---------------------------------------------

@@ -70,6 +70,7 @@ def _spec_from(
     adapt_target,
     kernel_params,
     axis_names,
+    backend,
 ):
     """Normalize (model | explicit pieces) into (FlyMCSpec, data, stats)."""
     if model is not None:
@@ -82,6 +83,17 @@ def _spec_from(
             "firefly() needs a model, or explicit bound=, log_prior=, data="
         )
     bound = bounds_lib.get_bound(bound)
+    if backend not in ("jnp", "pallas"):
+        raise ValueError(
+            f"unknown backend {backend!r}; expected 'jnp' or 'pallas'"
+        )
+    if backend == "pallas" and bounds_lib.fused_family_of(bound) is None:
+        raise ValueError(
+            f"backend='pallas' requires a FusedBound "
+            f"(fused_family + fused_kernel_kwargs, not invalidated by "
+            f"log_lik/log_bound overrides); "
+            f"{type(bound).__name__} only implements the jnp path"
+        )
     if stats is None:
         stats = bound.suffstats(data)
     samplers.get_kernel(kernel)  # fail fast on unknown kernels
@@ -102,6 +114,7 @@ def _spec_from(
         kernel_kwargs=tuple(kernel_params),
         axis_names=tuple(axis_names),
         adapt_target=adapt_target,
+        backend=backend,
     )
     return spec, data, stats
 
@@ -123,6 +136,7 @@ def firefly(
     adapt_target: float | str | None = None,
     kernel_params=(),
     axis_names=(),
+    backend: str = "jnp",
 ) -> SamplingAlgorithm:
     """Build the FlyMC sampling algorithm (paper §2–3) as an (init, step) pair.
 
@@ -133,6 +147,12 @@ def firefly(
     ("logistic", "softmax", "student-t"). ``kernel`` names a registered
     θ-kernel ("rwmh", "mala", "slice", "hmc"); pass ``adapt_target="auto"``
     to adapt the step size toward the kernel's standard accept rate.
+
+    ``backend`` selects the θ-update likelihood engine: ``"jnp"`` (gather +
+    bound evaluation in plain XLA) or ``"pallas"`` (the fused
+    ``kernels/bright_glm`` gather+δ+reduction kernel; interpret-mode
+    fallback off-TPU). All three built-in bounds support ``"pallas"``;
+    custom bounds need the :class:`~repro.core.bounds.FusedBound` hook.
     """
     spec, data, stats = _spec_from(
         model,
@@ -140,7 +160,7 @@ def firefly(
         kernel=kernel, capacity=capacity, cand_capacity=cand_capacity,
         q_db=q_db, mode=mode, resample_fraction=resample_fraction,
         adapt_target=adapt_target, kernel_params=kernel_params,
-        axis_names=axis_names,
+        axis_names=axis_names, backend=backend,
     )
     return _firefly_from_spec(spec, data, stats, step_size)
 

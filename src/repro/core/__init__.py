@@ -13,10 +13,12 @@ from repro.core import brightness, diagnostics, samplers
 from repro.core.bounds import (
     Bound,
     CollapsedStats,
+    FusedBound,
     GLMData,
     LogisticBound,
     SoftmaxBound,
     StudentTBound,
+    fused_family_of,
     gaussian_log_prior,
     get_bound,
     laplace_log_prior,
@@ -40,6 +42,7 @@ from repro.core.samplers import get_kernel, register_kernel
 __all__ = [
     "Bound",
     "CollapsedStats",
+    "FusedBound",
     "GLMData",
     "LogisticBound",
     "SoftmaxBound",
@@ -50,6 +53,7 @@ __all__ = [
     "brightness",
     "diagnostics",
     "flymc_step",
+    "fused_family_of",
     "gaussian_log_prior",
     "get_bound",
     "get_kernel",

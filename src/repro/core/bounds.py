@@ -38,6 +38,9 @@ from typing import NamedTuple, Protocol, runtime_checkable
 import jax
 import jax.numpy as jnp
 
+from repro.core.numerics import jj_a as _jj_a
+from repro.core.numerics import jj_c as _jj_c
+
 
 class GLMData(NamedTuple):
     """A batch of GLM data rows.
@@ -97,6 +100,57 @@ class Bound(Protocol):
 
     def tighten(self, theta_map: jax.Array, data: GLMData) -> GLMData: ...
 
+    # Optional fused-delta hook (see FusedBound): bounds that additionally
+    # expose ``fused_family``/``fused_kernel_kwargs`` can route θ-updates
+    # through the fused Pallas kernel (FlyMCSpec.backend = "pallas").
+
+
+@runtime_checkable
+class FusedBound(Bound, Protocol):
+    """A Bound with a fused Pallas δ-kernel (the backend="pallas" hot path).
+
+    ``fused_family`` names the family implemented by
+    :mod:`repro.kernels.bright_glm` ("logistic" | "student_t" | "softmax");
+    ``fused_kernel_kwargs()`` returns the static scalar parameters the kernel
+    needs beyond (x, t, ξ, θ) — e.g. (ν, σ) for the Student-t bound. The hook
+    is optional: plain Bounds keep working on the jnp backend, and
+    ``FlyMCSpec.backend = "pallas"`` is rejected up front for bounds that
+    don't implement it.
+    """
+
+    fused_family: str
+
+    def fused_kernel_kwargs(self) -> dict: ...
+
+
+def fused_family_of(bound) -> str | None:
+    """The bound's fused-kernel family, or None if it must use the jnp path.
+
+    Guards against an inheritance accident: a subclass that overrides
+    ``log_lik``/``log_bound`` but merely *inherits* ``fused_family`` would
+    dispatch θ-updates to a fused kernel hard-coding the parent's math while
+    z-updates use the overridden jnp math — silently sampling the wrong
+    posterior. The hook therefore only counts if no likelihood method is
+    overridden below the class that declared it; a subclass that changes the
+    math opts back in by re-declaring ``fused_family`` (asserting its
+    overrides are kernel-compatible).
+    """
+    cls = type(bound)
+    declarer = next(
+        (k for k in cls.__mro__ if "fused_family" in vars(k)), None
+    )
+    if declarer is None or getattr(cls, "fused_family", None) is None:
+        return None
+    for meth in ("log_lik", "log_bound"):
+        effective = next((k for k in cls.__mro__ if meth in vars(k)), None)
+        if (
+            effective is not None
+            and effective is not declarer
+            and issubclass(effective, declarer)
+        ):
+            return None  # overridden below the fused_family declaration
+    return cls.fused_family
+
 
 BOUND_REGISTRY: dict[str, type] = {}
 
@@ -131,17 +185,9 @@ def get_bound(bound) -> Bound:
 # ---------------------------------------------------------------------------
 
 
-def _jj_a(xi: jax.Array) -> jax.Array:
-    """a(ξ) = -tanh(ξ/2)/(4ξ), with the ξ→0 limit -1/8 handled exactly."""
-    safe = jnp.where(jnp.abs(xi) < 1e-4, 1.0, xi)
-    a = -jnp.tanh(safe / 2.0) / (4.0 * safe)
-    # Taylor: -1/8 + ξ²/96 + O(ξ⁴)
-    return jnp.where(jnp.abs(xi) < 1e-4, -0.125 + xi * xi / 96.0, a)
-
-
-def _jj_c(xi: jax.Array) -> jax.Array:
-    """c(ξ) = -a·ξ² + ξ/2 - log(eᶻ+1); tightness: log B(±ξ) = log σ(±ξ)."""
-    return -_jj_a(xi) * xi * xi + xi / 2.0 - jax.nn.softplus(xi)
+# _jj_a/_jj_c live in repro.core.numerics (shared with the Pallas kernel so
+# the two likelihood paths cannot drift); re-imported above under the old
+# names for backward compatibility.
 
 
 class LogisticBound:
@@ -153,6 +199,11 @@ class LogisticBound:
     """
 
     name = "jaakkola-jordan"
+    fused_family = "logistic"
+
+    @staticmethod
+    def fused_kernel_kwargs() -> dict:
+        return {}
 
     @staticmethod
     def log_lik(theta: jax.Array, data: GLMData) -> jax.Array:
@@ -218,6 +269,11 @@ class SoftmaxBound:
     """
 
     name = "bohning"
+    fused_family = "softmax"
+
+    @staticmethod
+    def fused_kernel_kwargs() -> dict:
+        return {}
 
     @staticmethod
     def log_lik(theta: jax.Array, data: GLMData) -> jax.Array:
@@ -289,10 +345,14 @@ class StudentTBound:
     """
 
     name = "student-t-tangent"
+    fused_family = "student_t"
 
     def __init__(self, nu: float = 4.0, sigma: float = 1.0):
         self.nu = float(nu)
         self.sigma = float(sigma)
+
+    def fused_kernel_kwargs(self) -> dict:
+        return {"nu": self.nu, "sigma": self.sigma}
 
     def _log_t_const(self, dtype) -> jax.Array:
         nu = self.nu

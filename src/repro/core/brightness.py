@@ -101,12 +101,22 @@ def bright_buffer(state: BrightState, capacity: int):
 
 
 def dark_buffer(state: BrightState, capacity: int):
-    """Padded gather buffer over the *dark* tail (arr[num : num+capacity])."""
+    """Padded gather buffer over the *dark* tail (arr[num : num+capacity]).
+
+    Robust to ``capacity > N``: the slice start is clamped to [0, N - cap]
+    (``min(num, n - capacity)`` went negative there, which XLA silently
+    re-clamps — masking the bug — and a slice wider than N is a trace
+    error), and the buffer is padded out to ``capacity`` with masked slots.
+    """
     n = state.arr.shape[0]
-    start = jnp.minimum(state.num, n - capacity)
-    idx = jax.lax.dynamic_slice_in_dim(state.arr, start, capacity)
-    offset = jnp.arange(capacity, dtype=jnp.int32) + start
+    cap = min(capacity, n)
+    start = jnp.clip(state.num, 0, n - cap)
+    idx = jax.lax.dynamic_slice_in_dim(state.arr, start, cap)
+    offset = jnp.arange(cap, dtype=jnp.int32) + start
     mask = offset >= state.num
+    if capacity > n:
+        idx = jnp.pad(idx, (0, capacity - n))
+        mask = jnp.pad(mask, (0, capacity - n))
     return idx, mask
 
 

@@ -37,30 +37,9 @@ import jax.numpy as jnp
 from repro.core import brightness, samplers
 from repro.core.bounds import CollapsedStats, GLMData
 
-
-# ---------------------------------------------------------------------------
-# Numerics
-# ---------------------------------------------------------------------------
-
-_DELTA_FLOOR = 1e-10  # δ = logL - logB ≥ 0 in exact math; clamp FP noise.
-
-
-def log_expm1(delta: jax.Array) -> jax.Array:
-    """Stable log(exp(δ) - 1) = log L̃ for δ ≥ 0.
-
-    Both branches receive guarded inputs (double-where): in f32,
-    exp(-δ) rounds to 1.0 for δ ≲ 1e-8 and log1p(-1.0) = -inf would poison
-    the gradient of the *unselected* branch (0 · inf = NaN).
-    """
-    d = jnp.maximum(delta, _DELTA_FLOOR)
-    small = d < 15.0
-    d_small = jnp.where(small, d, 1.0)
-    d_big = jnp.where(small, 20.0, d)
-    return jnp.where(
-        small,
-        jnp.log(jnp.expm1(d_small)),
-        d_big + jnp.log1p(-jnp.exp(-jnp.minimum(d_big, 80.0))),
-    )
+# Numerics are single-sourced in repro.core.numerics (shared with the fused
+# Pallas kernel); log_expm1 stays re-exported here for backward compat.
+from repro.core.numerics import _DELTA_FLOOR, log_expm1  # noqa: F401
 
 
 def _tree_gather(data: GLMData, idx: jax.Array) -> GLMData:
@@ -87,6 +66,7 @@ class FlyMCSpec:
     kernel_kwargs: tuple = ()  # extra static kwargs for the θ-kernel
     axis_names: tuple = ()  # mesh axes carrying data shards (psum)
     adapt_target: float | None = None  # accept-rate target during warmup
+    backend: str = "jnp"  # θ-update likelihood engine: jnp | pallas
 
     def needs_grad(self) -> bool:
         return samplers.get_kernel(self.kernel).needs_grad
@@ -126,7 +106,54 @@ def make_joint_logpost(
     Evaluates only the ``C`` gathered rows (the paper's bright minibatch) plus
     the O(D²) collapsed bound product. Under shard_map the bright sum is
     psum'd; prior + collapsed terms are replicated and added once.
+
+    ``bright_mask`` must be a PREFIX mask (first ``k`` slots valid, the rest
+    padding) as produced by :func:`repro.core.brightness.bright_buffer`: the
+    pallas backend hands the kernel only the valid-slot *count*, so a
+    non-prefix mask would be honored by the jnp path but silently
+    misinterpreted by the fused one.
+
+    ``spec.backend`` selects the likelihood engine. ``"jnp"`` materializes
+    the gathered rows and evaluates the bound in plain XLA; ``"pallas"``
+    routes through the fused :func:`repro.kernels.bright_glm.ops.bright_glm`
+    kernel (gather + δ + masked log L̃ reduction in one pass, gradient via
+    its custom VJP) for bounds exposing the
+    :class:`~repro.core.bounds.FusedBound` hook — with interpret-mode
+    fallback off-TPU so both paths run everywhere.
     """
+
+    if spec.backend == "pallas":
+        from repro.core.bounds import fused_family_of
+
+        fam = fused_family_of(spec.bound)
+        if fam is None:
+            raise ValueError(
+                f"backend='pallas' needs a FusedBound, but "
+                f"{type(spec.bound).__name__} has no usable fused_family "
+                "hook (missing, or log_lik/log_bound overridden without "
+                "re-declaring it)"
+            )
+        kernel_kwargs = spec.bound.fused_kernel_kwargs()
+        # Prefix-mask contract (see docstring): count == first-k-valid.
+        n_bright = jnp.sum(bright_mask).astype(jnp.int32)
+
+        def f_pallas(theta: jax.Array):
+            from repro.kernels.bright_glm.ops import bright_glm
+
+            delta, s = bright_glm(
+                data.x, data.t, data.xi, bright_idx, n_bright, theta,
+                family=fam, **kernel_kwargs,
+            )
+            for ax in spec.axis_names:
+                s = jax.lax.psum(s, ax)
+            lp = spec.log_prior(theta) + spec.bound.collapsed(theta, stats) + s
+            return lp, delta
+
+        return f_pallas
+    if spec.backend != "jnp":
+        raise ValueError(
+            f"unknown backend {spec.backend!r}; expected 'jnp' or 'pallas'"
+        )
 
     rows = _tree_gather(data, bright_idx)
 
@@ -251,11 +278,20 @@ def _explicit_z_update(
     bright: brightness.BrightState,
     delta_full: jax.Array,
 ):
-    """Algorithm 1 lines 3–6: Gibbs resampling of a random fixed-size subset."""
+    """Algorithm 1 lines 3–6: Gibbs resampling of a random fixed-size subset.
+
+    The subset is drawn WITHOUT replacement (a permutation slice): with
+    replacement, a datum appearing twice in ``idx`` makes the
+    ``z.at[idx].set`` scatter order-nondeterministic — the realized z (and
+    cached δ) for that datum would be whichever duplicate the scatter
+    happened to apply last, which XLA does not define.
+    """
     n = data.x.shape[0]
     r = max(1, int(round(n * spec.resample_fraction)))
     k_idx, k_z = jax.random.split(key)
-    idx = jax.random.randint(k_idx, (r,), 0, n)
+    idx = jax.lax.slice_in_dim(
+        jax.random.permutation(k_idx, jnp.arange(n, dtype=jnp.int32)), 0, r
+    )
     rows = _tree_gather(data, idx)
     delta = spec.bound.log_lik(theta, rows) - spec.bound.log_bound(theta, rows)
     # p(z=1) = (L-B)/L = -expm1(-δ)

@@ -1,0 +1,132 @@
+"""Shared FlyMC numerics — the single source of truth for δ and log L̃ math.
+
+Everything here is consumed by *both* the pure-jnp reference path
+(:mod:`repro.core.bounds`, :mod:`repro.core.flymc`,
+:mod:`repro.kernels.bright_glm.ref`) and the fused Pallas kernel
+(:mod:`repro.kernels.bright_glm.kernel`). Keeping one copy is a correctness
+requirement, not a style choice: the two paths feed the same MH accept
+decisions, so a guard present on one side and missing on the other (as
+happened with the ``min(d, 80)`` clamp in ``log_expm1``) silently changes
+the realized chain for extreme δ.
+
+All functions are plain jnp element-wise math — safe to trace inside a
+Pallas kernel body and under jit/vmap/shard_map alike.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_DELTA_FLOOR = 1e-10  # δ = logL - logB ≥ 0 in exact math; clamp FP noise.
+
+
+def log_expm1(delta: jax.Array) -> jax.Array:
+    """Stable log(exp(δ) - 1) = log L̃ for δ ≥ 0.
+
+    Both branches receive guarded inputs (double-where): in f32,
+    exp(-δ) rounds to 1.0 for δ ≲ 1e-8 and log1p(-1.0) = -inf would poison
+    the gradient of the *unselected* branch (0 · inf = NaN). The inner
+    ``min(d, 80)`` keeps exp(-δ) from flushing to a denormal-zero whose
+    log1p gradient is garbage for extreme δ.
+    """
+    d = jnp.maximum(delta, _DELTA_FLOOR)
+    small = d < 15.0
+    d_small = jnp.where(small, d, 1.0)
+    d_big = jnp.where(small, 20.0, d)
+    return jnp.where(
+        small,
+        jnp.log(jnp.expm1(d_small)),
+        d_big + jnp.log1p(-jnp.exp(-jnp.minimum(d_big, 80.0))),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Jaakkola–Jordan (logistic) bound pieces
+# ---------------------------------------------------------------------------
+
+
+def jj_a(xi: jax.Array) -> jax.Array:
+    """a(ξ) = -tanh(ξ/2)/(4ξ), with the ξ→0 limit -1/8 handled exactly."""
+    safe = jnp.where(jnp.abs(xi) < 1e-4, 1.0, xi)
+    a = -jnp.tanh(safe / 2.0) / (4.0 * safe)
+    # Taylor: -1/8 + ξ²/96 + O(ξ⁴)
+    return jnp.where(jnp.abs(xi) < 1e-4, -0.125 + xi * xi / 96.0, a)
+
+
+def jj_c(xi: jax.Array) -> jax.Array:
+    """c(ξ) = -a·ξ² + ξ/2 - log(eᶻ+1); tightness: log B(±ξ) = log σ(±ξ)."""
+    return -jj_a(xi) * xi * xi + xi / 2.0 - jax.nn.softplus(xi)
+
+
+def logistic_delta(s: jax.Array, xi: jax.Array) -> jax.Array:
+    """δ = log L - log B for the Jaakkola–Jordan bound, s = t·θᵀx."""
+    log_l = -jax.nn.softplus(-s)
+    log_b = jj_a(xi) * s * s + 0.5 * s + jj_c(xi)
+    return log_l - log_b
+
+
+# ---------------------------------------------------------------------------
+# Student-t tangent bound
+# ---------------------------------------------------------------------------
+
+
+def student_t_delta(
+    r: jax.Array, xi: jax.Array, nu: float, sigma: float
+) -> jax.Array:
+    """δ for the tangent-in-r² Gaussian bound on the Student-t density.
+
+    ``r`` is the residual t - θᵀx. The density's additive constants cancel
+    in log L - log B, so only the log1p terms and the tangent remain.
+    """
+    z2 = (r / sigma) ** 2
+    u0 = (xi / sigma) ** 2
+    fprime = -((nu + 1.0) / 2.0) / (nu + u0)
+    f_z = -((nu + 1.0) / 2.0) * jnp.log1p(z2 / nu)
+    f_u0 = -((nu + 1.0) / 2.0) * jnp.log1p(u0 / nu)
+    return f_z - (f_u0 + fprime * (z2 - u0))
+
+
+# ---------------------------------------------------------------------------
+# Böhning (softmax) bound — lane-padded variant for the Pallas kernel
+# ---------------------------------------------------------------------------
+
+
+def softmax_delta_padded(
+    eta: jax.Array,  # (B, Kp) logits θx, columns ≥ n_classes are padding
+    eta0: jax.Array,  # (B, Kp) tangency logits (data.xi), same padding
+    t_onehot: jax.Array,  # (B, Kp) one-hot labels (0 on padding)
+    n_classes: int,
+) -> jax.Array:
+    """δ = log L - log B for the Böhning bound on lane-padded (B, Kp) logits.
+
+    Padding columns (k ≥ n_classes) are excluded from every reduction, so
+    the result equals :class:`repro.core.bounds.SoftmaxBound`'s
+    ``log_lik - log_bound`` on the unpadded (B, K) arrays. Kept next to the
+    other δ formulas so kernel and reference share one definition of the
+    masked math.
+    """
+    valid = (
+        jax.lax.broadcasted_iota(jnp.int32, eta.shape, eta.ndim - 1) < n_classes
+    )
+    neg = jnp.asarray(-1e30, eta.dtype)
+
+    def lse(e):  # masked logsumexp over the valid columns, (B, 1)
+        e_m = jnp.where(valid, e, neg)
+        m = jnp.max(e_m, axis=-1, keepdims=True)
+        return m + jnp.log(
+            jnp.sum(jnp.where(valid, jnp.exp(e_m - m), 0.0), axis=-1,
+                    keepdims=True)
+        )
+
+    lse0 = lse(eta0)
+    at_t = lambda e: jnp.sum(t_onehot * jnp.where(valid, e, 0.0), axis=-1)
+    ll_eta = at_t(eta) - lse(eta)[..., 0]  # log L(η) = η[t] - lse(η)
+    ll_eta0 = at_t(eta0) - lse0[..., 0]
+    g = t_onehot - jnp.where(valid, jnp.exp(eta0 - lse0), 0.0)
+    d = jnp.where(valid, eta - eta0, 0.0)
+    # A = ½(I - 𝟙𝟙ᵀ/K) over the *valid* columns only (d is 0 on padding).
+    a_d = 0.5 * (d - jnp.sum(d, axis=-1, keepdims=True) / n_classes)
+    quad = jnp.sum(d * a_d, axis=-1)
+    log_b = ll_eta0 + jnp.sum(g * d, axis=-1) - 0.5 * quad
+    return ll_eta - log_b

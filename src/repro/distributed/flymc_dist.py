@@ -54,7 +54,10 @@ def _state_pspecs(axes):
 def make_dist_flymc(bound, log_prior, mesh, n_global: int, **spec_kw):
     """Build (spec, init_fn, step_fn, stats_fn) for a data-sharded chain.
 
-    ``capacity``/``cand_capacity`` in spec_kw are PER-SHARD.
+    ``capacity``/``cand_capacity`` in spec_kw are PER-SHARD. Pass
+    ``backend="pallas"`` to route each shard's θ-update through the fused
+    bright-GLM kernel (the pallas_call runs shard-local inside shard_map;
+    only the scalar log L̃ sum is psum'd, exactly like the jnp path).
     """
     axes = tuple(mesh.axis_names)
     n_shards = mesh.devices.size
@@ -113,6 +116,8 @@ def dist_algorithm(bound, log_prior, mesh, data: GLMData, **spec_kw):
     """A data-sharded FlyMC chain as a repro.api SamplingAlgorithm.
 
     ``data`` must already be placed on the mesh (see :func:`shard_data`).
+    ``spec_kw`` accepts every FlyMCSpec field, including
+    ``backend="pallas"`` for the fused θ-update kernel.
     The returned algorithm plugs into ``repro.api.sample`` — the chunked
     ``lax.scan`` runs over the shard-mapped step, so the whole chunk stays on
     device and capacity growth follows the same chunk-boundary re-run

@@ -1,132 +1,166 @@
 """Pallas TPU kernel: fused gather + bound-corrected likelihood (FlyMC core).
 
 TPU adaptation of the paper's "loop over bright data" (DESIGN.md §3.1): the
-bright index buffer arrives as a *scalar-prefetch* operand, so each grid
-step's BlockSpec index_map DMAs exactly the HBM rows of the bright points —
-the gather never materializes in HBM. Per block of BR rows the kernel fuses:
+bright index buffer arrives as a *scalar-prefetch* operand and the feature
+matrix stays in HBM (``memory_space=ANY``). Each grid step DMAs a true
+(block_rows, Dp) tile — ``block_rows`` independent row copies issued
+back-to-back and awaited together, so the gather overlaps instead of
+serializing one (1, Dp) pipeline slot per row — and then fuses:
 
-    row · θ  (MXU)  →  log L, log B (VPU scalar math)  →  δ
-    →  log(expm1 δ) masked  (the Alg.-1 line-19 factor)
+    tile · θᵀ  (MXU)  →  log L, log B (VPU scalar math)  →  δ
+    →  Σ masked log(expm1 δ)  (the Alg.-1 line-19 factor, reduced in-kernel)
 
-Outputs per-row δ (reused as the z-kernel's cache, Alg. 2) and the masked
-contribution; the O(C) reduction happens in the jit wrapper.
+Outputs: per-row δ (reused as the z-kernel's cache, Alg. 2) and a single
+(1, 1) running total accumulated across the sequential TPU grid — the O(C)
+reduction never leaves the kernel.
 
-Layout: D is padded to a multiple of 128 lanes; BR rows (8-multiple
-sublanes) per grid step. VMEM footprint per step: BR·Dp·4 + Dp·4 bytes.
+Families: logistic (Jaakkola–Jordan), student_t (tangent bound), softmax
+(Böhning, matrix θ). All δ formulas come from :mod:`repro.core.numerics` —
+the same code the jnp reference path uses, so kernel and reference cannot
+drift.
+
+Layout: θ (and K for softmax) padded to a multiple of 128 lanes; the
+feature matrix itself stays UNPADDED in HBM — rows are DMA'd into the
+first D lanes of a zero-initialized padded VMEM tile, so HBM never holds
+a lane-padded copy of the dataset. BR rows (8-multiple sublanes) per grid
+step. VMEM per step: BR·Dp·4 for the row tile plus the θ block.
+
+The O(C) per-row operands (t, ξ) are pre-gathered by the ops wrapper —
+they are 4–Kp·4 bytes/row next to the Dp·4 bytes/row feature gather that
+this kernel exists to fuse.
 """
 
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.numerics import (
+    log_expm1,
+    logistic_delta,
+    softmax_delta_padded,
+    student_t_delta,
+)
 
-def _logistic_delta(s, xi):
-    """δ = log L - log B for the Jaakkola–Jordan bound, s = t·θᵀx."""
-    safe = jnp.where(jnp.abs(xi) < 1e-4, 1.0, xi)
-    a = -jnp.tanh(safe / 2.0) / (4.0 * safe)
-    a = jnp.where(jnp.abs(xi) < 1e-4, -0.125 + xi * xi / 96.0, a)
-    c = -a * xi * xi + xi / 2.0 - jax.nn.softplus(xi)
-    log_l = -jax.nn.softplus(-s)
-    log_b = a * s * s + 0.5 * s + c
-    return log_l - log_b
-
-
-def _student_t_delta(r, xi, nu, sigma):
-    """δ for the tangent-in-r² Gaussian bound on the Student-t density."""
-    z2 = (r / sigma) ** 2
-    u0 = (xi / sigma) ** 2
-    fprime = -((nu + 1.0) / 2.0) / (nu + u0)
-    # log L - log B = f(z²) - [f(u₀) + f'(u₀)(z² - u₀)] with f's constants
-    # cancelling:
-    f_z = -((nu + 1.0) / 2.0) * jnp.log1p(z2 / nu)
-    f_u0 = -((nu + 1.0) / 2.0) * jnp.log1p(u0 / nu)
-    return f_z - (f_u0 + fprime * (z2 - u0))
-
-
-def _log_expm1(d):
-    d = jnp.maximum(d, 1e-10)
-    small = d < 15.0
-    d_small = jnp.where(small, d, 1.0)
-    d_big = jnp.where(small, 20.0, d)
-    return jnp.where(
-        small,
-        jnp.log(jnp.expm1(d_small)),
-        d_big + jnp.log1p(-jnp.exp(-d_big)),
-    )
+FAMILIES = ("logistic", "student_t", "softmax")
 
 
 def bright_glm_pallas(
-    x: jax.Array,  # (N, Dp) — D padded to 128-lane multiple
-    t: jax.Array,  # (N, 1)
-    xi: jax.Array,  # (N, 1)
-    idx: jax.Array,  # (C,) int32 bright row ids (padded; C % BR == 0)
-    n_bright: jax.Array,  # () int32
-    theta: jax.Array,  # (1, Dp)
+    x: jax.Array,  # (N, D) — unpadded; stays in HBM, rows DMA'd on demand
+    t: jax.Array,  # (C, 1) f32 labels/responses, or int32 class ids (softmax)
+    xi: jax.Array,  # (C, 1) f32, or (C, Kp) tangency logits (softmax)
+    idx: jax.Array,  # (C,) int32 bright row ids, clamped to [0, N); C % BR == 0
+    n_bright: jax.Array,  # (1,) int32
+    theta: jax.Array,  # (1, Dp), or (Kp, Dp) zero-padded (softmax)
     family: str = "logistic",
     nu: float = 4.0,
     sigma: float = 1.0,
+    n_classes: int = 0,
     block_rows: int = 8,
-    interpret: bool = True,
+    interpret: bool = False,
 ):
+    """Returns (delta (C, 1) f32, total (1, 1) f32).
+
+    ``x`` is deliberately NOT lane-padded: each DMA copies the raw (D,) row
+    into the first D lanes of a zero-initialized (BR, Dp) VMEM scratch tile,
+    so the dataset is never duplicated at (N, Dp) in HBM and per-row DMA
+    traffic is D·4 bytes, not Dp·4. The scratch's padding lanes are zeroed
+    once (grid step 0) and never written again, and θ's padding lanes are
+    zero, so the Dp-wide dot product is exact.
+    """
+    if family not in FAMILIES:
+        raise ValueError(f"unknown family {family!r}; expected {FAMILIES}")
     c = idx.shape[0]
-    dp = x.shape[1]
+    d = x.shape[1]
+    dp = theta.shape[1]
+    assert dp % 128 == 0 and dp >= d, (dp, d)
     assert c % block_rows == 0, (c, block_rows)
+    br = block_rows
 
-    # One DMA per bright row: block (1, Dp) whose source row comes from the
-    # scalar-prefetched index buffer. Pallas BlockSpec cannot express
-    # per-sublane gathers within one block, so the row dimension is part of
-    # the grid: grid = (C/BR, BR) with (1, Dp) blocks per step.
-    def gather_im(i, r, idx_ref, nb_ref):
-        return (idx_ref[i * block_rows + r], 0)
+    def kernel(idx_ref, nb_ref, x_hbm, t_ref, xi_ref, theta_ref,
+               delta_ref, total_ref, rows, sems):
+        i = pl.program_id(0)
+        base = i * br
 
-    grid = (c // block_rows, block_rows)
+        @pl.when(i == 0)
+        def _zero_padding_lanes():
+            rows[...] = jnp.zeros_like(rows)
 
-    def out_im(i, r, idx_ref, nb_ref):
-        return (i * block_rows + r, 0)
+        def row_dma(r):
+            return pltpu.make_async_copy(
+                x_hbm.at[idx_ref[base + r]], rows.at[r, pl.ds(0, d)],
+                sems.at[r],
+            )
 
-    def kernel(idx_ref, nb_ref, x_ref, t_ref, xi_ref, theta_ref,
-               delta_ref, contrib_ref):
-        i, r = pl.program_id(0), pl.program_id(1)
-        row = x_ref[...]  # (1, Dp)
+        for r in range(br):
+            row_dma(r).start()
+        for r in range(br):
+            row_dma(r).wait()
+
+        tile = rows[...]  # (BR, Dp)
         theta_v = theta_ref[...]
-        s = jnp.sum(row * theta_v)
-        t_v = t_ref[0, 0]
-        xi_v = xi_ref[0, 0]
-        if family == "logistic":
-            delta = _logistic_delta(t_v * s, xi_v)
+        if family == "softmax":
+            eta = jax.lax.dot_general(
+                tile, theta_v, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )  # (BR, Kp)
+            t_v = t_ref[...]  # (BR, 1) int32
+            col = jax.lax.broadcasted_iota(jnp.int32, eta.shape, 1)
+            onehot = (col == t_v).astype(eta.dtype)
+            delta = softmax_delta_padded(eta, xi_ref[...], onehot, n_classes)
+            delta = delta[:, None]
         else:
-            delta = _student_t_delta(t_v - s, xi_v, nu, sigma)
-        row_id = i * block_rows + r
-        mask = row_id < nb_ref[0]
-        delta_ref[0, 0] = delta
-        contrib_ref[0, 0] = jnp.where(mask, _log_expm1(delta), 0.0)
+            s = jax.lax.dot_general(
+                tile, theta_v, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )  # (BR, 1)
+            t_v = t_ref[...]
+            xi_v = xi_ref[...]
+            if family == "logistic":
+                delta = logistic_delta(t_v * s, xi_v)
+            else:
+                delta = student_t_delta(t_v - s, xi_v, nu, sigma)
 
-    out_shape = (
-        jax.ShapeDtypeStruct((c, 1), jnp.float32),
-        jax.ShapeDtypeStruct((c, 1), jnp.float32),
-    )
+        row_id = base + jax.lax.broadcasted_iota(jnp.int32, (br, 1), 0)
+        mask = row_id < nb_ref[0]
+        delta_ref[...] = delta
+        part = jnp.sum(jnp.where(mask, log_expm1(delta), 0.0))
+
+        # TPU grid steps run sequentially, so a (1, 1) block mapped to the
+        # same slot every step is a race-free accumulator.
+        @pl.when(i == 0)
+        def _init():
+            total_ref[0, 0] = 0.0
+
+        total_ref[0, 0] += part
+
+    kp = xi.shape[1] if family == "softmax" else 1
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,  # idx, n_bright
-        grid=grid,
+        grid=(c // br,),
         in_specs=[
-            pl.BlockSpec((1, dp), gather_im),  # x rows (gathered)
-            pl.BlockSpec((1, 1), gather_im),  # t
-            pl.BlockSpec((1, 1), gather_im),  # xi
-            pl.BlockSpec((1, dp), lambda i, r, *_: (0, 0)),  # theta
+            pl.BlockSpec(memory_space=pltpu.ANY),  # x: gathered by DMA
+            pl.BlockSpec((br, 1), lambda i, *_: (i, 0)),  # t
+            pl.BlockSpec((br, kp), lambda i, *_: (i, 0)),  # xi
+            pl.BlockSpec(theta.shape, lambda i, *_: (0, 0)),  # theta
         ],
         out_specs=[
-            pl.BlockSpec((1, 1), out_im),
-            pl.BlockSpec((1, 1), out_im),
+            pl.BlockSpec((br, 1), lambda i, *_: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, *_: (0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((br, dp), jnp.float32),
+            pltpu.SemaphoreType.DMA((br,)),
         ],
     )
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=out_shape,
+        out_shape=(
+            jax.ShapeDtypeStruct((c, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ),
         interpret=interpret,
-    )(idx, jnp.reshape(n_bright, (1,)), x, t, xi, theta)
+    )(idx, n_bright, x, t, xi, theta)

@@ -1,4 +1,25 @@
-"""jit'd wrapper for the bright-GLM kernel: padding, layout, reduction."""
+"""Wrapper for the bright-GLM kernel: padding, layout, clamping, custom VJP.
+
+This is the ``backend="pallas"`` entry point used by
+:func:`repro.core.flymc.make_joint_logpost`. It
+
+  * pads θ (and K for softmax) to 128-lane multiples and the index buffer
+    to a ``block_rows`` multiple — the feature matrix itself is handed to
+    the kernel unpadded and padded per-tile in VMEM by the DMA,
+  * **clamps** every index into ``[0, N)`` before the ``pallas_call`` —
+    padded buffer slots (``bright_buffer`` capacity padding, ``jnp.pad``
+    fill, the candidate buffer's out-of-range sentinel ``N``) would
+    otherwise reach the in-kernel DMA as reads past the end of ``x``,
+    which is undefined; clamped rows are computed and then masked to zero
+    by ``n_bright`` exactly like the jnp reference path,
+  * pre-gathers the O(C) per-row scalars (t, ξ) so the kernel only fuses
+    the O(C·D) feature gather,
+  * defines a ``jax.custom_vjp`` so gradient kernels (MALA/HMC) work
+    through the fused forward: the backward pass re-evaluates the gathered
+    rows with the pure-jnp reference (same O(C·D) cost class, shared
+    numerics) and scatters row cotangents back — Pallas forward speed,
+    reference-exact gradients.
+"""
 
 from __future__ import annotations
 
@@ -7,49 +28,126 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.bright_glm.kernel import bright_glm_pallas
+from repro.kernels.bright_glm.kernel import FAMILIES, bright_glm_pallas
+from repro.kernels.bright_glm.ref import bright_glm_ref
 
 
-def _pad_lanes(d: int, mult: int = 128) -> int:
+def _pad_to(d: int, mult: int) -> int:
     return ((d + mult - 1) // mult) * mult
 
 
-@partial(
-    jax.jit,
-    static_argnames=("family", "nu", "sigma", "block_rows", "interpret"),
-)
+def default_interpret() -> bool:
+    """Interpret-mode fallback: compile for real only on TPU backends."""
+    return jax.default_backend() != "tpu"
+
+
+def _forward(cfg, x, t, xi, idx, n_bright, theta):
+    family, nu, sigma, block_rows, interpret = cfg
+    n, d = x.shape
+    dp = _pad_to(d, 128)
+    c = idx.shape[0]
+    cp = _pad_to(max(c, block_rows), block_rows)
+
+    # Satellite fix: indices ≥ N (buffer padding / candidate sentinels) are
+    # undefined for the in-kernel row DMA — clamp, never trust the caller.
+    idxp = jnp.clip(
+        jnp.pad(idx.astype(jnp.int32), (0, cp - c)), 0, n - 1
+    )
+    # x goes to the kernel UNPADDED (the DMA pads into VMEM): lane-padding
+    # here would materialize a Dp/D-times copy of the dataset in HBM on
+    # every evaluation.
+    xp = x.astype(jnp.float32)
+    nb = jnp.reshape(n_bright.astype(jnp.int32), (1,))
+
+    if family == "softmax":
+        k = theta.shape[0]
+        kp = _pad_to(k, 128)
+        tb = jnp.take(t.astype(jnp.int32), idxp)[:, None]  # (cp, 1)
+        xib = jnp.pad(
+            jnp.take(xi.astype(jnp.float32), idxp, axis=0),
+            ((0, 0), (0, kp - k)),
+        )  # (cp, Kp)
+        thetap = jnp.pad(
+            theta.astype(jnp.float32), ((0, kp - k), (0, dp - d))
+        )  # (Kp, Dp)
+        n_classes = k
+    else:
+        tb = jnp.take(t.astype(jnp.float32), idxp)[:, None]
+        xib = jnp.take(xi.astype(jnp.float32), idxp)[:, None]
+        thetap = jnp.pad(theta.astype(jnp.float32), (0, dp - d))[None, :]
+        n_classes = 0
+
+    delta, total = bright_glm_pallas(
+        xp, tb, xib, idxp, nb, thetap,
+        family=family, nu=nu, sigma=sigma, n_classes=n_classes,
+        block_rows=block_rows, interpret=interpret,
+    )
+    return delta[:c, 0], total[0, 0]
+
+
+def _ref_outputs(cfg, x, t, xi, idx, n_bright, theta):
+    """(delta, total) via the pure-jnp reference — the VJP's forward."""
+    family = cfg[0]
+    n = x.shape[0]
+    idxc = jnp.clip(idx.astype(jnp.int32), 0, n - 1)
+    mask = jnp.arange(idx.shape[0]) < n_bright
+    delta, contrib = bright_glm_ref(
+        x, t, xi, idxc, mask, theta, family=family, nu=cfg[1], sigma=cfg[2]
+    )
+    return delta, jnp.sum(contrib)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _bright_glm_vjp(cfg, x, t, xi, idx, n_bright, theta):
+    return _forward(cfg, x, t, xi, idx, n_bright, theta)
+
+
+def _vjp_fwd(cfg, x, t, xi, idx, n_bright, theta):
+    out = _forward(cfg, x, t, xi, idx, n_bright, theta)
+    return out, (x, t, xi, idx, n_bright, theta)
+
+
+def _vjp_bwd(cfg, res, cts):
+    x, t, xi, idx, n_bright, theta = res
+    t_is_int = jnp.issubdtype(t.dtype, jnp.integer)
+    if t_is_int:
+        fn = lambda x_, xi_, th: _ref_outputs(cfg, x_, t, xi_, idx, n_bright, th)
+        _, vjp = jax.vjp(fn, x, xi, theta)
+        dx, dxi, dth = vjp(cts)
+        dt = None
+    else:
+        fn = lambda x_, t_, xi_, th: _ref_outputs(
+            cfg, x_, t_, xi_, idx, n_bright, th
+        )
+        _, vjp = jax.vjp(fn, x, t, xi, theta)
+        dx, dt, dxi, dth = vjp(cts)
+    return dx, dt, dxi, None, None, dth
+
+
+_bright_glm_vjp.defvjp(_vjp_fwd, _vjp_bwd)
+
+
 def bright_glm(
-    x: jax.Array,  # (N, D)
-    t: jax.Array,  # (N,)
-    xi: jax.Array,  # (N,)
-    idx: jax.Array,  # (C,)
-    n_bright: jax.Array,  # ()
-    theta: jax.Array,  # (D,)
+    x: jax.Array,  # (N, D) features
+    t: jax.Array,  # (N,) labels / responses / class ids
+    xi: jax.Array,  # (N,) bound tightness, or (N, K) tangency logits
+    idx: jax.Array,  # (C,) bright row ids (padding slots may be ≥ N)
+    n_bright: jax.Array,  # () int — first n_bright slots of idx are valid
+    theta: jax.Array,  # (D,), or (K, D) for softmax
     family: str = "logistic",
     nu: float = 4.0,
     sigma: float = 1.0,
     block_rows: int = 8,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
-    """Fused bright-point evaluation. Returns (delta (C,), total scalar)."""
-    n, d = x.shape
-    dp = _pad_lanes(d)
-    c = idx.shape[0]
-    cp = ((c + block_rows - 1) // block_rows) * block_rows
-    xp = jnp.pad(x.astype(jnp.float32), ((0, 0), (0, dp - d)))
-    thetap = jnp.pad(theta.astype(jnp.float32), (0, dp - d))[None, :]
-    idxp = jnp.pad(idx.astype(jnp.int32), (0, cp - c))
-    delta, contrib = bright_glm_pallas(
-        xp,
-        t.astype(jnp.float32)[:, None],
-        xi.astype(jnp.float32)[:, None],
-        idxp,
-        n_bright.astype(jnp.int32),
-        thetap,
-        family=family,
-        nu=nu,
-        sigma=sigma,
-        block_rows=block_rows,
-        interpret=interpret,
-    )
-    return delta[:c, 0], jnp.sum(contrib[:c, 0])
+    """Fused bright-point evaluation. Returns (delta (C,), total scalar).
+
+    Differentiable (custom VJP); ``interpret=None`` auto-selects interpret
+    mode off-TPU so the same call sites run everywhere.
+    """
+    if family not in FAMILIES:
+        raise ValueError(f"unknown family {family!r}; expected {FAMILIES}")
+    if interpret is None:
+        interpret = default_interpret()
+    cfg = (family, float(nu), float(sigma), int(block_rows), bool(interpret))
+    return _bright_glm_vjp(cfg, x, t, xi, idx, n_bright, theta)

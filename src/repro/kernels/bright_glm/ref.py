@@ -3,8 +3,10 @@
 Computes, for a padded buffer of bright indices, the per-datum
 δ_n = log L_n - log B_n and the masked pseudo-log-likelihood contribution
 log(exp(δ)-1) — the inner loop of every FlyMC θ-update (paper §2, Alg. 1
-line 19). Families: logistic (Jaakkola–Jordan bound) and student-t
-(tangent bound); both reduce to a dot product plus scalar math per row.
+line 19). Families: logistic (Jaakkola–Jordan bound), student_t (tangent
+bound) and softmax (Böhning bound); each reduces to a (batched) inner
+product plus scalar math per row. Doubles as the backward pass of the
+fused kernel's custom VJP (:mod:`repro.kernels.bright_glm.ops`).
 """
 
 from __future__ import annotations
@@ -12,23 +14,28 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.bounds import LogisticBound, StudentTBound, GLMData
-from repro.core.flymc import log_expm1
+from repro.core.bounds import GLMData, LogisticBound, SoftmaxBound, StudentTBound
+from repro.core.numerics import log_expm1
 
 
 def bright_glm_ref(
     x: jax.Array,  # (N, D) features
-    t: jax.Array,  # (N,) labels / responses
-    xi: jax.Array,  # (N,) per-datum bound tightness
-    idx: jax.Array,  # (C,) bright indices (padded)
+    t: jax.Array,  # (N,) labels / responses / class ids
+    xi: jax.Array,  # (N,) per-datum bound tightness ((N, K) for softmax)
+    idx: jax.Array,  # (C,) bright indices (padded; entries clamped to [0, N))
     mask: jax.Array,  # (C,) validity
-    theta: jax.Array,  # (D,)
+    theta: jax.Array,  # (D,)  ((K, D) for softmax)
     family: str = "logistic",
     nu: float = 4.0,
     sigma: float = 1.0,
 ):
     """Returns (delta (C,), masked log-pseudo-likelihood contributions (C,))."""
-    rows = GLMData(x=x[idx], t=t[idx], xi=xi[idx])
+    idx = jnp.clip(idx, 0, x.shape[0] - 1)
+    rows = GLMData(
+        x=jnp.take(x, idx, axis=0),
+        t=jnp.take(t, idx, axis=0),
+        xi=jnp.take(xi, idx, axis=0),
+    )
     if family == "logistic":
         ll = LogisticBound.log_lik(theta, rows)
         lb = LogisticBound.log_bound(theta, rows)
@@ -36,6 +43,9 @@ def bright_glm_ref(
         bound = StudentTBound(nu=nu, sigma=sigma)
         ll = bound.log_lik(theta, rows)
         lb = bound.log_bound(theta, rows)
+    elif family == "softmax":
+        ll = SoftmaxBound.log_lik(theta, rows)
+        lb = SoftmaxBound.log_bound(theta, rows)
     else:
         raise ValueError(family)
     delta = ll - lb

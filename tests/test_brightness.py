@@ -88,6 +88,39 @@ def test_bright_buffer_padding():
     assert int(mask.sum()) == 3
 
 
+@settings(deadline=None, max_examples=50)
+@given(st.integers(1, 12), st.integers(1, 20), st.integers(0, 12))
+def test_dark_buffer_small_n_edge_cases(n, capacity, n_bright):
+    """dark_buffer must stay well-defined for capacity > N and any bright
+    count (the old min(num, n - capacity) start went negative there)."""
+    n_bright = min(n_bright, n)
+    z = np.zeros(n, bool)
+    z[:n_bright] = True
+    s = brightness.from_z(jnp.asarray(z))
+    idx, mask = brightness.dark_buffer(s, capacity)
+    assert idx.shape == (capacity,) and mask.shape == (capacity,)
+    idx, mask = np.asarray(idx), np.asarray(mask)
+    assert np.all((idx >= 0) & (idx < n))
+    # Every masked-valid slot is genuinely dark…
+    z_of = np.asarray(brightness.z_of(s))
+    assert not np.any(z_of[idx[mask]])
+    # …and the buffer exposes the whole dark tail whenever it fits.
+    n_dark = n - n_bright
+    if capacity >= n_dark:
+        assert set(idx[mask]) == set(np.arange(n)[~z_of])
+    else:
+        assert mask.sum() == capacity
+
+
+def test_dark_buffer_capacity_exceeds_n_under_jit():
+    s = brightness.from_z(jnp.asarray([True, False, True]))
+    idx, mask = jax.jit(
+        lambda st_: brightness.dark_buffer(st_, 8)
+    )(s)
+    assert idx.shape == (8,)
+    assert set(np.asarray(idx)[np.asarray(mask)]) == {1}
+
+
 def test_bright_buffer_under_jit():
     @jax.jit
     def f(z):

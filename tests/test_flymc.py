@@ -106,6 +106,49 @@ def test_slice_flymc_matches(model, reference_moments):
     np.testing.assert_allclose(std, ref_std, rtol=0.5)
 
 
+def test_explicit_z_update_law_without_replacement(model):
+    """Pin the explicit (Alg. 1) resampling law: the subset is a permutation
+    slice — no duplicate indices, so the z/δ scatters are deterministic —
+    and the realized z follows p(z=1) = -expm1(-δ) under the split keys."""
+    spec = model.flymc_spec(mode="explicit", resample_fraction=0.2)
+    n = model.data.x.shape[0]
+    r = max(1, int(round(n * spec.resample_fraction)))
+    theta = 0.1 * jnp.ones(D)
+    key = jax.random.key(42)
+    z0 = jax.random.bernoulli(jax.random.key(1), 0.3, (n,))
+    bright = brightness.from_z(z0)
+    delta_full = jnp.zeros(n)
+    z_new, delta_new, queries, overflow = flymc._explicit_z_update(
+        spec, model.data, key, theta, bright, delta_full
+    )
+    # Law re-derivation with the same key splits (this IS the pinned law:
+    # change the sampling scheme and this fails).
+    k_idx, k_z = jax.random.split(key)
+    idx = np.asarray(
+        jax.random.permutation(k_idx, jnp.arange(n, dtype=jnp.int32))[:r]
+    )
+    assert len(np.unique(idx)) == r  # without replacement
+    delta = model.bound.log_lik(theta, model.data) - model.bound.log_bound(
+        theta, model.data
+    )
+    p_bright = -jnp.expm1(-jnp.maximum(delta[idx], 1e-10))
+    z_exp = np.asarray(z0).copy()
+    z_exp[idx] = np.asarray(
+        jax.random.uniform(k_z, (r,), p_bright.dtype) < p_bright
+    )
+    np.testing.assert_array_equal(np.asarray(z_new), z_exp)
+    np.testing.assert_allclose(
+        np.asarray(delta_new)[idx], np.asarray(delta[idx]), rtol=1e-6
+    )
+    assert int(queries) == r and not bool(overflow)
+    # Determinism: same inputs, same realized update.
+    z2, d2, _, _ = flymc._explicit_z_update(
+        spec, model.data, key, theta, bright, delta_full
+    )
+    np.testing.assert_array_equal(np.asarray(z_new), np.asarray(z2))
+    np.testing.assert_array_equal(np.asarray(delta_new), np.asarray(d2))
+
+
 def test_capacity_overflow_is_exact(model):
     """A chain run at tiny capacity (forcing growth) must equal one run at
     large capacity with the same keys — overflow handling may not change the

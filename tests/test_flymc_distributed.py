@@ -64,6 +64,28 @@ def test_distributed_matches_reference(mesh, problem):
     assert total_q / len(trace) < 0.6 * N
 
 
+def test_distributed_pallas_backend_matches_jnp(mesh, problem):
+    """backend="pallas" runs shard-local inside shard_map and yields the
+    same realized chain as the jnp path (same keys, interpret off-TPU)."""
+    from repro import api
+    from repro.distributed.flymc_dist import dist_algorithm, shard_data
+
+    tuned, _, _ = problem
+    data = shard_data(tuned.data, mesh)
+    outs = {}
+    for backend in ("jnp", "pallas"):
+        alg = dist_algorithm(
+            tuned.bound, tuned.log_prior, mesh, data,
+            capacity=64, cand_capacity=64, q_db=0.05, backend=backend,
+        )
+        trace = api.sample(alg, jax.random.key(7), 40, chunk_size=20)
+        outs[backend] = np.asarray(trace.theta[0])
+        assert np.all(np.isfinite(outs[backend]))
+    np.testing.assert_allclose(
+        outs["pallas"], outs["jnp"], rtol=1e-4, atol=1e-5
+    )
+
+
 def test_distributed_counts_and_overflow(mesh, problem):
     tuned, _, _ = problem
     # tiny per-shard capacity forces global growth; chain must still run

@@ -15,26 +15,111 @@ RNG = np.random.default_rng(0)
 # bright_glm — the FlyMC hot loop
 # ---------------------------------------------------------------------------
 
+_K = 5  # softmax classes for the kernel tests
+
+
+def _glm_case(family, n, d):
+    x = jnp.asarray(RNG.normal(size=(n, d)).astype(np.float32))
+    if family == "logistic":
+        t = jnp.asarray(np.where(RNG.random(n) < 0.5, 1.0, -1.0).astype(np.float32))
+        xi = jnp.asarray((np.abs(RNG.normal(size=n)) + 0.1).astype(np.float32))
+        theta = jnp.asarray(RNG.normal(size=d).astype(np.float32))
+    elif family == "student_t":
+        t = jnp.asarray((RNG.normal(size=n) * 2).astype(np.float32))
+        xi = jnp.asarray((np.abs(RNG.normal(size=n)) + 0.1).astype(np.float32))
+        theta = jnp.asarray(RNG.normal(size=d).astype(np.float32))
+    else:
+        t = jnp.asarray(RNG.integers(0, _K, n).astype(np.int32))
+        xi = jnp.asarray((RNG.normal(size=(n, _K)) * 0.5).astype(np.float32))
+        theta = jnp.asarray((RNG.normal(size=(_K, d)) * 0.3).astype(np.float32))
+    return x, t, xi, theta
+
 
 @pytest.mark.parametrize("n,d,c,nb", [(64, 51, 16, 12), (128, 57, 32, 32),
                                       (32, 7, 8, 0), (256, 130, 64, 40)])
-@pytest.mark.parametrize("family", ["logistic", "student_t"])
+@pytest.mark.parametrize("family", ["logistic", "student_t", "softmax"])
 def test_bright_glm(n, d, c, nb, family):
     from repro.kernels.bright_glm.ops import bright_glm
     from repro.kernels.bright_glm.ref import bright_glm_ref
 
-    x = jnp.asarray(RNG.normal(size=(n, d)).astype(np.float32))
-    if family == "logistic":
-        t = jnp.asarray(np.where(RNG.random(n) < 0.5, 1.0, -1.0).astype(np.float32))
-    else:
-        t = jnp.asarray((RNG.normal(size=n) * 2).astype(np.float32))
-    xi = jnp.asarray((np.abs(RNG.normal(size=n)) + 0.1).astype(np.float32))
+    x, t, xi, theta = _glm_case(family, n, d)
     idx = jnp.asarray(RNG.choice(n, c, replace=False).astype(np.int32))
-    theta = jnp.asarray(RNG.normal(size=d).astype(np.float32))
     mask = jnp.arange(c) < nb
 
     delta, total = bright_glm(x, t, xi, idx, jnp.int32(nb), theta, family=family)
     d_ref, c_ref = bright_glm_ref(x, t, xi, idx, mask, theta, family=family)
+    np.testing.assert_allclose(delta, d_ref, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(total, c_ref.sum(), rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("family", ["logistic", "student_t", "softmax"])
+def test_bright_glm_grad_matches_ref(family):
+    """MALA/HMC route: ∇_θ of the fused total via the custom VJP."""
+    from repro.kernels.bright_glm.ops import bright_glm
+    from repro.kernels.bright_glm.ref import bright_glm_ref
+
+    n, d, c, nb = 96, 23, 24, 17
+    x, t, xi, theta = _glm_case(family, n, d)
+    idx = jnp.asarray(RNG.choice(n, c, replace=False).astype(np.int32))
+    mask = jnp.arange(c) < nb
+
+    def f_pallas(th):
+        delta, total = bright_glm(x, t, xi, idx, jnp.int32(nb), th,
+                                  family=family)
+        return total, delta
+
+    def f_ref(th):
+        delta, contrib = bright_glm_ref(x, t, xi, idx, mask, th,
+                                        family=family)
+        return jnp.sum(contrib), delta
+
+    (tot_p, aux_p), g_p = jax.value_and_grad(f_pallas, has_aux=True)(theta)
+    (tot_r, aux_r), g_r = jax.value_and_grad(f_ref, has_aux=True)(theta)
+    np.testing.assert_allclose(tot_p, tot_r, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(g_p, g_r, rtol=2e-4, atol=1e-5)
+    # and under jit, as the samplers call it
+    g_jit = jax.jit(jax.grad(lambda th: f_pallas(th)[0]))(theta)
+    np.testing.assert_allclose(g_jit, g_r, rtol=2e-4, atol=1e-5)
+
+
+def test_bright_glm_full_capacity_padded_buffer():
+    """Regression: padding slots carrying out-of-range ids (bright_buffer /
+    jnp.pad fill, the candidate buffer's N sentinel) must be clamped before
+    the in-kernel DMA, at every fill level up to full capacity."""
+    from repro.kernels.bright_glm.ops import bright_glm
+    from repro.kernels.bright_glm.ref import bright_glm_ref
+
+    n, d, c = 40, 11, 40  # capacity == N: every row bright + ragged padding
+    x, t, xi, theta = _glm_case("logistic", n, d)
+    perm = RNG.permutation(n).astype(np.int32)
+    for nb in (0, 1, 39, 40):
+        # invalid tail slots hold the out-of-range sentinel N, as the
+        # implicit z-update's candidate buffer does
+        idx = jnp.asarray(np.where(np.arange(c) < nb, perm, n))
+        mask = jnp.arange(c) < nb
+        delta, total = bright_glm(x, t, xi, idx, jnp.int32(nb), theta)
+        d_ref, c_ref = bright_glm_ref(x, t, xi, idx, mask, theta)
+        assert np.all(np.isfinite(np.asarray(delta)))
+        np.testing.assert_allclose(
+            np.where(mask, delta, 0.0), np.where(mask, d_ref, 0.0),
+            rtol=1e-4, atol=1e-5,
+        )
+        np.testing.assert_allclose(total, c_ref.sum(), rtol=1e-4, atol=1e-5)
+
+
+def test_bright_glm_ragged_c_not_multiple_of_block_rows():
+    from repro.kernels.bright_glm.ops import bright_glm
+    from repro.kernels.bright_glm.ref import bright_glm_ref
+
+    n, d, c, nb = 64, 13, 21, 21  # C % block_rows != 0 → internal padding
+    x, t, xi, theta = _glm_case("student_t", n, d)
+    idx = jnp.asarray(RNG.choice(n, c, replace=False).astype(np.int32))
+    mask = jnp.arange(c) < nb
+    delta, total = bright_glm(x, t, xi, idx, jnp.int32(nb), theta,
+                              family="student_t")
+    d_ref, c_ref = bright_glm_ref(x, t, xi, idx, mask, theta,
+                                  family="student_t")
+    assert delta.shape == (c,)
     np.testing.assert_allclose(delta, d_ref, rtol=1e-4, atol=1e-5)
     np.testing.assert_allclose(total, c_ref.sum(), rtol=1e-4, atol=1e-5)
 
