@@ -40,3 +40,19 @@ def merge_write(update: dict, path: Path = BENCH_PATH) -> dict:
     merged.update(update)
     path.write_text(json.dumps(merged, indent=2) + "\n")
     return merged
+
+
+def quickstart_problem(n: int, d: int = 21, map_steps: int = 300):
+    """The MAP-tuned quickstart logistic model both backend benchmarks time.
+
+    One definition (same seeds, same tuning) so the ``bright_glm_backend``
+    and ``z_update_backend`` records in BENCH_flymc.json are measured on the
+    identical problem and cannot silently diverge.
+    """
+    from repro.data import logistic_data
+    from repro.models.bayes_glm import GLMModel
+
+    data = logistic_data(jax.random.key(0), n=n, d=d, separation=2.0)
+    model = GLMModel.logistic(data, prior_scale=1.0, xi=1.5)
+    theta_map = model.map_estimate(jax.random.key(1), steps=map_steps)
+    return model.map_tuned(theta_map)

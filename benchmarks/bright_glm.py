@@ -21,12 +21,10 @@ from __future__ import annotations
 
 import jax
 
-from benchmarks._util import BENCH_PATH, best_of, merge_write
+from benchmarks._util import BENCH_PATH, best_of, merge_write, quickstart_problem
 from repro import api
 from repro.core import brightness, flymc
-from repro.data import logistic_data
 from repro.kernels.bright_glm.ops import default_interpret
-from repro.models.bayes_glm import GLMModel
 
 
 def _bytes_model(n_bright_cap: int, d: int, dp: int) -> dict:
@@ -46,10 +44,7 @@ def _bytes_model(n_bright_cap: int, d: int, dp: int) -> dict:
 
 
 def bench(n=5000, d=21, capacity=1024, iters=300, q_db=0.01, reps=3):
-    data = logistic_data(jax.random.key(0), n=n, d=d, separation=2.0)
-    model = GLMModel.logistic(data, prior_scale=1.0, xi=1.5)
-    theta_map = model.map_estimate(jax.random.key(1), steps=300)
-    tuned = model.map_tuned(theta_map)
+    tuned = quickstart_problem(n, d)
     key = jax.random.key(3)
     interpret = default_interpret()
 

@@ -69,6 +69,17 @@ def main() -> None:
         f"interpret={brec['pallas']['interpret']}"
     )
 
+    # --- z-update engine: jnp vs fused streaming kernel --------------------
+    from benchmarks.z_update import main as bench_z
+
+    zrec = bench_z(quick=args.quick)
+    rows.append(
+        f"z_update/fused,{zrec['fused']['us_per_z_phase']:.1f},"
+        f"jnp_us={zrec['jnp']['us_per_z_phase']:.1f};"
+        f"bytes_ratio={zrec['bytes_model_ratio']:.1f};"
+        f"interpret={zrec['fused']['interpret']}"
+    )
+
     # --- §3.1 bound tightness ---------------------------------------------
     bt = check_paper_claim()
     print(

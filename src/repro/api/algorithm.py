@@ -71,6 +71,8 @@ def _spec_from(
     kernel_params,
     axis_names,
     backend,
+    z_backend,
+    num_warmup,
 ):
     """Normalize (model | explicit pieces) into (FlyMCSpec, data, stats)."""
     if model is not None:
@@ -94,6 +96,16 @@ def _spec_from(
             f"log_lik/log_bound overrides); "
             f"{type(bound).__name__} only implements the jnp path"
         )
+    if z_backend not in ("jnp", "fused"):
+        raise ValueError(
+            f"unknown z_backend {z_backend!r}; expected 'jnp' or 'fused'"
+        )
+    if z_backend == "fused" and mode != "implicit":
+        raise ValueError(
+            "z_backend='fused' requires mode='implicit' (the fused engine "
+            "streams Algorithm 2's sparse dark→bright candidate proposals; "
+            "Algorithm 1's explicit Gibbs resampling has no such stream)"
+        )
     if stats is None:
         stats = bound.suffstats(data)
     samplers.get_kernel(kernel)  # fail fast on unknown kernels
@@ -115,6 +127,8 @@ def _spec_from(
         axis_names=tuple(axis_names),
         adapt_target=adapt_target,
         backend=backend,
+        z_backend=z_backend,
+        num_warmup=int(num_warmup),
     )
     return spec, data, stats
 
@@ -134,9 +148,11 @@ def firefly(
     resample_fraction: float = 0.1,
     step_size: float = 0.1,
     adapt_target: float | str | None = None,
+    num_warmup: int = 1000,
     kernel_params=(),
     axis_names=(),
     backend: str = "jnp",
+    z_backend: str = "jnp",
 ) -> SamplingAlgorithm:
     """Build the FlyMC sampling algorithm (paper §2–3) as an (init, step) pair.
 
@@ -147,12 +163,22 @@ def firefly(
     ("logistic", "softmax", "student-t"). ``kernel`` names a registered
     θ-kernel ("rwmh", "mala", "slice", "hmc"); pass ``adapt_target="auto"``
     to adapt the step size toward the kernel's standard accept rate.
+    Adaptation runs for the first ``num_warmup`` iterations only — after
+    warmup the step size freezes bitwise, so the sampling-phase chain is a
+    fixed Markov kernel (exactness requires it).
 
     ``backend`` selects the θ-update likelihood engine: ``"jnp"`` (gather +
     bound evaluation in plain XLA) or ``"pallas"`` (the fused
     ``kernels/bright_glm`` gather+δ+reduction kernel; interpret-mode
     fallback off-TPU). All three built-in bounds support ``"pallas"``;
     custom bounds need the :class:`~repro.core.bounds.FusedBound` hook.
+
+    ``z_backend`` selects the z-update engine (implicit mode): ``"jnp"``
+    (per-datum length-N uniforms + full cumsum re-partition) or ``"fused"``
+    (the ``kernels/z_update`` streaming candidate kernel with in-kernel
+    counter RNG + O(changed) incremental partition maintenance). The two
+    engines are law-equivalent but follow different uniform streams, so
+    their realized trajectories differ bitwise.
     """
     spec, data, stats = _spec_from(
         model,
@@ -160,7 +186,8 @@ def firefly(
         kernel=kernel, capacity=capacity, cand_capacity=cand_capacity,
         q_db=q_db, mode=mode, resample_fraction=resample_fraction,
         adapt_target=adapt_target, kernel_params=kernel_params,
-        axis_names=axis_names, backend=backend,
+        axis_names=axis_names, backend=backend, z_backend=z_backend,
+        num_warmup=num_warmup,
     )
     return _firefly_from_spec(spec, data, stats, step_size)
 
@@ -245,6 +272,7 @@ def regular_mcmc(
     kernel: str = "rwmh",
     step_size: float = 0.1,
     adapt_target: float | str | None = None,
+    num_warmup: int = 1000,
     kernel_params=(),
     theta_shape=None,
 ) -> SamplingAlgorithm:
@@ -255,6 +283,8 @@ def regular_mcmc(
     model); alternatively pass ``logdensity_fn`` (θ -> (lp, aux)) plus
     ``n_data`` directly. Emits the same StepStats as firefly (overflow is
     always False, n_bright = N) so the driver and diagnostics are shared.
+    Step-size adaptation (``adapt_target``) is warmup-only, exactly like
+    :func:`firefly`: the update freezes after ``num_warmup`` iterations.
     """
     if model is not None:
         logdensity_fn = logdensity_fn or model.full_logpdf_fn()
@@ -281,8 +311,13 @@ def regular_mcmc(
         new, info = kern(key, state.sampler, jnp.exp(state.log_step))
         log_step = state.log_step
         if adapt_target is not None:
-            log_step = samplers.adapt_step_size(
+            # Warmup-only (see flymc_step): adapt-forever would mean the
+            # post-warmup chain never follows a fixed Markov kernel.
+            adapted = samplers.adapt_step_size(
                 log_step, info.accept_prob, adapt_target, state.iteration
+            )
+            log_step = jnp.where(
+                state.iteration < num_warmup, adapted, log_step
             )
         out = MCMCState(new, log_step, state.iteration + 1)
         stats = StepStats(

@@ -51,7 +51,12 @@ def _cached(key, build):
 class Trace(NamedTuple):
     """Everything one `sample()` call produced, as stacked device arrays.
 
-    theta         : (num_chains, num_samples // thin, *theta_shape)
+    theta         : (num_chains, num_samples // thin, *theta_shape) — the
+                    ``theta[thin - 1 :: thin]`` slice of the per-iteration
+                    trajectory, i.e. entry ``i`` is iteration
+                    ``(i + 1)·thin - 1`` (the LAST iteration of each thin
+                    window, not the first), and a trailing partial window
+                    contributes nothing
     stats         : StepStats with (num_chains, num_samples) leaves (unthinned)
     total_queries : int — total per-datum likelihood evaluations, all chains
                     (a host int64 sum: per-step counts are int32 and an
@@ -105,8 +110,11 @@ def sample(
     ``init_position`` seeds ``alg.init`` (default: ``alg.default_position``);
     pass a (num_chains, ...) array for per-chain starts. ``init_state``
     resumes from an existing chain state instead (single chain only), using
-    ``key`` as the per-iteration key root. ``thin`` keeps every thin-th θ
-    sample; stats stay per-iteration. Host syncs: one per chunk.
+    ``key`` as the per-iteration key root with the fold-in counter offset by
+    the state's ``iteration`` — resuming with the prefix's key continues its
+    exact stream (split == contiguous, bitwise) instead of replaying it.
+    ``thin`` keeps every thin-th θ sample (the last of each window); stats
+    stay per-iteration. Host syncs: one per chunk (plus one at resume).
     """
     if num_samples <= 0:
         raise ValueError("num_samples must be positive")
@@ -115,11 +123,21 @@ def sample(
     chunk_size = max(1, min(int(chunk_size), num_samples))
     multi = num_chains > 1
 
+    start_offset = 0
     if init_state is not None:
         if multi:
             raise ValueError("init_state resume supports num_chains=1 only")
         state = init_state
         k_steps = key
+        # Resume must NOT replay the prefix's key stream: per-iteration keys
+        # are fold_in(chain_key, iteration), so a resumed segment continues
+        # the counter at the state's iteration instead of restarting at 0.
+        # With the same chain key, split runs are bitwise identical to one
+        # contiguous run; with a fresh key, the segment is at least not a
+        # replay of the original run's randomness. One host sync, up front.
+        it = getattr(state, "iteration", None)
+        if it is not None:
+            start_offset = int(jax.device_get(it))
     else:
         k_init, k_steps = jax.random.split(key)
         position = init_position if init_position is not None else alg.default_position
@@ -195,7 +213,9 @@ def sample(
         chunk_fn = chunk_fn_for(alg, cs)
         # Keep the pre-chunk state alive for the exact re-run on overflow.
         prev = state
-        final, th, inf, overflow = chunk_fn(state, chain_keys, jnp.int32(start))
+        final, th, inf, overflow = chunk_fn(
+            state, chain_keys, jnp.int32(start_offset + start)
+        )
         while bool(jax.device_get(overflow)):  # the chunk's one host sync
             alg = _grown(alg)
             resize = alg.resize if alg.resize is not None else (lambda s: s)
@@ -204,7 +224,7 @@ def sample(
                 lambda: jax.jit(jax.vmap(resize) if multi else resize),
             )(prev)
             final, th, inf, overflow = chunk_fn_for(alg, cs)(
-                prev, chain_keys, jnp.int32(start)
+                prev, chain_keys, jnp.int32(start_offset + start)
             )
         state = final
         thetas.append(th)

@@ -116,6 +116,12 @@ class FusedBound(Bound, Protocol):
     is optional: plain Bounds keep working on the jnp backend, and
     ``FlyMCSpec.backend = "pallas"`` is rejected up front for bounds that
     don't implement it.
+
+    One hook, both hot paths: ``backend="pallas"`` routes the θ-update's
+    bright-buffer evaluation AND the z-update's candidate-δ evaluation
+    (:func:`repro.core.flymc._candidate_delta`) through the same fused
+    kernel, so a bound that declares a family covers every per-datum
+    likelihood query a FlyMC step makes.
     """
 
     fused_family: str
@@ -143,12 +149,13 @@ def fused_family_of(bound) -> str | None:
         return None
     for meth in ("log_lik", "log_bound"):
         effective = next((k for k in cls.__mro__ if meth in vars(k)), None)
-        if (
-            effective is not None
-            and effective is not declarer
-            and issubclass(effective, declarer)
-        ):
-            return None  # overridden below the fused_family declaration
+        # The method only counts as vouched-for if the fused_family
+        # declaration sits at or below it in the MRO (declarer is a
+        # subclass of the provider). Anything else — an override below the
+        # declaration OR a sibling mixin ahead of it in the MRO — changes
+        # the math without re-asserting kernel compatibility.
+        if effective is not None and not issubclass(declarer, effective):
+            return None
     return cls.fused_family
 
 

@@ -7,10 +7,16 @@ The paper's structure is two length-N arrays plus a counter:
   num : number of bright data points (arr[:num] are bright)
 
 ``brighten``/``darken`` are the paper's O(1) swap updates, kept for fidelity
-and for host-side use. On TPU the per-round update is *batched*: given the new
-boolean z vector we rebuild the partition with one stable cumsum compaction —
-an O(N) memory-bound vector sweep whose cost is negligible next to the
-O(M·D) likelihood work it enables (DESIGN.md §3.2, §7.6).
+and for host-side use. On TPU the per-round update is batched, two ways:
+
+  * :func:`from_z` — full rebuild from a boolean z via one stable cumsum
+    compaction. O(N) memory-bound sweep; the ``z_backend="jnp"`` engine's
+    path (and the one-time init path).
+  * :func:`apply_flips` — the swap updates *vectorized over a round's
+    flips*: O(changed) masked scatters with fixed (capacity-shaped)
+    intermediates, no length-N cumsum. The ``z_backend="fused"`` engine's
+    path, which keeps per-step non-likelihood work proportional to the
+    touched subset (Angelino et al.'s streaming prescription).
 """
 
 from __future__ import annotations
@@ -86,6 +92,109 @@ def batch_update(state: BrightState, z_new: jax.Array) -> BrightState:
     """Replace the whole partition given a new boolean z (vectorized round)."""
     del state
     return from_z(z_new)
+
+
+def apply_flips(
+    state: BrightState,
+    darken: jax.Array,
+    brighten_idx: jax.Array,
+    brighten_mask: jax.Array,
+) -> BrightState:
+    """Batched O(changed) partition update — the paper's Fig.-3 swap updates
+    vectorized over one z-round, replacing the O(N) ``from_z`` cumsum rebuild
+    on the fused z-engine path.
+
+    ``darken`` is a (C,) bool over *bright-buffer slots*: slot ``s`` is
+    position ``s`` of ``arr`` and darkens datum ``arr[s]`` (entries at
+    ``s >= num`` are ignored). ``brighten_idx``/``brighten_mask`` name
+    currently-dark data to brighten ((S,) int32 ids; masked entries ignored
+    and may be out-of-range padding). The two sets must be disjoint, which
+    Algorithm 2 guarantees (darken proposals come from the bright set,
+    brighten proposals from the dark set).
+
+    The update is a pairwise swap matching: items that must *enter* the new
+    bright region ``[0, num')`` (brightened items stranded at positions
+    ``>= num'``, plus still-bright items stranded in a shrinking boundary
+    window ``[num', num)``) are paired one-to-one with items that must
+    *leave* it (darkened items at positions ``< num'``, plus still-dark
+    items overtaken by a growing window ``[num, num')``) — the two lists
+    provably have equal length — and each pair swaps positions. Everything
+    is masked fixed-shape arithmetic over the (C,)/(S,) buffers plus
+    O(changed) scatters into ``arr``/``tab``: no length-N uniform, cumsum,
+    or compaction ever materializes.
+
+    Matching order is buffer-slot order, which is ``arr``-position order —
+    independent of the buffer capacities — so the resulting partition (and
+    hence the realized chain) is bitwise capacity-invariant, matching the
+    overflow-re-run contract of the drivers.
+    """
+    n = state.arr.shape[0]
+    sd = darken.shape[0]
+    sb = brighten_idx.shape[0]
+    slots = jnp.arange(sd, dtype=jnp.int32)
+    darken = darken & (slots < state.num)
+    k = jnp.sum(darken).astype(jnp.int32)
+    m = jnp.sum(brighten_mask).astype(jnp.int32)
+    num2 = state.num - k + m
+
+    b_idx = jnp.clip(brighten_idx.astype(jnp.int32), 0, n - 1)
+    pos_b = jnp.take(state.tab, b_idx)
+
+    # --- movers INTO [0, num') ---------------------------------------------
+    # (a) brightened items currently parked at positions >= num'
+    ma_mask = brighten_mask & (pos_b >= num2)
+    # (b) shrink window [num', num): still-bright residents must relocate.
+    #     Window positions are < num <= C, i.e. bright-buffer slots, so
+    #     "still bright" is just ~darken at that slot.
+    w = num2 + slots
+    w_in = w < state.num  # empty when the bright set grows (num' >= num)
+    w_cl = jnp.clip(w, 0, sd - 1)
+    wb_mask = w_in & ~jnp.take(darken, w_cl)
+    wb_item = jnp.take(state.arr, jnp.clip(w, 0, n - 1))
+    in_item = jnp.concatenate([jnp.where(ma_mask, b_idx, n),
+                               jnp.where(wb_mask, wb_item, n)])
+    in_pos = jnp.concatenate([jnp.where(ma_mask, pos_b, n),
+                              jnp.where(wb_mask, w, n)])
+    in_mask = jnp.concatenate([ma_mask, wb_mask])
+
+    # --- movers OUT of [0, num') -------------------------------------------
+    # (a) darkened items currently inside the new bright region
+    da_mask = darken & (slots < num2)
+    da_item = jnp.take(state.arr, jnp.minimum(slots, n - 1))
+    # (b) growth window [num, num'): still-dark residents must relocate.
+    #     Membership "was this position's item brightened" via an O(S)
+    #     scatter of the brighten positions into window coordinates
+    #     (masked / out-of-window entries go to the sentinel slot and drop).
+    v = state.num + jnp.arange(sb, dtype=jnp.int32)
+    v_in = v < num2  # empty when the bright set shrinks
+    v_brightened = (
+        jnp.zeros(sb, bool)
+        .at[jnp.where(brighten_mask, pos_b - state.num, sb)]
+        .set(True, mode="drop")
+    )
+    vd_mask = v_in & ~v_brightened
+    vd_item = jnp.take(state.arr, jnp.clip(v, 0, n - 1))
+    out_item = jnp.concatenate([jnp.where(da_mask, da_item, n),
+                                jnp.where(vd_mask, vd_item, n)])
+    out_pos = jnp.concatenate([jnp.where(da_mask, slots, n),
+                               jnp.where(vd_mask, v, n)])
+    out_mask = jnp.concatenate([da_mask, vd_mask])
+
+    # --- compact to prefix order and swap pairwise -------------------------
+    def compact(item, pos, mask):
+        size = item.shape[0]
+        dest = jnp.where(mask, jnp.cumsum(mask) - 1, size)
+        pad = jnp.full(size, n, jnp.int32)
+        return (pad.at[dest].set(item, mode="drop"),
+                pad.at[dest].set(pos, mode="drop"))
+
+    bi, bp = compact(in_item, in_pos, in_mask)
+    di, dp = compact(out_item, out_pos, out_mask)
+    # |in| == |out| always, so pairing i-th with i-th is a clean swap;
+    # sentinel (n) positions/items beyond the pair count drop harmlessly.
+    arr = state.arr.at[dp].set(bi, mode="drop").at[bp].set(di, mode="drop")
+    tab = state.tab.at[bi].set(dp, mode="drop").at[di].set(bp, mode="drop")
+    return BrightState(arr=arr, tab=tab, num=num2)
 
 
 def bright_buffer(state: BrightState, capacity: int):

@@ -67,6 +67,8 @@ class FlyMCSpec:
     axis_names: tuple = ()  # mesh axes carrying data shards (psum)
     adapt_target: float | None = None  # accept-rate target during warmup
     backend: str = "jnp"  # θ-update likelihood engine: jnp | pallas
+    z_backend: str = "jnp"  # z-update engine: jnp | fused (implicit mode)
+    num_warmup: int = 1000  # step-size adaptation window (iterations)
 
     def needs_grad(self) -> bool:
         return samplers.get_kernel(self.kernel).needs_grad
@@ -226,6 +228,9 @@ def _implicit_z_update(
     depend on the buffer size. Per-datum draws keep the trajectory bitwise
     identical across capacities, which is what lets the driver re-run an
     overflowed chunk at doubled capacity without perturbing the chain.
+    (:func:`_fused_z_update` keeps the same per-datum keying — uniforms are
+    a pure function of ``(step_key, draw, datum_index)`` — while never
+    materializing the length-N arrays this engine pays for.)
     """
     n = data.x.shape[0]
     k_bd, k_cand, k_db = jax.random.split(key, 3)
@@ -268,6 +273,106 @@ def _implicit_z_update(
         jnp.where(mask_c, delta_c, delta_full[cand_idx]), mode="drop"
     )
     return z, delta_full, n_cand, overflow_c
+
+
+def _candidate_delta(
+    spec: FlyMCSpec,
+    data: GLMData,
+    theta: jax.Array,
+    cand_idx: jax.Array,
+    n_cand: jax.Array,
+) -> jax.Array:
+    """δ = log L - log B on the compacted candidate buffer.
+
+    Dispatches on ``spec.backend`` exactly like the θ-update: with
+    ``backend="pallas"`` the candidate rows go through the same fused
+    :func:`repro.kernels.bright_glm.ops.bright_glm` kernel (FusedBound
+    family), so the pallas backend covers the *whole* step's likelihood
+    work; otherwise the jnp gather path. Padded slots (``idx >= N``) clamp
+    harmlessly — callers mask them.
+    """
+    if spec.backend == "pallas":
+        from repro.core.bounds import fused_family_of
+        from repro.kernels.bright_glm.ops import bright_glm
+
+        fam = fused_family_of(spec.bound)
+        delta, _ = bright_glm(
+            data.x, data.t, data.xi, cand_idx, n_cand, theta,
+            family=fam, **spec.bound.fused_kernel_kwargs(),
+        )
+        return delta
+    rows = _tree_gather(data, cand_idx)
+    return spec.bound.log_lik(theta, rows) - spec.bound.log_bound(theta, rows)
+
+
+def _fused_z_update(
+    spec: FlyMCSpec,
+    data: GLMData,
+    key: jax.Array,
+    theta: jax.Array,
+    bright: brightness.BrightState,
+    delta_full: jax.Array,
+    delta_bright: jax.Array,
+):
+    """Algorithm 2 via the fused z-engine (``spec.z_backend = "fused"``).
+
+    Same per-datum MH law as :func:`_implicit_z_update`, with every O(N)
+    non-likelihood intermediate eliminated:
+
+      * uniforms come from the counter-based RNG
+        (:func:`repro.core.numerics.counter_uniform`, keyed on
+        ``(step_key, draw, datum_index)``) — evaluated on the O(C) bright
+        buffer and O(cand) candidate buffer here, and on streamed tiles
+        inside the candidate kernel, never as (N,) arrays;
+      * dark→bright candidate selection + compaction is one streamed pass
+        (:func:`repro.kernels.z_update.ops.z_candidates`);
+      * candidate δ routes through :func:`_candidate_delta` (the fused
+        bright-GLM kernel under ``backend="pallas"``);
+      * the partition is maintained incrementally by
+        :func:`repro.core.brightness.apply_flips` — O(changed) swaps, no
+        full-N cumsum rebuild.
+
+    Keying on datum indices keeps the trajectory bitwise invariant to
+    capacity and chunk size (the same contract as the jnp engine), but the
+    realized stream differs from the jnp engine's ``jax.random.uniform``
+    draws: the two engines produce *law-equivalent*, not bitwise-equal,
+    chains.
+
+    Returns (bright_new, delta_full, queries, overflow).
+    """
+    from repro.core.numerics import (
+        DRAW_BRIGHT,
+        DRAW_DARKEN,
+        counter_uniform,
+        key_words_of,
+    )
+    from repro.kernels.z_update.ops import z_candidates
+
+    n = data.x.shape[0]
+    kw = key_words_of(key)
+    log_q = jnp.log(jnp.asarray(spec.q_db, delta_full.dtype))
+
+    # --- bright → dark (free: cached δ + O(C) counter uniforms) ------------
+    idx_b, mask_b = brightness.bright_buffer(bright, spec.capacity)
+    u1 = counter_uniform(kw, DRAW_DARKEN, idx_b)
+    darken = mask_b & (jnp.log(u1) + log_expm1(delta_bright) < log_q)
+
+    # --- dark → bright (streamed selection, then O(cand) work) -------------
+    cand_idx, n_cand = z_candidates(
+        bright.arr, bright.num, kw, spec.q_db, spec.cand_capacity
+    )
+    overflow_c = n_cand > spec.cand_capacity
+    mask_c = jnp.arange(spec.cand_capacity, dtype=jnp.int32) < n_cand
+    nb = jnp.minimum(n_cand, spec.cand_capacity)
+    delta_c = _candidate_delta(spec, data, theta, cand_idx, nb)
+    u3 = counter_uniform(kw, DRAW_BRIGHT, jnp.clip(cand_idx, 0, n - 1))
+    brighten = mask_c & (jnp.log(u3) + log_q < log_expm1(delta_c))
+    delta_full = delta_full.at[cand_idx].set(
+        jnp.where(mask_c, delta_c, delta_full[jnp.clip(cand_idx, 0, n - 1)]),
+        mode="drop",
+    )
+    bright_new = brightness.apply_flips(bright, darken, cand_idx, brighten)
+    return bright_new, delta_full, n_cand, overflow_c
 
 
 def _explicit_z_update(
@@ -337,16 +442,28 @@ def flymc_step(
     )
 
     # ---- z | θ -------------------------------------------------------------
-    if spec.mode == "implicit":
+    if spec.mode == "implicit" and spec.z_backend == "fused":
+        bright_new, delta_full, queries_z, overflow_c = _fused_z_update(
+            spec, data, key_z, new_sampler.theta, state.bright, delta_full,
+            new_sampler.aux,
+        )
+    elif spec.mode == "implicit":
         z_new, delta_full, queries_z, overflow_c = _implicit_z_update(
             spec, data, key_z, new_sampler.theta, state.bright, delta_full,
             new_sampler.aux,
+        )
+        bright_new = brightness.from_z(z_new)
+    elif spec.z_backend == "fused":
+        raise ValueError(
+            "z_backend='fused' requires mode='implicit' (Algorithm 1's "
+            "explicit Gibbs resampling re-evaluates a dense subset, so "
+            "there is no sparse candidate stream to fuse)"
         )
     else:
         z_new, delta_full, queries_z, overflow_c = _explicit_z_update(
             spec, data, key_z, new_sampler.theta, state.bright, delta_full
         )
-    bright_new = brightness.from_z(z_new)
+        bright_new = brightness.from_z(z_new)
     overflow = overflow_c | (bright_new.num > spec.capacity)
     if spec.axis_names:
         overflow = jax.lax.pmax(overflow.astype(jnp.int32),
@@ -358,8 +475,15 @@ def flymc_step(
 
     log_step = state.log_step
     if spec.adapt_target is not None:
-        log_step = samplers.adapt_step_size(
+        # Adaptation is WARMUP-ONLY: a kernel whose step size keeps moving
+        # is not a fixed Markov kernel, so the post-warmup chain would lose
+        # detailed balance (diminishing or not). Freeze bitwise after
+        # spec.num_warmup iterations.
+        adapted = samplers.adapt_step_size(
             log_step, info.accept_prob, spec.adapt_target, state.iteration
+        )
+        log_step = jnp.where(
+            state.iteration < spec.num_warmup, adapted, log_step
         )
 
     new_state = FlyMCState(
@@ -517,7 +641,11 @@ def _run_chain_host(alg, state: FlyMCState, num_iters: int, collect):
     samples, trace = [], []
     total_queries = 0
     step = jax.jit(alg.step)
-    for i in range(num_iters):
+    # Same resume contract as repro.api.sample: the fold-in counter continues
+    # from the state's iteration so a resumed segment never replays the
+    # prefix's key stream.
+    offset = int(jax.device_get(state.iteration))
+    for i in range(offset, offset + num_iters):
         prev = state
         new_state, st = step(jax.random.fold_in(key, i), state)
         while bool(jax.device_get(st.overflow)):

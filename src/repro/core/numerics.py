@@ -42,6 +42,91 @@ def log_expm1(delta: jax.Array) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# Counter-based per-datum RNG (shared by the fused z-update kernel & its ref)
+# ---------------------------------------------------------------------------
+#
+# The z-kernel's exactness story needs per-*datum* randomness (flymc.py's
+# capacity/chunk-invariance contract), but materializing three (N,) uniform
+# arrays per step is exactly the O(N) work the fused engine exists to kill.
+# Instead each uniform is a pure function  u = f(step_key, draw_id, datum):
+# one Threefry-2x32 block (Salmon et al. 2011, the same cipher behind jax's
+# PRNG) whose counter words are (draw_id, datum_index). The Pallas kernel
+# evaluates it on streamed (block, 128) tiles, the jnp side on whatever
+# small buffer it holds (bright slots, compacted candidates) — same bits
+# either way, never a length-N intermediate.
+#
+# Everything is carried in int32 lanes (Mosaic's native integer width):
+# adds wrap mod 2^32 identically to uint32, and right shifts go through
+# lax.shift_right_logical so sign bits never smear.
+
+# Draw-id words: one independent stream per Algorithm-2 decision.
+DRAW_DARKEN = 0  # bright → dark accept uniform (u1)
+DRAW_CAND = 1  # dark → bright candidate selection (u2)
+DRAW_BRIGHT = 2  # candidate brighten accept uniform (u3)
+
+_UNIFORM_BITS = 24  # bits24 ∈ [0, 2^24): exact in f32, u = bits24 · 2⁻²⁴
+
+
+def _rotl32(x: jax.Array, d: int) -> jax.Array:
+    return (x << d) | jax.lax.shift_right_logical(x, 32 - d)
+
+
+def threefry2x32(
+    k0: jax.Array, k1: jax.Array, x0: jax.Array, x1: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Threefry-2x32, 20 rounds, on int32 lanes (bit-compatible with uint32).
+
+    Safe to trace inside a Pallas kernel body (adds/xors/shifts only) and in
+    plain jnp — the fused z-update kernel and its pure-jnp reference import
+    this one definition, so their bit streams cannot drift.
+    """
+    rotations = ((13, 15, 26, 6), (17, 29, 16, 24))
+    k0 = k0.astype(jnp.int32)
+    k1 = k1.astype(jnp.int32)
+    ks = (k0, k1, k0 ^ k1 ^ jnp.int32(0x1BD11BDA))
+    x0 = (x0.astype(jnp.int32) + k0).astype(jnp.int32)
+    x1 = (x1.astype(jnp.int32) + k1).astype(jnp.int32)
+    for r in range(5):
+        for d in rotations[r % 2]:
+            x0 = x0 + x1
+            x1 = _rotl32(x1, d) ^ x0
+        x0 = x0 + ks[(r + 1) % 3]
+        x1 = x1 + ks[(r + 2) % 3] + jnp.int32(r + 1)
+    return x0, x1
+
+
+def counter_bits24(
+    key_words: jax.Array, draw_id: int, datum: jax.Array
+) -> jax.Array:
+    """24-bit random integers keyed on (step key, draw stream, datum index).
+
+    ``key_words`` is a (2,) int32 array (bitcast PRNG key data); ``datum``
+    any int32 array of datum indices. Returns int32 in [0, 2^24) with the
+    same shape as ``datum``.
+    """
+    x0 = jnp.full(datum.shape, draw_id, jnp.int32)
+    b0, _ = threefry2x32(key_words[0], key_words[1], x0, datum.astype(jnp.int32))
+    return jax.lax.shift_right_logical(b0, 32 - _UNIFORM_BITS)
+
+
+def counter_uniform(
+    key_words: jax.Array, draw_id: int, datum: jax.Array
+) -> jax.Array:
+    """Per-datum U[0, 1) floats (24-bit grid) from :func:`counter_bits24`."""
+    return counter_bits24(key_words, draw_id, datum).astype(jnp.float32) * (
+        1.0 / (1 << _UNIFORM_BITS)
+    )
+
+
+def key_words_of(key: jax.Array) -> jax.Array:
+    """(2,) int32 counter-RNG key words from a jax PRNG key (typed or raw)."""
+    data = key
+    if jnp.issubdtype(key.dtype, jax.dtypes.prng_key):
+        data = jax.random.key_data(key)
+    return jax.lax.bitcast_convert_type(data.reshape(-1)[:2], jnp.int32)
+
+
+# ---------------------------------------------------------------------------
 # Jaakkola–Jordan (logistic) bound pieces
 # ---------------------------------------------------------------------------
 

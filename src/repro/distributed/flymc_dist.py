@@ -57,7 +57,11 @@ def make_dist_flymc(bound, log_prior, mesh, n_global: int, **spec_kw):
     ``capacity``/``cand_capacity`` in spec_kw are PER-SHARD. Pass
     ``backend="pallas"`` to route each shard's θ-update through the fused
     bright-GLM kernel (the pallas_call runs shard-local inside shard_map;
-    only the scalar log L̃ sum is psum'd, exactly like the jnp path).
+    only the scalar log L̃ sum is psum'd, exactly like the jnp path), and
+    ``z_backend="fused"`` to stream each shard's z-update through the
+    ``kernels/z_update`` candidate kernel + incremental partition updates —
+    z-moves are shard-local (per-shard folded keys), so the fused engine
+    needs no extra collectives either.
     """
     axes = tuple(mesh.axis_names)
     n_shards = mesh.devices.size
@@ -117,7 +121,8 @@ def dist_algorithm(bound, log_prior, mesh, data: GLMData, **spec_kw):
 
     ``data`` must already be placed on the mesh (see :func:`shard_data`).
     ``spec_kw`` accepts every FlyMCSpec field, including
-    ``backend="pallas"`` for the fused θ-update kernel.
+    ``backend="pallas"`` for the fused θ-update kernel and
+    ``z_backend="fused"`` for the streamed z-update engine.
     The returned algorithm plugs into ``repro.api.sample`` — the chunked
     ``lax.scan`` runs over the shard-mapped step, so the whole chunk stays on
     device and capacity growth follows the same chunk-boundary re-run

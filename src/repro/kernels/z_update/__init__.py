@@ -1,0 +1,5 @@
+"""Fused z-update engine: streamed dark-set candidate selection.
+
+``ops.z_candidates`` is the ``FlyMCSpec.z_backend = "fused"`` entry point;
+``ref.z_candidates_ref`` the pure-jnp oracle sharing the counter-based RNG.
+"""

@@ -1,0 +1,130 @@
+"""Pallas TPU kernel: streamed dark-set candidate selection (FlyMC z-update).
+
+Algorithm 2's dark→bright proposal is a Bernoulli(q_db) per dark datum —
+the only part of the z-update whose work is inherently Ω(N). The jnp
+engine pays for it with three materialized (N,) uniform arrays, an (N,)
+boolean z, and a full cumsum compaction; this kernel replaces all of that
+with ONE streamed pass over the partition array:
+
+  * ``arr`` (reshaped to (P/128, 128) int32 lane tiles) is the only
+    length-N operand that moves — 4 bytes per datum, delivered by the
+    pipelined grid in ``(block_rows, 128)`` tiles;
+  * per-datum uniforms are generated *in-kernel* with counter-based
+    Threefry-2x32 bits keyed on (step_key, DRAW_CAND, datum_index)
+    (:mod:`repro.core.numerics` — the same function the jnp reference
+    evaluates, so the streams are bit-identical). Keying on the datum
+    index, not the buffer slot, keeps the realized chain bitwise invariant
+    to capacity and chunk size, exactly like the jnp engine's per-datum
+    draws;
+  * candidate selection compares the 24-bit lanes against a static integer
+    threshold ``q_bits = round(q_db · 2²⁴)`` — pure int compare, no float
+    round-trip;
+  * selected datum ids are compacted in-kernel into a
+    ``(cand_capacity_padded, 1)`` output buffer: TPU grid steps run
+    sequentially, so the buffer and a (1, 1) running count are race-free
+    accumulators (the same trick as ``bright_glm``'s total). Within a tile
+    the expected candidate count is ``q_db · block`` (≈ 10 for the default
+    tile), so extraction loops ``fori_loop``-many times over a masked
+    argmin — O(candidates) reductions, not O(block²) scatter matrices.
+
+The kernel emits only the compacted candidate ids + total count; the δ
+evaluation for those candidates is the job of the *existing* FusedBound
+machinery (``kernels/bright_glm``) on the O(cand_capacity) buffer, and the
+darken/brighten accept decisions are O(C) jnp math on the same counter RNG
+(:func:`repro.core.flymc._fused_z_update`).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.numerics import DRAW_CAND, threefry2x32
+
+_LANES = 128
+_UNIFORM_SHIFT = 8  # int32 >> 8 (logical) = 24-bit uniform lanes
+
+
+def z_candidates_pallas(
+    arr2d: jax.Array,  # (P//128, 128) int32 partition array, padded with n
+    meta: jax.Array,  # (3,) int32: [num, key_word0, key_word1]
+    n: int,  # true datum count (ids >= n are padding)
+    q_bits: int,  # candidate threshold: bits24 < q_bits ⇔ u < q_db
+    cand_cap_padded: int,  # output buffer rows (>= cand_capacity, mult. of 8)
+    block_rows: int = 8,
+    interpret: bool = False,
+):
+    """Returns (cand (cand_cap_padded, 1) int32 padded with n, count (1,1)).
+
+    Candidates appear in ``arr``-position order (the same order the jnp
+    reference's cumsum compaction produces). Writes past the padded buffer
+    are dropped, and ``count`` keeps the *true* total so the caller can
+    raise the overflow flag that triggers the driver's capacity-doubling
+    re-run.
+    """
+    rows, lanes = arr2d.shape
+    assert lanes == _LANES and rows % block_rows == 0, arr2d.shape
+    br = block_rows
+
+    def kernel(meta_ref, arr_ref, cand_ref, count_ref):
+        i = pl.program_id(0)
+        num = meta_ref[0]
+
+        @pl.when(i == 0)
+        def _init():
+            cand_ref[...] = jnp.full_like(cand_ref, n)
+            count_ref[0, 0] = 0
+
+        tile = arr_ref[...]  # (br, 128) datum ids
+        row = jax.lax.broadcasted_iota(jnp.int32, (br, _LANES), 0)
+        col = jax.lax.broadcasted_iota(jnp.int32, (br, _LANES), 1)
+        pos = (i * br + row) * _LANES + col  # position in arr
+
+        x0 = jnp.full((br, _LANES), DRAW_CAND, jnp.int32)
+        bits, _ = threefry2x32(meta_ref[1], meta_ref[2], x0, tile)
+        bits24 = jax.lax.shift_right_logical(bits, _UNIFORM_SHIFT)
+        cand = (pos >= num) & (pos < n) & (bits24 < q_bits)
+
+        cnt_tile = jnp.sum(cand.astype(jnp.int32))
+        base = count_ref[0, 0]
+
+        def extract(j, live):
+            # j-th candidate of this tile = masked position-argmin sweep.
+            p = jnp.min(jnp.where(live, pos, jnp.int32(2**30)))
+            datum = jnp.sum(jnp.where(live & (pos == p), tile, 0))
+            slot = base + j
+
+            @pl.when(slot < cand_cap_padded)
+            def _store():
+                cand_ref[slot, 0] = datum
+
+            return live & (pos != p)
+
+        jax.lax.fori_loop(0, cnt_tile, extract, cand)
+        count_ref[0, 0] = base + cnt_tile
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,  # meta
+        grid=(rows // br,),
+        in_specs=[pl.BlockSpec((br, _LANES), lambda i, *_: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((cand_cap_padded, 1), lambda i, *_: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, *_: (0, 0)),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=(
+            jax.ShapeDtypeStruct((cand_cap_padded, 1), jnp.int32),
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        ),
+        cost_estimate=pl.CostEstimate(
+            flops=50 * rows * _LANES,  # ~threefry rounds per streamed lane
+            bytes_accessed=rows * _LANES * 4 + cand_cap_padded * 4,
+            transcendentals=0,
+        ),
+        interpret=interpret,
+    )(meta, arr2d)

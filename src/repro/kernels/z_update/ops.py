@@ -1,0 +1,62 @@
+"""Wrapper for the z-candidate kernel: layout, padding, interpret fallback.
+
+Entry point for ``FlyMCSpec.z_backend = "fused"``
+(:func:`repro.core.flymc._fused_z_update`). The partition array is padded
+to a whole number of ``(block_rows, 128)`` tiles with the sentinel id ``N``
+(masked in-kernel by ``pos < N``) and handed to the streaming kernel; the
+compacted candidate buffer comes back sliced to ``cand_capacity`` with the
+true (possibly overflowing) candidate count alongside.
+
+Candidate selection is pure integer work on non-differentiable operands
+(indices and RNG bits), so unlike ``bright_glm`` no custom VJP is needed —
+gradients never flow through z-moves.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bright_glm.ops import _pad_to, default_interpret
+from repro.kernels.z_update.kernel import z_candidates_pallas
+from repro.kernels.z_update.ref import q_threshold_bits
+
+
+def z_candidates(
+    arr: jax.Array,  # (N,) int32 partition array (bright prefix first)
+    num: jax.Array,  # () int32 bright count
+    key_words: jax.Array,  # (2,) int32 counter-RNG key words (step key)
+    q_db: float,
+    cand_capacity: int,
+    block_rows: int = 8,
+    interpret: bool | None = None,
+):
+    """Fused dark→bright candidate selection. Returns (cand_idx, n_cand).
+
+    ``cand_idx`` is (cand_capacity,) int32 in arr-position order, padded
+    with the sentinel ``N``; ``n_cand`` is the true candidate count (it may
+    exceed ``cand_capacity``, in which case the caller must raise the
+    overflow flag). ``interpret=None`` auto-selects interpret mode off-TPU.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    n = arr.shape[0]
+    block = block_rows * 128
+    p = _pad_to(max(n, block), block)
+    arr2d = jnp.pad(
+        arr.astype(jnp.int32), (0, p - n), constant_values=n
+    ).reshape(p // 128, 128)
+    meta = jnp.concatenate(
+        [jnp.reshape(num.astype(jnp.int32), (1,)), key_words.astype(jnp.int32)]
+    )
+    candp = _pad_to(max(int(cand_capacity), 8), 8)
+    cand, count = z_candidates_pallas(
+        arr2d,
+        meta,
+        n=n,
+        q_bits=q_threshold_bits(q_db),
+        cand_cap_padded=candp,
+        block_rows=block_rows,
+        interpret=bool(interpret),
+    )
+    return cand[:cand_capacity, 0], count[0, 0]

@@ -1,0 +1,52 @@
+"""Pure-jnp oracle for the streamed z-candidate kernel.
+
+Evaluates the SAME counter-based Threefry draws as the Pallas kernel
+(:func:`repro.core.numerics.counter_bits24` — one shared definition) over
+the whole partition array at once, then compacts with the familiar cumsum
+scatter. This is the O(N)-materializing formulation the kernel replaces;
+it exists so interpret-mode parity tests can pin the in-kernel RNG and
+compaction bit-for-bit against per-datum reference draws.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.numerics import DRAW_CAND, counter_bits24
+
+
+def q_threshold_bits(q_db: float) -> int:
+    """Static 24-bit integer threshold: bits24 < q_bits ⇔ u < q_db.
+
+    Any positive ``q_db`` maps to a threshold of at least 1 (proposal
+    probability 2⁻²⁴): rounding a sub-grid q_db to zero would silently kill
+    every dark→bright proposal and break the chain's irreducibility, while
+    the jnp engine kept proposing — the worst kind of engine divergence.
+    Only ``q_db == 0`` exactly disables proposals.
+    """
+    q = float(q_db)
+    if q <= 0.0:
+        return 0
+    return min(1 << 24, max(1, int(round(q * (1 << 24)))))
+
+
+def z_candidates_ref(
+    arr: jnp.ndarray,  # (N,) int32 partition array
+    num: jnp.ndarray,  # () int32 bright count (arr[:num] bright)
+    key_words: jnp.ndarray,  # (2,) int32 counter-RNG key words
+    q_db: float,
+    cand_capacity: int,
+):
+    """Returns (cand (cand_capacity,) int32 padded with N, n_cand ())."""
+    n = arr.shape[0]
+    pos = jnp.arange(n, dtype=jnp.int32)
+    bits24 = counter_bits24(key_words, DRAW_CAND, arr)
+    cand = (pos >= num) & (bits24 < q_threshold_bits(q_db))
+    n_cand = jnp.sum(cand).astype(jnp.int32)
+    dest = jnp.where(cand, jnp.cumsum(cand) - 1, cand_capacity)
+    out = (
+        jnp.full(cand_capacity, n, jnp.int32)
+        .at[dest]
+        .set(arr.astype(jnp.int32), mode="drop")
+    )
+    return out, n_cand

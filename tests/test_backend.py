@@ -180,3 +180,22 @@ def test_pallas_rejects_inherited_hook_with_overridden_math(tuned_model):
 
     assert fused_family_of(RenamedLogistic()) == "logistic"
     api.firefly(tuned_model, bound=RenamedLogistic(), backend="pallas")
+
+
+def test_pallas_rejects_mixin_supplied_math(tuned_model):
+    """A sibling mixin ahead of the declarer in the MRO changes the math
+    without subclassing it — the guard must catch that route too, not just
+    direct subclass overrides."""
+    from repro.core.bounds import LogisticBound, fused_family_of
+
+    class TemperedMixin:
+        @staticmethod
+        def log_lik(theta, data):
+            return 0.5 * LogisticBound.log_lik(theta, data)
+
+    class MixedIn(TemperedMixin, LogisticBound):
+        pass
+
+    assert fused_family_of(MixedIn()) is None
+    with pytest.raises(ValueError, match="FusedBound"):
+        api.firefly(tuned_model, bound=MixedIn(), backend="pallas")

@@ -129,3 +129,93 @@ def test_bright_buffer_under_jit():
 
     idx, mask = f(jnp.asarray([False, True, False, True, False, False]))
     assert set(np.asarray(idx)[np.asarray(mask)]) == {1, 3}
+
+
+# ---------------------------------------------------------------------------
+# apply_flips — the fused z-engine's O(changed) incremental partition update
+# ---------------------------------------------------------------------------
+
+
+def _random_flip_case(rng, n):
+    """(state, darken, brighten_idx, brighten_mask, expected_z) respecting
+    the apply_flips contract: capacity >= num, darken over bright-buffer
+    slots, brighten ids dark & distinct (masked tail may be garbage)."""
+    z = rng.random(n) < rng.random()
+    s = brightness.from_z(jnp.asarray(z))
+    num = int(s.num)
+    cap = int(rng.integers(max(1, num), n + 3))
+    sb = int(rng.integers(1, n + 3))
+    darken = rng.random(cap) < 0.4
+    dark_ids = np.flatnonzero(~np.asarray(brightness.z_of(s)))
+    nb = int(min(len(dark_ids), rng.integers(0, sb + 1)))
+    chosen = (
+        rng.choice(dark_ids, nb, replace=False).astype(np.int32)
+        if nb else np.empty(0, np.int32)
+    )
+    b_idx = np.full(sb, n + 5, np.int32)  # out-of-range padding on purpose
+    b_idx[:nb] = chosen
+    b_mask = np.arange(sb) < nb
+    expected = np.asarray(brightness.z_of(s)).copy()
+    slots = np.arange(cap)
+    eff = darken & (slots < num)
+    expected[np.asarray(s.arr)[slots[eff]]] = False
+    expected[chosen] = True
+    return s, darken, b_idx, b_mask, expected
+
+
+@settings(deadline=None, max_examples=60)
+@given(st.integers(0, 10_000), st.integers(4, 48))
+def test_apply_flips_matches_from_z_set(seed, n):
+    """apply_flips realizes exactly the flipped z (as a set) while keeping
+    the permutation/inverse/num invariants — the from_z contract without
+    the O(N) rebuild."""
+    rng = np.random.default_rng(seed)
+    s, darken, b_idx, b_mask, expected = _random_flip_case(rng, n)
+    out = brightness.apply_flips(
+        s, jnp.asarray(darken), jnp.asarray(b_idx), jnp.asarray(b_mask)
+    )
+    assert brightness.check_invariants(out)
+    np.testing.assert_array_equal(np.asarray(brightness.z_of(out)), expected)
+    assert int(out.num) == int(expected.sum())
+
+
+def test_apply_flips_arr_is_capacity_invariant():
+    """The realized partition ARRAY (not just the z set) must not depend on
+    the darken/brighten buffer sizes: the fused chain's θ-update sums in
+    arr order, so capacity-doubling re-runs stay bitwise exact only if
+    apply_flips is order-stable across capacities."""
+    rng = np.random.default_rng(7)
+    n = 40
+    z = rng.random(n) < 0.3
+    s = brightness.from_z(jnp.asarray(z))
+    num = int(s.num)
+    dark_ids = np.flatnonzero(~np.asarray(brightness.z_of(s)))
+    chosen = rng.choice(dark_ids, 4, replace=False).astype(np.int32)
+    dk = rng.random(num) < 0.5
+    outs = []
+    for cap, sb in ((num, 4), (num + 7, 9), (n, n)):
+        darken = np.zeros(cap, bool)
+        darken[:num] = dk
+        b_idx = np.full(sb, n, np.int32)
+        b_idx[:4] = chosen
+        b_mask = np.arange(sb) < 4
+        outs.append(
+            brightness.apply_flips(
+                s, jnp.asarray(darken), jnp.asarray(b_idx),
+                jnp.asarray(b_mask),
+            )
+        )
+    for o in outs[1:]:
+        np.testing.assert_array_equal(np.asarray(outs[0].arr), np.asarray(o.arr))
+        np.testing.assert_array_equal(np.asarray(outs[0].tab), np.asarray(o.tab))
+        assert int(outs[0].num) == int(o.num)
+
+
+def test_apply_flips_noop_round():
+    s = brightness.from_z(jnp.asarray([True, False, True, False, False]))
+    out = brightness.apply_flips(
+        s, jnp.zeros(3, bool), jnp.full(2, 5, jnp.int32), jnp.zeros(2, bool)
+    )
+    np.testing.assert_array_equal(np.asarray(out.arr), np.asarray(s.arr))
+    np.testing.assert_array_equal(np.asarray(out.tab), np.asarray(s.tab))
+    assert int(out.num) == int(s.num)
