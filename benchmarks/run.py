@@ -80,6 +80,17 @@ def main() -> None:
         f"interpret={zrec['fused']['interpret']}"
     )
 
+    # --- streaming collectors vs dense FullTrace ---------------------------
+    from benchmarks.collectors import main as bench_collectors
+
+    crec = bench_collectors(quick=args.quick)["collectors"]
+    rows.append(
+        f"collectors/streaming,{crec['streaming']['us_per_step']:.1f},"
+        f"full_us={crec['full_trace']['us_per_step']:.1f};"
+        f"overhead_us={crec['overhead_us_per_step']:.2f};"
+        f"bytes_ratio={crec['bytes_ratio']:.0f}"
+    )
+
     # --- §3.1 bound tightness ---------------------------------------------
     bt = check_paper_claim()
     print(

@@ -1,10 +1,19 @@
 """Pod-scale FlyMC on 8 (emulated) devices: the paper's algorithm sharded.
 
 Data rows live on 8 shards; bound sufficient statistics are psum'd once;
-each θ-proposal costs one scalar psum; z-resampling is shard-local.
+each θ-proposal costs one scalar psum; z-resampling is shard-local. The
+driver's collectors compose with ``shard_map`` for free: θ and the psum'd
+StepStats come out of the sharded step replicated, so the streaming
+reductions (posterior moments, split-R̂, exact query accounting) run on
+replicated carries with zero extra collectives — the printed numbers come
+from the streaming path and are asserted against the offline trace.
+
 Must run in its own process (device count is fixed at first jax import).
 
     PYTHONPATH=src python examples/distributed_flymc.py
+
+``FLYMC_DIST_N`` / ``FLYMC_DIST_ITERS`` env vars shrink the problem (CI
+smoke uses tiny values; N must stay divisible by 8).
 """
 
 import os
@@ -16,12 +25,18 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import api
+from repro.core import diagnostics
 from repro.data import logistic_data
 from repro.distributed.flymc_dist import dist_algorithm, shard_data
 from repro.models.bayes_glm import GLMModel
 
 
-def main(n=32_768, d=11, iters=1500, burn=400):
+def main(
+    n=int(os.environ.get("FLYMC_DIST_N", 32_768)),
+    d=11,
+    iters=int(os.environ.get("FLYMC_DIST_ITERS", 1500)),
+):
+    burn = max(1, iters // 4)
     mesh = jax.make_mesh(
         (8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,)
     )
@@ -30,18 +45,50 @@ def main(n=32_768, d=11, iters=1500, burn=400):
     theta_map = model.map_estimate(jax.random.key(1), steps=400)
     tuned = model.map_tuned(theta_map)
 
+    cap = min(256, n // 8)  # capacities are PER-SHARD: at most n_local rows
     alg = dist_algorithm(
         tuned.bound, tuned.log_prior, mesh, shard_data(tuned.data, mesh),
-        kernel="rwmh", capacity=256, cand_capacity=256, q_db=0.01,
+        kernel="rwmh", capacity=cap, cand_capacity=cap, q_db=0.01,
         adapt_target=0.234,
     )
-    trace = api.sample(alg, jax.random.key(2), iters, init_position=jnp.zeros(d))
-    s = np.asarray(trace.theta[0])[burn:]
-    total_q = int(trace.total_queries)
+    # Warmup with no output, then stream the sampling phase's observables.
+    warm = api.sample(
+        alg, jax.random.key(2), burn, init_position=jnp.zeros(d),
+        collectors={},
+    )
+    keep = iters - burn
+    trace = api.sample(
+        warm.algorithm, jax.random.key(3), keep,
+        init_state=warm.final_state,
+        collectors={
+            "moments": api.OnlineMoments(),
+            "rhat": api.RHat(),
+            "queries": api.QueryBudget(),
+            "trace": api.FullTrace(),  # offline cross-check only
+        },
+    )
+    mom = trace.results["moments"]
+    total_q = trace.results["queries"]
+
+    # streamed == offline, on the sharded chain
+    off = np.asarray(trace.results["trace"]["theta"], np.float64)
+    st = trace.results["trace"]["stats"]
+    np.testing.assert_allclose(mom["mean"], off.mean(1), atol=1e-3)
+    np.testing.assert_allclose(
+        trace.results["rhat"]["r_hat"], diagnostics.split_r_hat(off),
+        rtol=1e-4,
+    )
+    assert total_q == int(
+        np.asarray(jax.device_get(st.lik_queries), np.int64).sum()
+    )
+
     print(f"devices: {jax.device_count()}  N={n:,} sharded 8-way")
-    print(f"posterior mean (first 4): {np.round(s.mean(0)[:4], 3)}")
-    print(f"queries/iter: {total_q / iters:,.0f}  "
-          f"({n / (total_q / iters):.0f}x fewer than full-data MCMC)")
+    print(f"posterior mean (first 4, streamed): "
+          f"{np.round(mom['mean'][0][:4], 3)}")
+    print(f"split-Rhat (two halves, streamed): "
+          f"{trace.results['rhat']['r_hat']:.3f}")
+    print(f"queries/iter: {total_q / keep:,.0f}  "
+          f"({n / (total_q / keep):.0f}x fewer than full-data MCMC)")
 
 
 if __name__ == "__main__":

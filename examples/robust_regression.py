@@ -5,9 +5,12 @@ at a MAP estimate; slice sampling for θ (variable likelihood evaluations per
 iteration, exactly the paper's third experiment).
 
     PYTHONPATH=src python examples/robust_regression.py [--n 50000]
+
+``ROBUST_N`` / ``ROBUST_ITERS`` env vars shrink the problem (CI smoke).
 """
 
 import argparse
+import os
 
 import jax
 import numpy as np
@@ -17,7 +20,8 @@ from repro.data import robust_data
 from repro.models.bayes_glm import GLMModel
 
 
-def main(n=50_000, d=57, iters=800, burn=200):
+def main(n=50_000, d=57, iters=800):
+    burn = max(1, iters // 4)
     data, theta_true = robust_data(jax.random.key(0), n=n, d=d, nu=4.0)
     model = GLMModel.robust(data, nu=4.0, sigma=1.0, prior_scale=1.0)
 
@@ -44,6 +48,9 @@ def main(n=50_000, d=57, iters=800, burn=200):
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
-    ap.add_argument("--n", type=int, default=50_000)
+    ap.add_argument("--n", type=int,
+                    default=int(os.environ.get("ROBUST_N", 50_000)))
+    ap.add_argument("--iters", type=int,
+                    default=int(os.environ.get("ROBUST_ITERS", 800)))
     args = ap.parse_args()
-    main(n=args.n)
+    main(n=args.n, iters=args.iters)

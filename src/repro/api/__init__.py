@@ -15,6 +15,16 @@ over chains, and a single :class:`Trace` pytree out.
     >>> alg = firefly(model, kernel="rwmh", q_db=0.01, step_size=0.05)
     >>> trace = sample(alg, jax.random.key(0), 2000, num_chains=4)
     >>> trace.theta.shape           # (4, 2000, D)
+
+Output is pluggable via :mod:`repro.api.collectors` — streaming on-device
+reductions (online moments, split-R̂, batch-means ESS, posterior predictive,
+query accounting) whose memory does not scale with ``num_samples``:
+
+    >>> trace = sample(alg, key, 1_000_000, num_chains=4, collectors={
+    ...     "moments": OnlineMoments(), "rhat": RHat(),
+    ...     "queries": QueryBudget(),
+    ... })
+    >>> trace.results["moments"]["mean"]   # (4, D), no trace materialized
 """
 
 from repro.api.algorithm import (
@@ -24,11 +34,27 @@ from repro.api.algorithm import (
     firefly,
     regular_mcmc,
 )
+from repro.api.collectors import (
+    BatchMeansESS,
+    FullTrace,
+    OnlineMoments,
+    PosteriorPredictive,
+    QueryBudget,
+    RHat,
+    ThinnedTrace,
+)
 from repro.api.driver import Trace, sample
 
 __all__ = [
+    "BatchMeansESS",
+    "FullTrace",
     "MCMCState",
+    "OnlineMoments",
+    "PosteriorPredictive",
+    "QueryBudget",
+    "RHat",
     "SamplingAlgorithm",
+    "ThinnedTrace",
     "Trace",
     "algorithm_from_spec",
     "firefly",

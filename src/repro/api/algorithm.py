@@ -53,6 +53,21 @@ class SamplingAlgorithm:
             return self.position(state)
         return state.sampler.theta
 
+    def output_structs(self, state):
+        """Shape/dtype structs of one chain's per-step outputs, no compute.
+
+        Returns ``(position_struct, stats_struct)`` — ``jax.ShapeDtypeStruct``
+        pytrees for ``position_of(state)`` and the ``StepStats`` that ``step``
+        emits. ``state`` may be a concrete single-chain state or itself a
+        struct pytree; everything runs under ``jax.eval_shape``. This is what
+        lets :mod:`repro.api.collectors` size their carries before the first
+        step executes.
+        """
+        key = jax.eval_shape(lambda: jax.random.key(0))
+        pos = jax.eval_shape(self.position_of, state)
+        _, stats = jax.eval_shape(self.step, key, state)
+        return pos, stats
+
 
 def _spec_from(
     model,

@@ -1,0 +1,426 @@
+"""Streaming observables: on-device reductions over the sampling trajectory.
+
+A :class:`Collector` is a pure ``(init, update, finalize)`` pytree-carry
+reduction that the :func:`repro.api.sample` driver threads through its jitted
+``lax.scan`` chunks:
+
+  * ``init(num_samples, position, stats) -> carry`` — build the carry pytree
+    (device arrays). ``position``/``stats`` are ``jax.ShapeDtypeStruct``
+    pytrees describing one chain's θ and one step's
+    :class:`~repro.core.flymc.StepStats`; only shapes/dtypes may be read.
+  * ``update(carry, position, stats) -> carry`` — consume one post-step
+    ``(θ, StepStats)`` pair. Runs *inside* the scan body (traced), is
+    ``vmap``'d over chains, and composes with ``shard_map`` (θ and the psum'd
+    stats are replicated across shards, so carries stay replicated too).
+  * ``finalize(carry) -> result`` — host-side post-processing. The carry
+    always arrives with a leading ``(num_chains, ...)`` axis (added for
+    single-chain runs), so cross-chain reductions (R̂) happen here.
+
+The driver folds carries only over *committed* chunks — a chunk that
+overflowed its capacity is re-run (bitwise, from the saved pre-chunk state)
+before any collector sees it — so every built-in reduction is bitwise
+invariant to capacity growth, chunking, and buffer doubling, exactly like
+the trajectory itself.
+
+Memory is O(what-you-ask-for): a ``sample`` call whose collectors carry no
+trace buffer materializes nothing that scales with ``num_samples``.
+
+Estimator math is shared with :mod:`repro.core.diagnostics`
+(``rhat_from_split_moments``, ``tau_from_batch_means``) so the streaming and
+offline paths cannot drift.
+
+Collectors hash by identity; reuse the same instances across ``sample`` calls
+to reuse the driver's compiled chunk executables.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import diagnostics
+
+
+def _zeros(struct):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), struct)
+
+
+def _flat_dim(struct) -> int:
+    return int(np.prod(struct.shape, dtype=np.int64)) if struct.shape else 1
+
+
+@dataclasses.dataclass(eq=False)
+class FullTrace:
+    """Today's dense output: every θ sample plus per-iteration StepStats.
+
+    This is the default collector — ``sample()`` without ``collectors=``
+    behaves exactly as before, reproducing ``Trace.theta`` / ``Trace.stats``
+    bitwise. The buffers are written in-place inside the scan
+    (``buf.at[n].set``), so the carry is the only O(num_samples) allocation.
+    """
+
+    with_stats: bool = True
+
+    def init(self, num_samples, position, stats):
+        buf = lambda s: jnp.zeros((num_samples,) + s.shape, s.dtype)
+        carry = {"n": jnp.int32(0), "theta": buf(position)}
+        if self.with_stats:
+            carry["stats"] = jax.tree.map(buf, stats)
+        return carry
+
+    def update(self, carry, position, stats):
+        n = carry["n"]
+        out = {"n": n + 1, "theta": carry["theta"].at[n].set(position)}
+        if self.with_stats:
+            out["stats"] = jax.tree.map(
+                lambda b, leaf: b.at[n].set(leaf), carry["stats"], stats
+            )
+        return out
+
+    def finalize(self, carry):
+        result = {"theta": carry["theta"]}
+        if self.with_stats:
+            result["stats"] = carry["stats"]
+        return result
+
+
+@dataclasses.dataclass(eq=False)
+class ThinnedTrace:
+    """Every ``thin``-th θ, decimated on device: ``theta[thin-1::thin]``.
+
+    Entry ``i`` is iteration ``(i+1)·thin - 1`` (the LAST iteration of each
+    thin window; a trailing partial window contributes nothing) — bitwise the
+    slice the host-side ``thin=`` path takes, at 1/thin the memory.
+    """
+
+    thin: int = 1
+
+    def __post_init__(self):
+        if self.thin < 1:
+            raise ValueError("thin must be >= 1")
+
+    def init(self, num_samples, position, stats):
+        del stats
+        kept = num_samples // self.thin
+        return {
+            "n": jnp.int32(0),
+            "theta": jnp.zeros((kept,) + position.shape, position.dtype),
+        }
+
+    def update(self, carry, position, stats):
+        del stats
+        n = carry["n"]
+        kept = carry["theta"].shape[0]
+        if kept == 0:  # num_samples < thin: nothing ever kept
+            return {"n": n + 1, "theta": carry["theta"]}
+        keep = (n % self.thin) == (self.thin - 1)
+        slot = jnp.minimum(n // self.thin, kept - 1)
+        row = jnp.where(keep, position, carry["theta"][slot])
+        return {"n": n + 1, "theta": carry["theta"].at[slot].set(row)}
+
+    def finalize(self, carry):
+        return {"theta": carry["theta"]}
+
+
+@dataclasses.dataclass(eq=False)
+class OnlineMoments:
+    """Welford running mean (and covariance) of θ — constant memory.
+
+    The carry is ``(count, mean, M2)`` with θ flattened to ``(D,)``; the
+    covariance co-moment matrix is O(D²) and optional. ``finalize`` returns
+    per-chain ``{"count", "mean", "cov"}`` (mean reshaped to θ's shape, cov
+    over the flattened coordinates, ``ddof=1``).
+    """
+
+    cov: bool = True
+
+    def init(self, num_samples, position, stats):
+        del num_samples, stats
+        d = _flat_dim(position)
+        carry = {
+            "count": jnp.int32(0),
+            "mean": jnp.zeros((d,), position.dtype),
+            "shape": jnp.zeros(position.shape, jnp.int8),  # shape token only
+        }
+        if self.cov:
+            carry["m2"] = jnp.zeros((d, d), position.dtype)
+        return carry
+
+    def update(self, carry, position, stats):
+        del stats
+        x = position.reshape(-1)
+        n1 = carry["count"] + 1
+        delta = x - carry["mean"]
+        mean = carry["mean"] + delta / n1.astype(x.dtype)
+        out = {"count": n1, "mean": mean, "shape": carry["shape"]}
+        if self.cov:
+            out["m2"] = carry["m2"] + jnp.outer(delta, x - mean)
+        return out
+
+    def finalize(self, carry):
+        count = np.asarray(jax.device_get(carry["count"]))
+        mean = np.asarray(jax.device_get(carry["mean"]))
+        shape = carry["shape"].shape[1:]  # per-chain θ shape
+        result = {
+            "count": count,
+            "mean": mean.reshape(mean.shape[:1] + shape),
+        }
+        if self.cov:
+            m2 = np.asarray(jax.device_get(carry["m2"]), np.float64)
+            denom = np.maximum(count - 1, 1).astype(np.float64)
+            result["cov"] = m2 / denom[:, None, None]
+        return result
+
+
+@dataclasses.dataclass(eq=False)
+class RHat:
+    """Split-chain R̂ accumulators, matching ``diagnostics.split_r_hat``.
+
+    Each chain streams Welford moments for its first and second half
+    (``half = num_samples // 2``, iterations beyond ``2·half`` ignored —
+    the same tail-drop as the offline estimator). ``finalize`` pools the
+    ``2 × num_chains`` split moments through the shared
+    :func:`repro.core.diagnostics.rhat_from_split_moments`, so the streaming
+    and offline R̂ agree to accumulation rounding. Works with a single chain
+    (two splits), sharpens with more.
+    """
+
+    def init(self, num_samples, position, stats):
+        del stats
+        d = _flat_dim(position)
+        half = num_samples // 2
+        return {
+            "half": jnp.int32(half),
+            "n": jnp.int32(0),
+            "count": jnp.zeros((2,), jnp.int32),
+            "mean": jnp.zeros((2, d), position.dtype),
+            "m2": jnp.zeros((2, d), position.dtype),
+        }
+
+    def update(self, carry, position, stats):
+        del stats
+        x = position.reshape(-1)
+        half = carry["half"]
+        n = carry["n"]
+        split = jnp.where(n < half, 0, 1)
+        active = n < 2 * half
+        cnt = carry["count"][split] + jnp.where(active, 1, 0)
+        delta = x - carry["mean"][split]
+        mean = carry["mean"][split] + jnp.where(
+            active, delta / jnp.maximum(cnt, 1).astype(x.dtype), 0.0
+        )
+        m2 = carry["m2"][split] + jnp.where(
+            active, delta * (x - mean), 0.0
+        )
+        return {
+            "half": half,
+            "n": n + 1,
+            "count": carry["count"].at[split].set(cnt),
+            "mean": carry["mean"].at[split].set(mean),
+            "m2": carry["m2"].at[split].set(m2),
+        }
+
+    def finalize(self, carry):
+        count = np.asarray(jax.device_get(carry["count"]))  # (C, 2)
+        mean = np.asarray(jax.device_get(carry["mean"]), np.float64)
+        m2 = np.asarray(jax.device_get(carry["m2"]), np.float64)
+        h = int(count.flat[0])
+        if h < 2:
+            return {"r_hat": float("nan"), "per_coordinate": None}
+        c, _, d = mean.shape
+        means = mean.reshape(2 * c, d)  # k = 2·C splits, length h each
+        variances = m2.reshape(2 * c, d) / (h - 1)
+        per_coord = diagnostics.rhat_from_split_moments(h, means, variances)
+        per_coord = np.atleast_1d(per_coord)
+        return {"r_hat": float(per_coord.max()), "per_coordinate": per_coord}
+
+
+@dataclasses.dataclass(eq=False)
+class BatchMeansESS:
+    """On-device batch-means estimate of τ (and ESS) per coordinate.
+
+    The carry holds ``num_batches`` per-batch *running means* plus Welford
+    chain moments (never raw sum-of-squares, which cancels catastrophically
+    in f32 on long off-center chains); iterations past
+    ``num_batches · batch_len`` are ignored (the same truncation as the
+    offline :func:`repro.core.diagnostics.batch_means_ess`, which shares
+    the ``tau_from_batch_means`` math). Batch means are asymptotically
+    independent, so ``τ ≈ batch_len · Var(batch means) / Var(chain)`` — a
+    coarser but streaming alternative to the Geyer estimator; the two agree
+    on well-behaved chains (cross-checked in tests).
+    """
+
+    num_batches: int = 32
+
+    def __post_init__(self):
+        if self.num_batches < 2:
+            raise ValueError("num_batches must be >= 2")
+
+    def init(self, num_samples, position, stats):
+        del stats
+        d = _flat_dim(position)
+        b = self.num_batches
+        batch_len = max(1, num_samples // b)
+        # Per-batch RUNNING means and Welford chain moments — never raw
+        # (sum, sum_sq), whose f32 cancellation makes the variance garbage
+        # at exactly the million-iteration scale this collector targets.
+        return {
+            "batch_len": jnp.int32(batch_len),
+            "n": jnp.int32(0),
+            "batch_mean": jnp.zeros((b, d), position.dtype),
+            "count": jnp.int32(0),
+            "mean": jnp.zeros((d,), position.dtype),
+            "m2": jnp.zeros((d,), position.dtype),
+        }
+
+    def update(self, carry, position, stats):
+        del stats
+        x = position.reshape(-1)
+        b = carry["batch_mean"].shape[0]
+        n = carry["n"]
+        batch_len = carry["batch_len"]
+        active = n < b * batch_len
+        idx = jnp.minimum(n // batch_len, b - 1)
+        j = (n - idx * batch_len + 1).astype(x.dtype)  # 1-based, in-batch
+        cur = carry["batch_mean"][idx]
+        new_bm = cur + jnp.where(active, (x - cur) / j, 0.0)
+        cnt = carry["count"] + jnp.where(active, 1, 0)
+        delta = x - carry["mean"]
+        mean = carry["mean"] + jnp.where(
+            active, delta / jnp.maximum(cnt, 1).astype(x.dtype), 0.0
+        )
+        m2 = carry["m2"] + jnp.where(active, delta * (x - mean), 0.0)
+        return {
+            "batch_len": batch_len,
+            "n": n + 1,
+            "batch_mean": carry["batch_mean"].at[idx].set(new_bm),
+            "count": cnt,
+            "mean": mean,
+            "m2": m2,
+        }
+
+    def finalize(self, carry):
+        batch_len = int(np.asarray(jax.device_get(carry["batch_len"])).flat[0])
+        bm = np.asarray(jax.device_get(carry["batch_mean"]), np.float64)
+        m2 = np.asarray(jax.device_get(carry["m2"]), np.float64)
+        n_used = np.asarray(jax.device_get(carry["count"]))  # (C,)
+        c, b, d = bm.shape
+        out_tau = np.full((c, d), np.nan)
+        out_ess = np.full((c,), np.nan)
+        for i in range(c):
+            nu = int(n_used[i])
+            nb = nu // batch_len
+            if nb < 2 or nu < 2:
+                continue
+            chain_var = m2[i] / (nu - 1)
+            tau = diagnostics.tau_from_batch_means(
+                bm[i, :nb], batch_len, chain_var
+            )
+            out_tau[i] = np.maximum(tau, 1.0)
+            out_ess[i] = (nu / out_tau[i]).min()
+        return {"tau": out_tau, "ess": out_ess, "count": n_used}
+
+
+def _default_predict(theta, x_eval):
+    return jax.nn.sigmoid(x_eval @ theta)
+
+
+@dataclasses.dataclass(eq=False)
+class PosteriorPredictive:
+    """Running posterior-mean predictive probability at fixed eval points.
+
+    The serving workload: ``E_posterior[p(y | x, θ)]`` for each row of
+    ``x_eval``, streamed as a running mean — no trace, no post-hoc pass.
+    ``predict_fn(theta, x_eval)`` defaults to the logistic-GLM
+    ``sigmoid(x_eval @ θ)``.
+    """
+
+    x_eval: Any = None
+    predict_fn: Callable[[Any, Any], jax.Array] | None = None
+
+    def __post_init__(self):
+        if self.x_eval is None:
+            raise ValueError("PosteriorPredictive needs x_eval")
+        self.x_eval = jnp.asarray(self.x_eval)
+
+    def init(self, num_samples, position, stats):
+        del num_samples, stats
+        fn = self.predict_fn or _default_predict
+        p = jax.eval_shape(fn, position, self.x_eval)
+        return {"count": jnp.int32(0), "mean": jnp.zeros(p.shape, p.dtype)}
+
+    def update(self, carry, position, stats):
+        del stats
+        fn = self.predict_fn or _default_predict
+        p = fn(position, self.x_eval)
+        n1 = carry["count"] + 1
+        mean = carry["mean"] + (p - carry["mean"]) / n1.astype(p.dtype)
+        return {"count": n1, "mean": mean}
+
+    def finalize(self, carry):
+        return {
+            "count": np.asarray(jax.device_get(carry["count"])),
+            "mean_prob": np.asarray(jax.device_get(carry["mean"])),
+        }
+
+
+@dataclasses.dataclass(eq=False)
+class QueryBudget:
+    """Exact on-device int64 likelihood-query accounting.
+
+    Replaces the host-side int64 sum over materialized per-step stats.
+    Without ``jax_enable_x64`` a device int64 silently becomes int32 — which
+    wraps at paper scale (N=1.8M × slice × 1200 iters ≈ 2.6e10 > 2³¹) — so
+    the carry is a two-lane uint32 (lo, hi) emulating uint64: per-step
+    ``lik_queries`` (int32, ≥ 0) adds into ``lo`` with the wrap carried into
+    ``hi``. ``finalize`` reassembles exact Python ints and sums chains.
+    """
+
+    def init(self, num_samples, position, stats):
+        del num_samples, position, stats
+        return {"lo": jnp.uint32(0), "hi": jnp.uint32(0)}
+
+    def update(self, carry, position, stats):
+        del position
+        q = stats.lik_queries.astype(jnp.uint32)
+        lo = carry["lo"] + q  # uint32 add wraps mod 2³²
+        wrapped = (lo < carry["lo"]).astype(jnp.uint32)
+        return {"lo": lo, "hi": carry["hi"] + wrapped}
+
+    def finalize(self, carry):
+        lo = np.asarray(jax.device_get(carry["lo"]), np.uint64)
+        hi = np.asarray(jax.device_get(carry["hi"]), np.uint64)
+        per_chain = [(int(h) << 32) + int(l) for h, l in zip(hi, lo)]
+        return sum(per_chain)
+
+
+def validate_collectors(collectors: dict) -> dict:
+    """Check a user-supplied ``{name: Collector}`` dict (driver entry gate)."""
+    if not isinstance(collectors, dict):
+        raise TypeError("collectors must be a {name: Collector} dict")
+    for name, col in collectors.items():
+        if not isinstance(name, str):
+            raise TypeError(f"collector names must be strings, got {name!r}")
+        for attr in ("init", "update", "finalize"):
+            if not callable(getattr(col, attr, None)):
+                raise TypeError(
+                    f"collector {name!r} ({type(col).__name__}) does not "
+                    f"implement the (init, update, finalize) protocol"
+                )
+    return dict(collectors)
+
+
+__all__ = [
+    "BatchMeansESS",
+    "FullTrace",
+    "OnlineMoments",
+    "PosteriorPredictive",
+    "QueryBudget",
+    "RHat",
+    "ThinnedTrace",
+    "validate_collectors",
+]

@@ -2,17 +2,24 @@
 
 The chain lives on device end to end: each chunk of ``chunk_size``
 iterations is one jitted ``lax.scan`` (``vmap``'d over chains), and the only
-host synchronization is a single overflow-flag read per chunk. Samples and
-per-step stats accumulate as device arrays and are concatenated once at the
-end — zero per-iteration ``device_get``s, unlike the legacy host loop
-(~4 syncs/step).
+host synchronization is a single overflow-flag read per chunk. Output is
+produced by :mod:`repro.api.collectors` — pure ``(init, update, finalize)``
+reductions whose carries thread through the scan, so memory is
+O(what-you-ask-for): the default :class:`~repro.api.collectors.FullTrace`
+materializes the dense trajectory exactly as before, while a collectors-only
+call (online moments, split-R̂, query accounting, …) allocates nothing that
+scales with ``num_samples`` — zero per-iteration ``device_get``s, unlike the
+legacy host loop (~4 syncs/step).
 
 Exactness under bounded buffers (DESIGN.md §3.1) is preserved at chunk
 granularity: the pre-chunk state is kept alive, and if any step in the chunk
 overflowed its bright/candidate capacity, the *whole chunk* is re-run from
 that saved state with doubled capacities and the identical per-iteration RNG
 keys (``fold_in(chain_key, iteration)``), so the realized chain is bitwise
-the one an infinite-capacity sampler would have produced.
+the one an infinite-capacity sampler would have produced. Collector carries
+only ever fold *committed* chunks (the fold runs after the overflow check
+passes), so every streamed reduction is bitwise capacity/chunk-invariant
+too — with no carry rollback needed.
 """
 
 from __future__ import annotations
@@ -24,17 +31,24 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import collectors as collectors_lib
 from repro.api.algorithm import SamplingAlgorithm
 from repro.core.flymc import StepStats
 
 
-# jit cache keyed on the algorithm's stable function identities: repeated
-# sample() calls on the same algorithm (or the same grown capacity) reuse
-# compiled chunk/init executables instead of re-tracing fresh closures.
-# LRU-bounded: entries keep the algorithm's closed-over data arrays alive,
-# so stale algorithms must age out (and hot ones must not be mass-evicted).
+# jit cache keyed on the algorithm's stable function identities (plus the
+# collector set): repeated sample() calls on the same algorithm (or the same
+# grown capacity) reuse compiled chunk/init executables instead of re-tracing
+# fresh closures. Collectors hash by identity, so reusing collector instances
+# across calls is what makes the cache hit. LRU-bounded: entries keep the
+# algorithm's closed-over data arrays alive, so stale algorithms must age out
+# (and hot ones must not be mass-evicted).
 _JIT_CACHE: OrderedDict = OrderedDict()
 _JIT_CACHE_MAX = 64
+
+# The back-compat default collector set: one shared instance so repeated
+# sample() calls without collectors= hit the same compiled chunk fn.
+_DEFAULT_TRACE = collectors_lib.FullTrace()
 
 
 def _cached(key, build):
@@ -49,29 +63,36 @@ def _cached(key, build):
 
 
 class Trace(NamedTuple):
-    """Everything one `sample()` call produced, as stacked device arrays.
+    """Everything one `sample()` call produced.
 
     theta         : (num_chains, num_samples // thin, *theta_shape) — the
                     ``theta[thin - 1 :: thin]`` slice of the per-iteration
                     trajectory, i.e. entry ``i`` is iteration
                     ``(i + 1)·thin - 1`` (the LAST iteration of each thin
                     window, not the first), and a trailing partial window
-                    contributes nothing
-    stats         : StepStats with (num_chains, num_samples) leaves (unthinned)
+                    contributes nothing. None when ``collectors=`` was given
+                    (ask for a FullTrace/ThinnedTrace collector instead).
+    stats         : StepStats with (num_chains, num_samples) leaves
+                    (unthinned); None when ``collectors=`` was given
     total_queries : int — total per-datum likelihood evaluations, all chains
-                    (a host int64 sum: per-step counts are int32 and an
-                    on-device total would wrap at paper scale, e.g.
-                    N=1.8M × slice × 1200 iters ≈ 2.6e10 > 2^31)
+                    (an int64 total: per-step counts are int32 and would wrap
+                    at paper scale, e.g. N=1.8M × slice × 1200 iters ≈ 2.6e10
+                    > 2^31). From the on-device QueryBudget collector when one
+                    was passed; from a host-side sum over materialized stats
+                    on the default path; None otherwise.
     final_state   : chain state pytree (leading chain axis iff num_chains > 1),
                     suitable for resuming via sample(..., init_state=...)
     algorithm     : the (possibly capacity-grown) SamplingAlgorithm
+    results       : {name: finalized result} for the ``collectors=`` dict
+                    passed in; None on the default (FullTrace) path
     """
 
-    theta: jax.Array
-    stats: StepStats
-    total_queries: jax.Array
+    theta: jax.Array | None
+    stats: StepStats | None
+    total_queries: Any
     final_state: Any
     algorithm: SamplingAlgorithm
+    results: dict | None = None
 
 
 def _broadcast_positions(position, num_chains: int, reference):
@@ -94,6 +115,63 @@ def _broadcast_positions(position, num_chains: int, reference):
     )
 
 
+def _make_scan_fn(alg: SamplingAlgorithm, multi: bool, cs: int):
+    """One jitted chunk of the chain: cs steps of alg.step, vmap'd over
+    chains when multi. Emits the per-step (θ, StepStats) as chunk-local
+    O(cs) scan outputs plus (final_state, any_overflow)."""
+
+    def scan_chain(state, chain_key, start):
+        def body(carry, i):
+            new_state, info = alg.step(
+                jax.random.fold_in(chain_key, i), carry
+            )
+            return new_state, (alg.position_of(new_state), info)
+
+        iters = start + jnp.arange(cs, dtype=jnp.int32)
+        return jax.lax.scan(body, state, iters)
+
+    def chunk(state, keys, start):
+        if multi:
+            final, (pos, infos) = jax.vmap(
+                scan_chain, in_axes=(0, 0, None)
+            )(state, keys, start)
+        else:
+            final, (pos, infos) = scan_chain(state, keys, start)
+        return final, pos, infos, jnp.any(infos.overflow)
+
+    return jax.jit(chunk)
+
+
+def _make_fold_fn(colls: dict, multi: bool):
+    """Fold one COMMITTED chunk's (θ, StepStats) outputs into the collector
+    carries, in step order (vmap'd over chains when multi).
+
+    A separate jit from the chain scan for two reasons: (a) it runs only
+    after the chunk's overflow check passes, so an overflowed chunk never
+    touches collector state and capacity re-runs need no carry rollback;
+    (b) the carry argument is donated (where the backend supports input-
+    output aliasing), so a trace-type collector's O(num_samples) buffer is
+    updated in place instead of being copied at every chunk boundary.
+    """
+    names = tuple(colls)
+
+    def fold_chain(carries, pos, infos):
+        def body(cars, x):
+            p, inf = x
+            return {n: colls[n].update(cars[n], p, inf) for n in names}, None
+
+        cars, _ = jax.lax.scan(body, carries, (pos, infos))
+        return cars
+
+    def fold(carries, pos, infos):
+        if multi:
+            return jax.vmap(fold_chain)(carries, pos, infos)
+        return fold_chain(carries, pos, infos)
+
+    donate = (0,) if jax.default_backend() != "cpu" else ()
+    return jax.jit(fold, donate_argnums=donate)
+
+
 def sample(
     alg: SamplingAlgorithm,
     key: jax.Array,
@@ -104,17 +182,29 @@ def sample(
     chunk_size: int = 128,
     init_position=None,
     init_state=None,
+    collectors: dict | None = None,
 ) -> Trace:
     """Run ``num_samples`` iterations of ``alg`` on device; return a Trace.
 
     ``init_position`` seeds ``alg.init`` (default: ``alg.default_position``);
     pass a (num_chains, ...) array for per-chain starts. ``init_state``
-    resumes from an existing chain state instead (single chain only), using
-    ``key`` as the per-iteration key root with the fold-in counter offset by
-    the state's ``iteration`` — resuming with the prefix's key continues its
-    exact stream (split == contiguous, bitwise) instead of replaying it.
-    ``thin`` keeps every thin-th θ sample (the last of each window); stats
-    stay per-iteration. Host syncs: one per chunk (plus one at resume).
+    resumes from an existing chain state instead — single chain, or
+    ``num_chains > 1`` with a leading-axis state (e.g. a previous multi-chain
+    run's ``final_state``) — using ``key`` as the per-iteration key root with
+    the fold-in counter offset by the state's ``iteration``: resuming with
+    the prefix's key continues its exact stream (split == contiguous,
+    bitwise) instead of replaying it.
+
+    ``collectors`` maps names to :mod:`repro.api.collectors` instances; their
+    ``update`` runs inside the jitted chunk scans (vmap'd over chains) and
+    their finalized results land on ``Trace.results``. Without it, the
+    default :class:`~repro.api.collectors.FullTrace` reproduces the dense
+    ``Trace.theta``/``Trace.stats`` bitwise; with it, nothing O(num_samples)
+    is materialized unless a trace collector asks for it. ``thin`` keeps
+    every thin-th θ sample on the default path (the last of each window;
+    stats stay per-iteration) — with explicit collectors use
+    :class:`~repro.api.collectors.ThinnedTrace` instead. Host syncs: one per
+    chunk (plus one at resume).
     """
     if num_samples <= 0:
         raise ValueError("num_samples must be positive")
@@ -123,12 +213,31 @@ def sample(
     chunk_size = max(1, min(int(chunk_size), num_samples))
     multi = num_chains > 1
 
+    if collectors is None:
+        colls = {"trace": _DEFAULT_TRACE}
+        default_path = True
+    else:
+        if thin != 1:
+            raise ValueError(
+                "thin applies to the default trace only; with collectors= "
+                "use ThinnedTrace(thin) instead"
+            )
+        colls = collectors_lib.validate_collectors(collectors)
+        default_path = False
+
     start_offset = 0
     if init_state is not None:
-        if multi:
-            raise ValueError("init_state resume supports num_chains=1 only")
         state = init_state
-        k_steps = key
+        if multi:
+            leading = {
+                jnp.shape(l)[:1] for l in jax.tree.leaves(state)
+            }
+            if leading != {(num_chains,)}:
+                raise ValueError(
+                    f"init_state resume with num_chains={num_chains} needs a "
+                    f"state with a leading ({num_chains},) chain axis on "
+                    f"every leaf (e.g. a previous multi-chain final_state)"
+                )
         # Resume must NOT replay the prefix's key stream: per-iteration keys
         # are fold_in(chain_key, iteration), so a resumed segment continues
         # the counter at the state's iteration instead of restarting at 0.
@@ -137,7 +246,14 @@ def sample(
         # replay of the original run's randomness. One host sync, up front.
         it = getattr(state, "iteration", None)
         if it is not None:
-            start_offset = int(jax.device_get(it))
+            vals = np.asarray(jax.device_get(it))
+            if vals.ndim and not (vals == vals.flat[0]).all():
+                raise ValueError(
+                    "init_state chains are at different iterations "
+                    f"({vals.tolist()}); resume needs a uniform offset"
+                )
+            start_offset = int(vals.flat[0] if vals.ndim else vals)
+        k_steps = key
     else:
         k_init, k_steps = jax.random.split(key)
         position = init_position if init_position is not None else alg.default_position
@@ -178,42 +294,42 @@ def sample(
 
     chain_keys = jax.random.split(k_steps, num_chains) if multi else k_steps
 
-    def make_chunk_fn(alg: SamplingAlgorithm, cs: int):
-        def scan_chain(state, chain_key, start):
-            def body(carry, i):
-                new_state, info = alg.step(
-                    jax.random.fold_in(chain_key, i), carry
-                )
-                return new_state, (alg.position_of(new_state), info)
-
-            iters = start + jnp.arange(cs, dtype=jnp.int32)
-            return jax.lax.scan(body, state, iters)
-
-        def chunk(state, keys, start):
-            if multi:
-                final, (th, inf) = jax.vmap(
-                    scan_chain, in_axes=(0, 0, None)
-                )(state, keys, start)
-            else:
-                final, (th, inf) = scan_chain(state, keys, start)
-            return final, th, inf, jnp.any(inf.overflow)
-
-        return jax.jit(chunk)
-
-    def chunk_fn_for(alg, cs):
-        return _cached(
-            ("chunk", alg.step, alg.position, multi, cs),
-            lambda: make_chunk_fn(alg, cs),
+    # Collector carries, built from shape/dtype structs only (no compute):
+    # one carry per chain, broadcast over the leading chain axis.
+    pos_struct, stats_struct = alg.output_structs(
+        jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct(
+                jnp.shape(l)[1:] if multi else jnp.shape(l), l.dtype
+            ),
+            state,
+        )
+    )
+    carries = {
+        name: col.init(num_samples, pos_struct, stats_struct)
+        for name, col in colls.items()
+    }
+    if multi:
+        carries = jax.tree.map(
+            lambda l: jnp.broadcast_to(l, (num_chains,) + l.shape), carries
         )
 
-    thetas, infos = [], []
+    def scan_fn_for(alg, cs):
+        return _cached(
+            ("scan", alg.step, alg.position, multi, cs),
+            lambda: _make_scan_fn(alg, multi, cs),
+        )
+
+    fold_fn = _cached(
+        ("fold", tuple(colls.items()), multi),
+        lambda: _make_fold_fn(colls, multi),
+    )
+
     start = 0
     while start < num_samples:
         cs = min(chunk_size, num_samples - start)
-        chunk_fn = chunk_fn_for(alg, cs)
         # Keep the pre-chunk state alive for the exact re-run on overflow.
         prev = state
-        final, th, inf, overflow = chunk_fn(
+        final, pos, infos, overflow = scan_fn_for(alg, cs)(
             state, chain_keys, jnp.int32(start_offset + start)
         )
         while bool(jax.device_get(overflow)):  # the chunk's one host sync
@@ -223,34 +339,48 @@ def sample(
                 ("resize", resize, multi),
                 lambda: jax.jit(jax.vmap(resize) if multi else resize),
             )(prev)
-            final, th, inf, overflow = chunk_fn_for(alg, cs)(
+            final, pos, infos, overflow = scan_fn_for(alg, cs)(
                 prev, chain_keys, jnp.int32(start_offset + start)
             )
+        # Only a committed (non-overflowed) chunk reaches the collectors, so
+        # capacity re-runs never need a carry rollback; the donated carry is
+        # updated in place on backends with input-output aliasing.
+        if colls:
+            carries = fold_fn(carries, pos, infos)
         state = final
-        thetas.append(th)
-        infos.append(inf)
         start += cs
 
-    t_axis = 1 if multi else 0
-    theta = jnp.concatenate(thetas, axis=t_axis) if len(thetas) > 1 else thetas[0]
-    stats = jax.tree.map(
-        lambda *xs: jnp.concatenate(xs, axis=t_axis) if len(xs) > 1 else xs[0],
-        *infos,
-    )
+    # finalize() always sees a leading (num_chains, ...) carry axis.
     if not multi:
-        theta = theta[None]
-        stats = jax.tree.map(lambda a: a[None], stats)
-    if thin > 1:
-        theta = theta[:, thin - 1 :: thin]
-    total_queries = int(
-        np.asarray(jax.device_get(stats.lik_queries), dtype=np.int64).sum()
-    )
+        carries = jax.tree.map(lambda l: l[None], carries)
+    results = {name: colls[name].finalize(carries[name]) for name in colls}
+
+    if default_path:
+        tr = results["trace"]
+        theta, stats = tr["theta"], tr["stats"]
+        if thin > 1:
+            theta = theta[:, thin - 1 :: thin]
+        total_queries = int(
+            np.asarray(jax.device_get(stats.lik_queries), dtype=np.int64).sum()
+        )
+        results = None
+    else:
+        theta = stats = None
+        total_queries = next(
+            (
+                results[name]
+                for name, col in colls.items()
+                if isinstance(col, collectors_lib.QueryBudget)
+            ),
+            None,
+        )
     return Trace(
         theta=theta,
         stats=stats,
         total_queries=total_queries,
         final_state=state,
         algorithm=alg,
+        results=results,
     )
 
 

@@ -12,7 +12,13 @@ Mapping (DESIGN.md §5):
     per-shard independent RNG (keys folded with the shard index);
   * per-shard bright capacities bound straggler skew: no shard ever does
     data-dependent work beyond C rows (the host grows C globally on
-    overflow, exactly as in the single-device chain).
+    overflow, exactly as in the single-device chain);
+  * streaming collectors (:mod:`repro.api.collectors`) compose for free:
+    the sharded step emits θ and StepStats replicated (``out_specs PS()``,
+    stats psum'd in-step), so the driver's collector updates run on
+    replicated values and the carries stay replicated — online moments,
+    split-R̂, and exact query accounting at pod scale cost zero extra
+    collectives and no O(iterations) memory.
 """
 
 from __future__ import annotations
@@ -127,7 +133,10 @@ def dist_algorithm(bound, log_prior, mesh, data: GLMData, **spec_kw):
     ``lax.scan`` runs over the shard-mapped step, so the whole chunk stays on
     device and capacity growth follows the same chunk-boundary re-run
     protocol as the single-host chain (per-shard capacities doubled
-    globally, same replicated RNG keys).
+    globally, same replicated RNG keys). ``sample(..., collectors=...)``
+    works unchanged: collector carries live outside the shard_map on the
+    replicated (θ, psum'd StepStats) outputs, so streamed diagnostics need
+    no extra collectives and re-run bitwise on capacity growth.
     """
     from repro.api import SamplingAlgorithm
 

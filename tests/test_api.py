@@ -344,6 +344,71 @@ def test_resume_continues_key_stream_not_replays_it(model):
     np.testing.assert_array_equal(np.asarray(seg2.theta[0]), np.stack(thetas))
 
 
+def test_multi_chain_resume_split_equals_contiguous(model):
+    """init_state with a leading (num_chains,) axis: two resumed 20-step
+    segments must be bitwise one contiguous 40-step run, per chain (the
+    vmap'd step already supported it; the driver now accepts the state and
+    offsets every chain's fold-in counter by the shared iteration)."""
+    alg = api.firefly(
+        model, kernel="rwmh", capacity=128, cand_capacity=128, q_db=0.1,
+        step_size=0.1,
+    )
+    key = jax.random.key(31)
+    init_keys = jax.random.split(jax.random.key(30), 2)
+    pos = jnp.broadcast_to(
+        alg.default_position, (2,) + alg.default_position.shape
+    )
+    state0 = jax.jit(jax.vmap(alg.init))(init_keys, pos)
+
+    contiguous = api.sample(
+        alg, key, 40, num_chains=2, init_state=state0, chunk_size=16
+    )
+    seg1 = api.sample(
+        alg, key, 20, num_chains=2, init_state=state0, chunk_size=16
+    )
+    seg2 = api.sample(
+        alg, key, 20, num_chains=2, init_state=seg1.final_state, chunk_size=16
+    )
+    np.testing.assert_array_equal(
+        np.concatenate([np.asarray(seg1.theta), np.asarray(seg2.theta)], 1),
+        np.asarray(contiguous.theta),
+    )
+
+
+def test_multi_chain_resume_from_final_state(model):
+    """A previous multi-chain run's final_state resumes directly."""
+    alg = api.firefly(
+        model, kernel="rwmh", capacity=128, cand_capacity=128, q_db=0.1,
+        step_size=0.1,
+    )
+    t1 = api.sample(alg, jax.random.key(32), 30, num_chains=3, chunk_size=15)
+    t2 = api.sample(
+        alg, jax.random.key(33), 20, num_chains=3, init_state=t1.final_state
+    )
+    assert t2.theta.shape == (3, 20, D)
+    np.testing.assert_array_equal(  # continues where t1 ended
+        np.asarray(t1.final_state.iteration), np.full(3, 30)
+    )
+
+
+def test_multi_chain_resume_rejects_bad_states(model):
+    alg = api.firefly(
+        model, kernel="rwmh", capacity=128, cand_capacity=128, q_db=0.1,
+        step_size=0.1,
+    )
+    single = jax.jit(alg.init)(jax.random.key(34), alg.default_position)
+    with pytest.raises(ValueError, match="leading"):
+        api.sample(
+            alg, jax.random.key(0), 10, num_chains=2, init_state=single
+        )
+    two = api.sample(alg, jax.random.key(35), 10, num_chains=2).final_state
+    with pytest.raises(ValueError, match="leading"):
+        api.sample(alg, jax.random.key(0), 10, num_chains=3, init_state=two)
+    skewed = two._replace(iteration=jnp.asarray([10, 7], jnp.int32))
+    with pytest.raises(ValueError, match="different iterations"):
+        api.sample(alg, jax.random.key(0), 10, num_chains=2, init_state=skewed)
+
+
 def test_resume_offset_also_fixes_legacy_host_loop(model):
     """run_chain's collect= host-loop fallback shares the resume contract."""
     from repro.core import flymc

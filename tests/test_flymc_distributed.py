@@ -110,6 +110,47 @@ def test_distributed_fused_z_engine_runs_shard_local(mesh, problem):
     assert nb.min() != nb.max()
 
 
+def test_distributed_collectors_match_offline(mesh, problem):
+    """Streaming collectors under shard_map: carries are replicated (θ and
+    the psum'd StepStats come out of the sharded step replicated), so the
+    streamed moments / R̂ / query totals must equal the offline values from
+    the dense trace of the same sharded chain — including across a
+    capacity-growth re-run (tiny per-shard capacity)."""
+    from repro import api
+    from repro.core import diagnostics
+    from repro.distributed.flymc_dist import dist_algorithm, shard_data
+
+    tuned, _, _ = problem
+    data = shard_data(tuned.data, mesh)
+    alg = dist_algorithm(
+        tuned.bound, tuned.log_prior, mesh, data,
+        capacity=8, cand_capacity=8, q_db=0.1,
+    )
+    trace = api.sample(
+        alg, jax.random.key(21), 60, chunk_size=16,
+        collectors={
+            "moments": api.OnlineMoments(),
+            "rhat": api.RHat(),
+            "queries": api.QueryBudget(),
+            "trace": api.FullTrace(),
+        },
+    )
+    assert trace.algorithm.spec.capacity > 8  # growth really happened
+    off = np.asarray(trace.results["trace"]["theta"], np.float64)
+    st = trace.results["trace"]["stats"]
+    np.testing.assert_allclose(
+        trace.results["moments"]["mean"], off.mean(1), atol=1e-4
+    )
+    np.testing.assert_allclose(
+        trace.results["rhat"]["r_hat"], diagnostics.split_r_hat(off),
+        rtol=1e-4,
+    )
+    assert trace.results["queries"] == int(
+        np.asarray(jax.device_get(st.lik_queries), np.int64).sum()
+    )
+    assert trace.total_queries == trace.results["queries"]
+
+
 def test_distributed_counts_and_overflow(mesh, problem):
     tuned, _, _ = problem
     # tiny per-shard capacity forces global growth; chain must still run
