@@ -42,12 +42,20 @@ def merge_write(update: dict, path: Path = BENCH_PATH) -> dict:
     return merged
 
 
-def quickstart_problem(n: int, d: int = 21, map_steps: int = 300):
+def quickstart_problem(
+    n: int, d: int = 21, map_steps: int = 300, num_chains: int | None = None
+):
     """The MAP-tuned quickstart logistic model both backend benchmarks time.
 
     One definition (same seeds, same tuning) so the ``bright_glm_backend``
     and ``z_update_backend`` records in BENCH_flymc.json are measured on the
     identical problem and cannot silently diverge.
+
+    With ``num_chains`` set, also returns deterministic per-chain start
+    positions — small MAP-centered jitter with a fixed seed, shaped
+    ``(num_chains, d)`` — so every multi-chain benchmark shares one problem
+    builder instead of hand-stacking initial states. Returns ``tuned`` when
+    ``num_chains is None`` (back-compat), else ``(tuned, positions)``.
     """
     from repro.data import logistic_data
     from repro.models.bayes_glm import GLMModel
@@ -55,4 +63,12 @@ def quickstart_problem(n: int, d: int = 21, map_steps: int = 300):
     data = logistic_data(jax.random.key(0), n=n, d=d, separation=2.0)
     model = GLMModel.logistic(data, prior_scale=1.0, xi=1.5)
     theta_map = model.map_estimate(jax.random.key(1), steps=map_steps)
-    return model.map_tuned(theta_map)
+    tuned = model.map_tuned(theta_map)
+    if num_chains is None:
+        return tuned
+    import jax.numpy as jnp
+
+    positions = theta_map[None, :] + 0.02 * jax.random.normal(
+        jax.random.key(2), (num_chains, d), dtype=jnp.asarray(theta_map).dtype
+    )
+    return tuned, positions

@@ -80,6 +80,20 @@ def main() -> None:
         f"interpret={zrec['fused']['interpret']}"
     )
 
+    # --- chain scaling: vmap vs chain-batched megakernels ------------------
+    from benchmarks.chain_scaling import main as bench_chains
+
+    srec = bench_chains(quick=args.quick)
+    top = str(max(int(k) for k in srec["batched"]))
+    rows.append(
+        f"chain_scaling/batched{top},"
+        f"{srec['batched'][top]['us_per_step']:.1f},"
+        f"vmap_us={srec['vmap'][top]['us_per_step']:.1f};"
+        f"marginal_us={srec['batched'][top]['marginal_us_per_chain']:.1f};"
+        f"sublinear={srec['batched'][top]['sublinear']};"
+        f"interpret={srec['interpret']}"
+    )
+
     # --- streaming collectors vs dense FullTrace ---------------------------
     from benchmarks.collectors import main as bench_collectors
 

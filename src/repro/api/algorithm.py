@@ -31,6 +31,17 @@ class SamplingAlgorithm:
     init(key, position) -> State
     step(key, state)    -> (State, StepStats)
 
+    ``step_chains``/``init_chains`` are the optional chain-batched
+    counterparts — ``step_chains(keys (K,), state (K, ...))`` advances all
+    K chains in one application. The driver dispatches them directly when
+    ``num_chains > 1``; when None it batches the per-chain functions
+    itself, which is already optimal for single-device algorithms — the
+    Pallas kernels coalesce the chain axis into one leading-grid-dimension
+    launch under batching regardless (``custom_vmap`` rules in
+    ``kernels/*/ops``). Provide them only when batching must be something
+    other than vmap: :func:`repro.distributed.flymc_dist.chain_fleet`
+    supplies a pair that shard_maps the chain axis across devices.
+
     ``grow``/``resize``/``init_overflow`` exist only for algorithms with
     bounded on-device buffers (FlyMC's bright capacity): ``grow()`` returns
     the same algorithm with doubled capacities, ``resize(state)`` re-shapes a
@@ -47,11 +58,31 @@ class SamplingAlgorithm:
     position: Callable[[Any], jax.Array] | None = None
     default_position: Any = None
     spec: Any = None  # engine config (e.g. FlyMCSpec), for introspection
+    step_chains: Callable[[jax.Array, Any], tuple[Any, StepStats]] | None = None
+    init_chains: Callable[[jax.Array, Any], Any] | None = None
 
     def position_of(self, state) -> jax.Array:
         if self.position is not None:
             return self.position(state)
         return state.sampler.theta
+
+    def batched_step(self):
+        """The chain-batched step: (keys (K,), state (K, ...)) -> same.
+
+        ``step_chains`` when provided, else ``step`` batched over the
+        chain axis — the ONE encoding of this fallback (driver and fleet
+        wrappers both call it), under which the Pallas kernels coalesce
+        into a single chain-grid launch via their custom_vmap rules.
+        """
+        if self.step_chains is not None:
+            return self.step_chains
+        return jax.vmap(self.step)
+
+    def batched_init(self):
+        """Chain-batched init: ``init_chains`` or ``init`` batched."""
+        if self.init_chains is not None:
+            return self.init_chains
+        return jax.vmap(self.init)
 
     def output_structs(self, state):
         """Shape/dtype structs of one chain's per-step outputs, no compute.

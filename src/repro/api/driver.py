@@ -1,7 +1,15 @@
 """Device-resident multi-chain sampling driver.
 
-The chain lives on device end to end: each chunk of ``chunk_size``
-iterations is one jitted ``lax.scan`` (``vmap``'d over chains), and the only
+The chain lives on device end to end, and the chain axis is carried
+NATIVELY: a multi-chain run is one chunked ``lax.scan`` whose carry is the
+chain-stacked state and whose body applies a chain-batched step — not a
+``vmap`` of per-chain scans. Batching the step batches its kernels: the
+Pallas kernels coalesce the chain axis into a leading kernel-grid
+dimension (one launch for all chains — ``custom_vmap`` rules in
+``kernels/*/ops``). Algorithms that provide ``step_chains`` (e.g. the
+distributed chain fleet, which shard_maps the chain axis) are dispatched
+directly; for the rest the driver batches ``alg.step`` itself.
+Each chunk of ``chunk_size`` iterations is one jitted scan, and the only
 host synchronization is a single overflow-flag read per chunk. Output is
 produced by :mod:`repro.api.collectors` — pure ``(init, update, finalize)``
 reductions whose carries thread through the scan, so memory is
@@ -34,15 +42,21 @@ import numpy as np
 from repro.api import collectors as collectors_lib
 from repro.api.algorithm import SamplingAlgorithm
 from repro.core.flymc import StepStats
+from repro.kernels import common as kernels_common
 
 
-# jit cache keyed on the algorithm's stable function identities (plus the
-# collector set): repeated sample() calls on the same algorithm (or the same
-# grown capacity) reuse compiled chunk/init executables instead of re-tracing
-# fresh closures. Collectors hash by identity, so reusing collector instances
-# across calls is what makes the cache hit. LRU-bounded: entries keep the
-# algorithm's closed-over data arrays alive, so stale algorithms must age out
-# (and hot ones must not be mass-evicted).
+# jit cache for the driver's chunk functions, keyed on the algorithm's
+# stable function identities plus ``(num_chains, chunk_size, capacity)``
+# (and the collector set / chain-batching flag where they shape the trace):
+# repeated sample() calls on the same algorithm reuse compiled chunk/init
+# executables, and a capacity-doubling overflow re-run re-traces ONLY the
+# chain scan at the grown capacity — the committed-chunk fold is keyed
+# capacity-independently (chunk outputs are O(cs) θ/stats, no buffer-shaped
+# operands), so an overflow retry never recompiles it. Collectors hash by
+# identity, so reusing collector instances across calls is what makes the
+# cache hit. LRU-bounded: entries keep the algorithm's closed-over data
+# arrays alive, so stale algorithms must age out (and hot ones must not be
+# mass-evicted).
 _JIT_CACHE: OrderedDict = OrderedDict()
 _JIT_CACHE_MAX = 64
 
@@ -115,28 +129,38 @@ def _broadcast_positions(position, num_chains: int, reference):
     )
 
 
-def _make_scan_fn(alg: SamplingAlgorithm, multi: bool, cs: int):
-    """One jitted chunk of the chain: cs steps of alg.step, vmap'd over
-    chains when multi. Emits the per-step (θ, StepStats) as chunk-local
-    O(cs) scan outputs plus (final_state, any_overflow)."""
+def _identity(state):
+    return state
 
-    def scan_chain(state, chain_key, start):
-        def body(carry, i):
-            new_state, info = alg.step(
-                jax.random.fold_in(chain_key, i), carry
-            )
-            return new_state, (alg.position_of(new_state), info)
 
-        iters = start + jnp.arange(cs, dtype=jnp.int32)
-        return jax.lax.scan(body, state, iters)
+def _capacity_of(alg: SamplingAlgorithm):
+    spec = alg.spec
+    return (getattr(spec, "capacity", None), getattr(spec, "cand_capacity", None))
+
+
+def _make_scan_fn(alg: SamplingAlgorithm, num_chains: int, cs: int):
+    """One jitted chunk of the chain: cs steps, carrying the chain-stacked
+    state natively when num_chains > 1 (one scan whose body is the
+    chain-batched step — no per-chain scans). Emits the per-step
+    (θ, StepStats) as chunk-local O(cs) scan outputs (time axis leading,
+    chain axis second) plus (final_state, any_overflow)."""
+    multi = num_chains > 1
+    if multi:
+        step = alg.batched_step()
+        fold_keys = jax.vmap(jax.random.fold_in, in_axes=(0, None))
+        position = jax.vmap(alg.position_of)
+    else:
+        step, fold_keys, position = (
+            alg.step, jax.random.fold_in, alg.position_of
+        )
 
     def chunk(state, keys, start):
-        if multi:
-            final, (pos, infos) = jax.vmap(
-                scan_chain, in_axes=(0, 0, None)
-            )(state, keys, start)
-        else:
-            final, (pos, infos) = scan_chain(state, keys, start)
+        def body(carry, i):
+            new_state, info = step(fold_keys(keys, i), carry)
+            return new_state, (position(new_state), info)
+
+        iters = start + jnp.arange(cs, dtype=jnp.int32)
+        final, (pos, infos) = jax.lax.scan(body, state, iters)
         return final, pos, infos, jnp.any(infos.overflow)
 
     return jax.jit(chunk)
@@ -144,29 +168,33 @@ def _make_scan_fn(alg: SamplingAlgorithm, multi: bool, cs: int):
 
 def _make_fold_fn(colls: dict, multi: bool):
     """Fold one COMMITTED chunk's (θ, StepStats) outputs into the collector
-    carries, in step order (vmap'd over chains when multi).
+    carries, in step order. The chunk outputs arrive time-major
+    ((cs, K, ...) for multi); the fold is one scan over the time axis whose
+    body batches each collector's per-chain ``update`` over the chain axis,
+    so the carries keep their leading (K, ...) layout.
 
     A separate jit from the chain scan for two reasons: (a) it runs only
     after the chunk's overflow check passes, so an overflowed chunk never
-    touches collector state and capacity re-runs need no carry rollback;
-    (b) the carry argument is donated (where the backend supports input-
-    output aliasing), so a trace-type collector's O(num_samples) buffer is
-    updated in place instead of being copied at every chunk boundary.
+    touches collector state and capacity re-runs need no carry rollback —
+    and its cache key is capacity-independent, so a capacity-doubling
+    re-run never recompiles it; (b) the carry argument is donated (where
+    the backend supports input-output aliasing), so a trace-type
+    collector's O(num_samples) buffer is updated in place instead of being
+    copied at every chunk boundary.
     """
     names = tuple(colls)
+    updates = {
+        n: (jax.vmap(colls[n].update) if multi else colls[n].update)
+        for n in names
+    }
 
-    def fold_chain(carries, pos, infos):
+    def fold(carries, pos, infos):
         def body(cars, x):
             p, inf = x
-            return {n: colls[n].update(cars[n], p, inf) for n in names}, None
+            return {n: updates[n](cars[n], p, inf) for n in names}, None
 
         cars, _ = jax.lax.scan(body, carries, (pos, infos))
         return cars
-
-    def fold(carries, pos, infos):
-        if multi:
-            return jax.vmap(fold_chain)(carries, pos, infos)
-        return fold_chain(carries, pos, infos)
 
     donate = (0,) if jax.default_backend() != "cpu" else ()
     return jax.jit(fold, donate_argnums=donate)
@@ -195,10 +223,18 @@ def sample(
     the prefix's key continues its exact stream (split == contiguous,
     bitwise) instead of replaying it.
 
+    ``num_chains > 1`` runs the chains inside ONE chunked scan over
+    chain-stacked state: the step is the algorithm's ``step_chains`` when it
+    has one (the distributed fleet's shard_maps the chain axis), else
+    ``alg.step`` batched here — each Pallas kernel then dispatches as a
+    single launch with a leading chain grid dimension. Either way the
+    realized trajectories are bitwise those of per-chain execution with
+    keys ``split(key, num_chains)``.
+
     ``collectors`` maps names to :mod:`repro.api.collectors` instances; their
-    ``update`` runs inside the jitted chunk scans (vmap'd over chains) and
-    their finalized results land on ``Trace.results``. Without it, the
-    default :class:`~repro.api.collectors.FullTrace` reproduces the dense
+    ``update`` runs inside the jitted chunk scans (batched over the chain
+    axis) and their finalized results land on ``Trace.results``. Without it,
+    the default :class:`~repro.api.collectors.FullTrace` reproduces the dense
     ``Trace.theta``/``Trace.stats`` bitwise; with it, nothing O(num_samples)
     is materialized unless a trace collector asks for it. ``thin`` keeps
     every thin-th θ sample on the default path (the last of each window;
@@ -262,9 +298,9 @@ def sample(
                 "no init_position given and the algorithm has no default"
             )
         def init_fn(alg):
+            build = lambda: jax.jit(alg.batched_init() if multi else alg.init)
             return _cached(
-                ("init", alg.init, multi),
-                lambda: jax.jit(jax.vmap(alg.init) if multi else alg.init),
+                ("init", alg.init, alg.init_chains, multi), build
             )
 
         if multi:
@@ -314,11 +350,19 @@ def sample(
         )
 
     def scan_fn_for(alg, cs):
+        # Keyed on (num_chains, chunk_size, capacity) plus the step/dispatch
+        # identities: an overflow re-run at a grown capacity traces its own
+        # entry, and a later sample() call that reaches the same capacity
+        # (memoized alg.grow() → same step identity) reuses it.
         return _cached(
-            ("scan", alg.step, alg.position, multi, cs),
-            lambda: _make_scan_fn(alg, multi, cs),
+            ("scan", alg.step, alg.step_chains, alg.position, num_chains,
+             cs, _capacity_of(alg), kernels_common.chain_batching_enabled()),
+            lambda: _make_scan_fn(alg, num_chains, cs),
         )
 
+    # Capacity-independent on purpose: chunk outputs are (cs, K) θ/stats
+    # with no buffer-shaped operand, so one fold serves every capacity and
+    # an overflow retry never recompiles it.
     fold_fn = _cached(
         ("fold", tuple(colls.items()), multi),
         lambda: _make_fold_fn(colls, multi),
@@ -334,7 +378,7 @@ def sample(
         )
         while bool(jax.device_get(overflow)):  # the chunk's one host sync
             alg = _grown(alg)
-            resize = alg.resize if alg.resize is not None else (lambda s: s)
+            resize = alg.resize if alg.resize is not None else _identity
             prev = _cached(
                 ("resize", resize, multi),
                 lambda: jax.jit(jax.vmap(resize) if multi else resize),

@@ -199,6 +199,60 @@ def dist_algorithm(bound, log_prior, mesh, data: GLMData, **spec_kw):
     )
 
 
+def chain_fleet(alg, mesh):
+    """Shard a SamplingAlgorithm's CHAIN axis across a mesh of devices.
+
+    The complement of :func:`dist_algorithm`: instead of sharding the *data*
+    rows of one chain, shard the *chains* of a fleet — each device owns
+    ``num_chains / n_devices`` whole chains (data replicated) and advances
+    them with the algorithm's chain-batched step (:func:`repro.api.firefly`'s
+    dispatches its Pallas kernels as one chain-grid launch per device).
+    Chains are independent, so the step needs ZERO cross-chain collectives —
+    shard_map here is pure placement, and throughput scales with devices at
+    the same marginal cost per chain as single-device batching.
+
+    The returned algorithm plugs into ``repro.api.sample(num_chains=K)``
+    unchanged (K must be divisible by the mesh size; shard_map enforces it).
+    Capacity growth composes: ``grow()`` re-wraps the grown inner algorithm
+    on the same mesh, memoized so the driver's jit cache keys stay stable.
+    Use this for fleets of independent chains on replicated data; use
+    :func:`dist_algorithm` when one chain's DATA does not fit a device (the
+    two compose only as alternatives today, not nested).
+    """
+    from repro.api import SamplingAlgorithm
+
+    axes = tuple(mesh.axis_names)
+    row = PS(axes)  # leading-axis (chain) sharding, as a pytree prefix
+    step_chains = jax.shard_map(
+        alg.batched_step(), mesh=mesh, in_specs=(row, row),
+        out_specs=(row, row), check_vma=False,
+    )
+    init_chains = jax.shard_map(
+        alg.batched_init(), mesh=mesh, in_specs=(row, row), out_specs=row,
+        check_vma=False,
+    )
+
+    grown = []  # memoized so the driver's jit cache sees a stable identity
+
+    def grow():
+        if not grown:
+            grown.append(chain_fleet(alg.grow(), mesh))
+        return grown[0]
+
+    return SamplingAlgorithm(
+        init=alg.init,
+        step=alg.step,
+        step_chains=step_chains,
+        init_chains=init_chains,
+        grow=grow if alg.grow is not None else None,
+        resize=alg.resize,
+        init_overflow=alg.init_overflow,
+        position=alg.position,
+        default_position=alg.default_position,
+        spec=alg.spec,
+    )
+
+
 def run_dist_chain(
     bound, log_prior, mesh, data: GLMData, theta0, key, num_iters: int,
     **spec_kw,

@@ -11,8 +11,17 @@ serializing one (1, Dp) pipeline slot per row — and then fuses:
     →  Σ masked log(expm1 δ)  (the Alg.-1 line-19 factor, reduced in-kernel)
 
 Outputs: per-row δ (reused as the z-kernel's cache, Alg. 2) and a single
-(1, 1) running total accumulated across the sequential TPU grid — the O(C)
-reduction never leaves the kernel.
+running total per chain accumulated across the sequential TPU grid — the
+O(C) reduction never leaves the kernel.
+
+Chain batching: the grid's LEADING dimension is ``num_chains``. One launch
+walks ``(chain, tile)`` in row-major order, so each chain's ≤capacity
+workload — far too small to fill the VPU/MXU on its own — coalesces into
+one long pipeline over the shared HBM-resident dataset. All per-chain
+operands (bright indices, bright counts, θ) index by ``program_id(0)``;
+the feature matrix is the one operand every chain shares.
+:func:`bright_glm_pallas` is the single-chain entry point — literally the
+``num_chains == 1`` case of :func:`bright_glm_pallas_chains`.
 
 Families: logistic (Jaakkola–Jordan), student_t (tangent bound), softmax
 (Böhning, matrix θ). All δ formulas come from :mod:`repro.core.numerics` —
@@ -23,7 +32,8 @@ Layout: θ (and K for softmax) padded to a multiple of 128 lanes; the
 feature matrix itself stays UNPADDED in HBM — rows are DMA'd into the
 first D lanes of a zero-initialized padded VMEM tile, so HBM never holds
 a lane-padded copy of the dataset. BR rows (8-multiple sublanes) per grid
-step. VMEM per step: BR·Dp·4 for the row tile plus the θ block.
+step. VMEM per step: BR·Dp·4 for the row tile plus the θ block —
+independent of ``num_chains``.
 
 The O(C) per-row operands (t, ξ) are pre-gathered by the ops wrapper —
 they are 4–Kp·4 bytes/row next to the Dp·4 bytes/row feature gather that
@@ -47,6 +57,130 @@ from repro.core.numerics import (
 FAMILIES = ("logistic", "student_t", "softmax")
 
 
+def bright_glm_pallas_chains(
+    x: jax.Array,  # (N, D) — unpadded, SHARED by all chains; stays in HBM
+    t: jax.Array,  # (K, C, 1) f32 labels, or int32 class ids (softmax)
+    xi: jax.Array,  # (K, C, 1) f32, or (K, C, Kp) tangency logits (softmax)
+    idx: jax.Array,  # (K, C) int32 bright row ids, clamped to [0, N); C % BR == 0
+    n_bright: jax.Array,  # (K, 1) int32 per-chain bright counts
+    theta: jax.Array,  # (K, 1, Dp), or (K, Kp, Dp) zero-padded (softmax)
+    family: str = "logistic",
+    nu: float = 4.0,
+    sigma: float = 1.0,
+    n_classes: int = 0,
+    block_rows: int = 8,
+    interpret: bool = False,
+):
+    """Returns (delta (K, C, 1) f32, total (K, 1, 1) f32).
+
+    ``x`` is deliberately NOT lane-padded and NOT chain-broadcast: each DMA
+    copies the raw (D,) row into the first D lanes of a zero-initialized
+    (BR, Dp) VMEM scratch tile, so the dataset is never duplicated — not at
+    (N, Dp) for the lanes, and not at (K, N, D) for the chains (which is
+    exactly what jax's default pallas batching rule would materialize).
+    The scratch's padding lanes are zeroed once (the very first grid step)
+    and never written again, and θ's padding lanes are zero, so the Dp-wide
+    dot product is exact for every chain.
+    """
+    if family not in FAMILIES:
+        raise ValueError(f"unknown family {family!r}; expected {FAMILIES}")
+    k_chains, c = idx.shape
+    d = x.shape[1]
+    dp = theta.shape[2]
+    kt = theta.shape[1]
+    assert dp % 128 == 0 and dp >= d, (dp, d)
+    assert c % block_rows == 0, (c, block_rows)
+    br = block_rows
+
+    def kernel(idx_ref, nb_ref, x_hbm, t_ref, xi_ref, theta_ref,
+               delta_ref, total_ref, rows, sems):
+        ch = pl.program_id(0)
+        i = pl.program_id(1)
+        base = i * br
+
+        @pl.when((ch == 0) & (i == 0))
+        def _zero_padding_lanes():
+            rows[...] = jnp.zeros_like(rows)
+
+        def row_dma(r):
+            return pltpu.make_async_copy(
+                x_hbm.at[idx_ref[ch, base + r]], rows.at[r, pl.ds(0, d)],
+                sems.at[r],
+            )
+
+        for r in range(br):
+            row_dma(r).start()
+        for r in range(br):
+            row_dma(r).wait()
+
+        tile = rows[...]  # (BR, Dp)
+        theta_v = theta_ref[0]  # (kt, Dp) — this chain's θ block
+        if family == "softmax":
+            eta = jax.lax.dot_general(
+                tile, theta_v, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )  # (BR, Kp)
+            t_v = t_ref[0]  # (BR, 1) int32
+            col = jax.lax.broadcasted_iota(jnp.int32, eta.shape, 1)
+            onehot = (col == t_v).astype(eta.dtype)
+            delta = softmax_delta_padded(eta, xi_ref[0], onehot, n_classes)
+            delta = delta[:, None]
+        else:
+            s = jax.lax.dot_general(
+                tile, theta_v, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )  # (BR, 1)
+            t_v = t_ref[0]
+            xi_v = xi_ref[0]
+            if family == "logistic":
+                delta = logistic_delta(t_v * s, xi_v)
+            else:
+                delta = student_t_delta(t_v - s, xi_v, nu, sigma)
+
+        row_id = base + jax.lax.broadcasted_iota(jnp.int32, (br, 1), 0)
+        mask = row_id < nb_ref[ch, 0]
+        delta_ref[0] = delta
+        part = jnp.sum(jnp.where(mask, log_expm1(delta), 0.0))
+
+        # TPU grid steps run sequentially in row-major (chain, tile) order,
+        # so each chain's (1, 1) total block — mapped to the same slot for
+        # every tile of that chain — is a race-free accumulator.
+        @pl.when(i == 0)
+        def _init():
+            total_ref[0, 0, 0] = 0.0
+
+        total_ref[0, 0, 0] += part
+
+    kp = xi.shape[2] if family == "softmax" else 1
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # idx, n_bright
+        grid=(k_chains, c // br),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),  # x: gathered by DMA
+            pl.BlockSpec((1, br, 1), lambda ch, i, *_: (ch, i, 0)),  # t
+            pl.BlockSpec((1, br, kp), lambda ch, i, *_: (ch, i, 0)),  # xi
+            pl.BlockSpec((1, kt, dp), lambda ch, i, *_: (ch, 0, 0)),  # theta
+        ],
+        out_specs=[
+            pl.BlockSpec((1, br, 1), lambda ch, i, *_: (ch, i, 0)),
+            pl.BlockSpec((1, 1, 1), lambda ch, i, *_: (ch, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((br, dp), jnp.float32),
+            pltpu.SemaphoreType.DMA((br,)),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=(
+            jax.ShapeDtypeStruct((k_chains, c, 1), jnp.float32),
+            jax.ShapeDtypeStruct((k_chains, 1, 1), jnp.float32),
+        ),
+        interpret=interpret,
+    )(idx, n_bright, x, t, xi, theta)
+
+
 def bright_glm_pallas(
     x: jax.Array,  # (N, D) — unpadded; stays in HBM, rows DMA'd on demand
     t: jax.Array,  # (C, 1) f32 labels/responses, or int32 class ids (softmax)
@@ -61,106 +195,11 @@ def bright_glm_pallas(
     block_rows: int = 8,
     interpret: bool = False,
 ):
-    """Returns (delta (C, 1) f32, total (1, 1) f32).
-
-    ``x`` is deliberately NOT lane-padded: each DMA copies the raw (D,) row
-    into the first D lanes of a zero-initialized (BR, Dp) VMEM scratch tile,
-    so the dataset is never duplicated at (N, Dp) in HBM and per-row DMA
-    traffic is D·4 bytes, not Dp·4. The scratch's padding lanes are zeroed
-    once (grid step 0) and never written again, and θ's padding lanes are
-    zero, so the Dp-wide dot product is exact.
-    """
-    if family not in FAMILIES:
-        raise ValueError(f"unknown family {family!r}; expected {FAMILIES}")
-    c = idx.shape[0]
-    d = x.shape[1]
-    dp = theta.shape[1]
-    assert dp % 128 == 0 and dp >= d, (dp, d)
-    assert c % block_rows == 0, (c, block_rows)
-    br = block_rows
-
-    def kernel(idx_ref, nb_ref, x_hbm, t_ref, xi_ref, theta_ref,
-               delta_ref, total_ref, rows, sems):
-        i = pl.program_id(0)
-        base = i * br
-
-        @pl.when(i == 0)
-        def _zero_padding_lanes():
-            rows[...] = jnp.zeros_like(rows)
-
-        def row_dma(r):
-            return pltpu.make_async_copy(
-                x_hbm.at[idx_ref[base + r]], rows.at[r, pl.ds(0, d)],
-                sems.at[r],
-            )
-
-        for r in range(br):
-            row_dma(r).start()
-        for r in range(br):
-            row_dma(r).wait()
-
-        tile = rows[...]  # (BR, Dp)
-        theta_v = theta_ref[...]
-        if family == "softmax":
-            eta = jax.lax.dot_general(
-                tile, theta_v, (((1,), (1,)), ((), ())),
-                preferred_element_type=jnp.float32,
-            )  # (BR, Kp)
-            t_v = t_ref[...]  # (BR, 1) int32
-            col = jax.lax.broadcasted_iota(jnp.int32, eta.shape, 1)
-            onehot = (col == t_v).astype(eta.dtype)
-            delta = softmax_delta_padded(eta, xi_ref[...], onehot, n_classes)
-            delta = delta[:, None]
-        else:
-            s = jax.lax.dot_general(
-                tile, theta_v, (((1,), (1,)), ((), ())),
-                preferred_element_type=jnp.float32,
-            )  # (BR, 1)
-            t_v = t_ref[...]
-            xi_v = xi_ref[...]
-            if family == "logistic":
-                delta = logistic_delta(t_v * s, xi_v)
-            else:
-                delta = student_t_delta(t_v - s, xi_v, nu, sigma)
-
-        row_id = base + jax.lax.broadcasted_iota(jnp.int32, (br, 1), 0)
-        mask = row_id < nb_ref[0]
-        delta_ref[...] = delta
-        part = jnp.sum(jnp.where(mask, log_expm1(delta), 0.0))
-
-        # TPU grid steps run sequentially, so a (1, 1) block mapped to the
-        # same slot every step is a race-free accumulator.
-        @pl.when(i == 0)
-        def _init():
-            total_ref[0, 0] = 0.0
-
-        total_ref[0, 0] += part
-
-    kp = xi.shape[1] if family == "softmax" else 1
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,  # idx, n_bright
-        grid=(c // br,),
-        in_specs=[
-            pl.BlockSpec(memory_space=pltpu.ANY),  # x: gathered by DMA
-            pl.BlockSpec((br, 1), lambda i, *_: (i, 0)),  # t
-            pl.BlockSpec((br, kp), lambda i, *_: (i, 0)),  # xi
-            pl.BlockSpec(theta.shape, lambda i, *_: (0, 0)),  # theta
-        ],
-        out_specs=[
-            pl.BlockSpec((br, 1), lambda i, *_: (i, 0)),
-            pl.BlockSpec((1, 1), lambda i, *_: (0, 0)),
-        ],
-        scratch_shapes=[
-            pltpu.VMEM((br, dp), jnp.float32),
-            pltpu.SemaphoreType.DMA((br,)),
-        ],
+    """Single-chain entry point: the ``num_chains == 1`` case of
+    :func:`bright_glm_pallas_chains`. Returns (delta (C, 1), total (1, 1))."""
+    delta, total = bright_glm_pallas_chains(
+        x, t[None], xi[None], idx[None], n_bright[None], theta[None],
+        family=family, nu=nu, sigma=sigma, n_classes=n_classes,
+        block_rows=block_rows, interpret=interpret,
     )
-    return pl.pallas_call(
-        kernel,
-        grid_spec=grid_spec,
-        out_shape=(
-            jax.ShapeDtypeStruct((c, 1), jnp.float32),
-            jax.ShapeDtypeStruct((1, 1), jnp.float32),
-        ),
-        interpret=interpret,
-    )(idx, n_bright, x, t, xi, theta)
+    return delta[0], total[0]

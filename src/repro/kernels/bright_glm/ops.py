@@ -14,6 +14,13 @@ This is the ``backend="pallas"`` entry point used by
     by ``n_bright`` exactly like the jnp reference path,
   * pre-gathers the O(C) per-row scalars (t, ξ) so the kernel only fuses
     the O(C·D) feature gather,
+  * carries a ``jax.custom_batching.custom_vmap`` rule on the pallas
+    dispatch: batching over the chain axis (the driver's multi-chain step)
+    lowers to ONE :func:`~repro.kernels.bright_glm.kernel
+    .bright_glm_pallas_chains` launch whose grid gains a leading chain
+    dimension — instead of jax's default pallas batching, which would
+    broadcast the HBM-resident dataset per chain and run each chain's tiny
+    workload as a degenerate launch (see :mod:`repro.kernels.common`),
   * defines a ``jax.custom_vjp`` so gradient kernels (MALA/HMC) work
     through the fused forward: the backward pass re-evaluates the gathered
     rows with the pure-jnp reference (same O(C·D) cost class, shared
@@ -23,36 +30,57 @@ This is the ``backend="pallas"`` entry point used by
 
 from __future__ import annotations
 
-from functools import partial
+from functools import lru_cache, partial
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.bright_glm.kernel import FAMILIES, bright_glm_pallas
+from repro.kernels import common
+from repro.kernels.bright_glm.kernel import (
+    FAMILIES,
+    bright_glm_pallas,
+    bright_glm_pallas_chains,
+)
 from repro.kernels.bright_glm.ref import bright_glm_ref
 
+# Back-compat aliases: these lived here before kernels/common.py existed
+# (z_update/ops.py used to import them cross-package).
+_pad_to = common.pad_to
+default_interpret = common.default_interpret
 
-def _pad_to(d: int, mult: int) -> int:
-    return ((d + mult - 1) // mult) * mult
 
+@lru_cache(maxsize=None)
+def _pallas_dispatch(family, nu, sigma, n_classes, block_rows, interpret):
+    """The pallas_call dispatch as a ``custom_vmap`` function.
 
-def default_interpret() -> bool:
-    """Interpret-mode fallback: compile for real only on TPU backends."""
-    return jax.default_backend() != "tpu"
+    The plain call is the single-chain kernel; the vmap rule
+    (:func:`repro.kernels.common.make_chain_dispatch`) coalesces a
+    chain-batched trace into one ``bright_glm_pallas_chains`` launch with
+    the dataset shared (never broadcast) across chains. Memoized on the
+    static config so repeated traces reuse one custom_vmap object.
+    """
+    kw = dict(family=family, nu=nu, sigma=sigma, n_classes=n_classes,
+              block_rows=block_rows, interpret=interpret)
+
+    def plain(xp, tb, xib, idxp, nb, thetap):
+        return bright_glm_pallas(xp, tb, xib, idxp, nb, thetap, **kw)
+
+    def chains(xp, tb, xib, idxp, nb, thetap):
+        return bright_glm_pallas_chains(xp, tb, xib, idxp, nb, thetap, **kw)
+
+    return common.make_chain_dispatch(plain, chains, n_shared=1)
 
 
 def _forward(cfg, x, t, xi, idx, n_bright, theta):
     family, nu, sigma, block_rows, interpret = cfg
     n, d = x.shape
-    dp = _pad_to(d, 128)
+    dp = common.pad_to(d, 128)
     c = idx.shape[0]
-    cp = _pad_to(max(c, block_rows), block_rows)
+    cp = common.pad_to(max(c, block_rows), block_rows)
 
-    # Satellite fix: indices ≥ N (buffer padding / candidate sentinels) are
-    # undefined for the in-kernel row DMA — clamp, never trust the caller.
-    idxp = jnp.clip(
-        jnp.pad(idx.astype(jnp.int32), (0, cp - c)), 0, n - 1
-    )
+    # Indices ≥ N (buffer padding / candidate sentinels) are undefined for
+    # the in-kernel row DMA — clamp, never trust the caller.
+    idxp = common.clamp_index(jnp.pad(idx.astype(jnp.int32), (0, cp - c)), n)
     # x goes to the kernel UNPADDED (the DMA pads into VMEM): lane-padding
     # here would materialize a Dp/D-times copy of the dataset in HBM on
     # every evaluation.
@@ -61,7 +89,7 @@ def _forward(cfg, x, t, xi, idx, n_bright, theta):
 
     if family == "softmax":
         k = theta.shape[0]
-        kp = _pad_to(k, 128)
+        kp = common.pad_to(k, 128)
         tb = jnp.take(t.astype(jnp.int32), idxp)[:, None]  # (cp, 1)
         xib = jnp.pad(
             jnp.take(xi.astype(jnp.float32), idxp, axis=0),
@@ -77,11 +105,9 @@ def _forward(cfg, x, t, xi, idx, n_bright, theta):
         thetap = jnp.pad(theta.astype(jnp.float32), (0, dp - d))[None, :]
         n_classes = 0
 
-    delta, total = bright_glm_pallas(
-        xp, tb, xib, idxp, nb, thetap,
-        family=family, nu=nu, sigma=sigma, n_classes=n_classes,
-        block_rows=block_rows, interpret=interpret,
-    )
+    call = _pallas_dispatch(family, nu, sigma, n_classes, block_rows,
+                            interpret)
+    delta, total = call(xp, tb, xib, idxp, nb, thetap)
     return delta[:c, 0], total[0, 0]
 
 
@@ -89,7 +115,7 @@ def _ref_outputs(cfg, x, t, xi, idx, n_bright, theta):
     """(delta, total) via the pure-jnp reference — the VJP's forward."""
     family = cfg[0]
     n = x.shape[0]
-    idxc = jnp.clip(idx.astype(jnp.int32), 0, n - 1)
+    idxc = common.clamp_index(idx, n)
     mask = jnp.arange(idx.shape[0]) < n_bright
     delta, contrib = bright_glm_ref(
         x, t, xi, idxc, mask, theta, family=family, nu=cfg[1], sigma=cfg[2]
@@ -143,11 +169,13 @@ def bright_glm(
     """Fused bright-point evaluation. Returns (delta (C,), total scalar).
 
     Differentiable (custom VJP); ``interpret=None`` auto-selects interpret
-    mode off-TPU so the same call sites run everywhere.
+    mode off-TPU so the same call sites run everywhere. Under ``jax.vmap``
+    over the chain axis the pallas dispatch batches into a single
+    chain-grid megakernel (see :mod:`repro.kernels.common`).
     """
     if family not in FAMILIES:
         raise ValueError(f"unknown family {family!r}; expected {FAMILIES}")
     if interpret is None:
-        interpret = default_interpret()
+        interpret = common.default_interpret()
     cfg = (family, float(nu), float(sigma), int(block_rows), bool(interpret))
     return _bright_glm_vjp(cfg, x, t, xi, idx, n_bright, theta)

@@ -27,6 +27,15 @@ with ONE streamed pass over the partition array:
     tile), so extraction loops ``fori_loop``-many times over a masked
     argmin — O(candidates) reductions, not O(block²) scatter matrices.
 
+Chain batching: the grid's LEADING dimension is ``num_chains`` — one
+launch streams every chain's partition array back to back, and the
+counter-RNG keying gains its chain lane through the per-chain
+``(num, key_word0, key_word1)`` rows of the scalar-prefetched ``meta``
+operand: each chain keeps the exact per-chain key words the vmap path
+derived from its own chain key, so trajectories stay bitwise identical to
+per-chain dispatch. :func:`z_candidates_pallas` is the single-chain entry
+point — the ``num_chains == 1`` case of :func:`z_candidates_pallas_chains`.
+
 The kernel emits only the compacted candidate ids + total count; the δ
 evaluation for those candidates is the job of the *existing* FusedBound
 machinery (``kernels/bright_glm``) on the O(cand_capacity) buffer, and the
@@ -47,48 +56,51 @@ _LANES = 128
 _UNIFORM_SHIFT = 8  # int32 >> 8 (logical) = 24-bit uniform lanes
 
 
-def z_candidates_pallas(
-    arr2d: jax.Array,  # (P//128, 128) int32 partition array, padded with n
-    meta: jax.Array,  # (3,) int32: [num, key_word0, key_word1]
+def z_candidates_pallas_chains(
+    arr3d: jax.Array,  # (K, P//128, 128) int32 partition arrays, padded w/ n
+    meta: jax.Array,  # (K, 3) int32 rows: [num, key_word0, key_word1]
     n: int,  # true datum count (ids >= n are padding)
     q_bits: int,  # candidate threshold: bits24 < q_bits ⇔ u < q_db
     cand_cap_padded: int,  # output buffer rows (>= cand_capacity, mult. of 8)
     block_rows: int = 8,
     interpret: bool = False,
 ):
-    """Returns (cand (cand_cap_padded, 1) int32 padded with n, count (1,1)).
+    """Returns (cand (K, cand_cap_padded, 1) int32 padded with n,
+    count (K, 1, 1)).
 
-    Candidates appear in ``arr``-position order (the same order the jnp
-    reference's cumsum compaction produces). Writes past the padded buffer
-    are dropped, and ``count`` keeps the *true* total so the caller can
-    raise the overflow flag that triggers the driver's capacity-doubling
-    re-run.
+    Candidates appear in ``arr``-position order per chain (the same order
+    the jnp reference's cumsum compaction produces). Writes past a chain's
+    padded buffer are dropped, and ``count`` keeps each chain's *true*
+    total so the caller can raise the overflow flag that triggers the
+    driver's capacity-doubling re-run.
     """
-    rows, lanes = arr2d.shape
-    assert lanes == _LANES and rows % block_rows == 0, arr2d.shape
+    k_chains, rows, lanes = arr3d.shape
+    assert lanes == _LANES and rows % block_rows == 0, arr3d.shape
+    assert meta.shape == (k_chains, 3), meta.shape
     br = block_rows
 
     def kernel(meta_ref, arr_ref, cand_ref, count_ref):
-        i = pl.program_id(0)
-        num = meta_ref[0]
+        ch = pl.program_id(0)
+        i = pl.program_id(1)
+        num = meta_ref[ch, 0]
 
         @pl.when(i == 0)
         def _init():
             cand_ref[...] = jnp.full_like(cand_ref, n)
-            count_ref[0, 0] = 0
+            count_ref[0, 0, 0] = 0
 
-        tile = arr_ref[...]  # (br, 128) datum ids
+        tile = arr_ref[0]  # (br, 128) datum ids of this chain
         row = jax.lax.broadcasted_iota(jnp.int32, (br, _LANES), 0)
         col = jax.lax.broadcasted_iota(jnp.int32, (br, _LANES), 1)
-        pos = (i * br + row) * _LANES + col  # position in arr
+        pos = (i * br + row) * _LANES + col  # position in this chain's arr
 
         x0 = jnp.full((br, _LANES), DRAW_CAND, jnp.int32)
-        bits, _ = threefry2x32(meta_ref[1], meta_ref[2], x0, tile)
+        bits, _ = threefry2x32(meta_ref[ch, 1], meta_ref[ch, 2], x0, tile)
         bits24 = jax.lax.shift_right_logical(bits, _UNIFORM_SHIFT)
         cand = (pos >= num) & (pos < n) & (bits24 < q_bits)
 
         cnt_tile = jnp.sum(cand.astype(jnp.int32))
-        base = count_ref[0, 0]
+        base = count_ref[0, 0, 0]
 
         def extract(j, live):
             # j-th candidate of this tile = masked position-argmin sweep.
@@ -98,33 +110,54 @@ def z_candidates_pallas(
 
             @pl.when(slot < cand_cap_padded)
             def _store():
-                cand_ref[slot, 0] = datum
+                cand_ref[0, slot, 0] = datum
 
             return live & (pos != p)
 
         jax.lax.fori_loop(0, cnt_tile, extract, cand)
-        count_ref[0, 0] = base + cnt_tile
+        count_ref[0, 0, 0] = base + cnt_tile
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,  # meta
-        grid=(rows // br,),
-        in_specs=[pl.BlockSpec((br, _LANES), lambda i, *_: (i, 0))],
+        grid=(k_chains, rows // br),
+        in_specs=[pl.BlockSpec((1, br, _LANES), lambda ch, i, *_: (ch, i, 0))],
         out_specs=[
-            pl.BlockSpec((cand_cap_padded, 1), lambda i, *_: (0, 0)),
-            pl.BlockSpec((1, 1), lambda i, *_: (0, 0)),
+            pl.BlockSpec((1, cand_cap_padded, 1), lambda ch, i, *_: (ch, 0, 0)),
+            pl.BlockSpec((1, 1, 1), lambda ch, i, *_: (ch, 0, 0)),
         ],
     )
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=(
-            jax.ShapeDtypeStruct((cand_cap_padded, 1), jnp.int32),
-            jax.ShapeDtypeStruct((1, 1), jnp.int32),
+            jax.ShapeDtypeStruct((k_chains, cand_cap_padded, 1), jnp.int32),
+            jax.ShapeDtypeStruct((k_chains, 1, 1), jnp.int32),
         ),
         cost_estimate=pl.CostEstimate(
-            flops=50 * rows * _LANES,  # ~threefry rounds per streamed lane
-            bytes_accessed=rows * _LANES * 4 + cand_cap_padded * 4,
+            flops=50 * k_chains * rows * _LANES,  # ~threefry rounds per lane
+            bytes_accessed=k_chains * (rows * _LANES * 4
+                                       + cand_cap_padded * 4),
             transcendentals=0,
         ),
         interpret=interpret,
-    )(meta, arr2d)
+    )(meta, arr3d)
+
+
+def z_candidates_pallas(
+    arr2d: jax.Array,  # (P//128, 128) int32 partition array, padded with n
+    meta: jax.Array,  # (3,) int32: [num, key_word0, key_word1]
+    n: int,  # true datum count (ids >= n are padding)
+    q_bits: int,  # candidate threshold: bits24 < q_bits ⇔ u < q_db
+    cand_cap_padded: int,  # output buffer rows (>= cand_capacity, mult. of 8)
+    block_rows: int = 8,
+    interpret: bool = False,
+):
+    """Single-chain entry point: the ``num_chains == 1`` case of
+    :func:`z_candidates_pallas_chains`. Returns
+    (cand (cand_cap_padded, 1) int32 padded with n, count (1, 1))."""
+    cand, count = z_candidates_pallas_chains(
+        arr2d[None], meta[None], n=n, q_bits=q_bits,
+        cand_cap_padded=cand_cap_padded, block_rows=block_rows,
+        interpret=interpret,
+    )
+    return cand[0], count[0]

@@ -7,6 +7,14 @@ to a whole number of ``(block_rows, 128)`` tiles with the sentinel id ``N``
 compacted candidate buffer comes back sliced to ``cand_capacity`` with the
 true (possibly overflowing) candidate count alongside.
 
+Batching over the chain axis goes through a ``custom_vmap`` rule (the same
+scheme as ``kernels/bright_glm/ops``): the driver's multi-chain step
+lowers to ONE :func:`~repro.kernels.z_update.kernel
+.z_candidates_pallas_chains` launch whose grid leads with ``num_chains``
+and whose scalar-prefetched ``meta`` rows carry each chain's
+``(num, key_word0, key_word1)`` — the per-chain counter-RNG key lane that
+keeps the batched trajectories bitwise identical to per-chain dispatch.
+
 Candidate selection is pure integer work on non-differentiable operands
 (indices and RNG bits), so unlike ``bright_glm`` no custom VJP is needed —
 gradients never flow through z-moves.
@@ -14,12 +22,35 @@ gradients never flow through z-moves.
 
 from __future__ import annotations
 
-import jax
+from functools import lru_cache
+
+import jax  # annotations only (jax.Array); dispatch goes through common
 import jax.numpy as jnp
 
-from repro.kernels.bright_glm.ops import _pad_to, default_interpret
-from repro.kernels.z_update.kernel import z_candidates_pallas
+from repro.kernels import common
+from repro.kernels.z_update.kernel import (
+    z_candidates_pallas,
+    z_candidates_pallas_chains,
+)
 from repro.kernels.z_update.ref import q_threshold_bits
+
+
+@lru_cache(maxsize=None)
+def _pallas_dispatch(n, q_bits, cand_cap_padded, block_rows, interpret):
+    """The pallas_call dispatch as a ``custom_vmap`` function (memoized on
+    the static config): plain call = single-chain kernel; vmap over chains
+    = one chain-grid megakernel launch
+    (:func:`repro.kernels.common.make_chain_dispatch`)."""
+    kw = dict(n=n, q_bits=q_bits, cand_cap_padded=cand_cap_padded,
+              block_rows=block_rows, interpret=interpret)
+
+    def plain(arr2d, meta):
+        return z_candidates_pallas(arr2d, meta, **kw)
+
+    def chains(arr3d, meta):
+        return z_candidates_pallas_chains(arr3d, meta, **kw)
+
+    return common.make_chain_dispatch(plain, chains)
 
 
 def z_candidates(
@@ -37,26 +68,23 @@ def z_candidates(
     with the sentinel ``N``; ``n_cand`` is the true candidate count (it may
     exceed ``cand_capacity``, in which case the caller must raise the
     overflow flag). ``interpret=None`` auto-selects interpret mode off-TPU.
+    Under ``jax.vmap`` over the chain axis the dispatch batches into a
+    single chain-grid megakernel (see :mod:`repro.kernels.common`).
     """
     if interpret is None:
-        interpret = default_interpret()
+        interpret = common.default_interpret()
     n = arr.shape[0]
     block = block_rows * 128
-    p = _pad_to(max(n, block), block)
+    p = common.pad_to(max(n, block), block)
     arr2d = jnp.pad(
         arr.astype(jnp.int32), (0, p - n), constant_values=n
     ).reshape(p // 128, 128)
     meta = jnp.concatenate(
         [jnp.reshape(num.astype(jnp.int32), (1,)), key_words.astype(jnp.int32)]
     )
-    candp = _pad_to(max(int(cand_capacity), 8), 8)
-    cand, count = z_candidates_pallas(
-        arr2d,
-        meta,
-        n=n,
-        q_bits=q_threshold_bits(q_db),
-        cand_cap_padded=candp,
-        block_rows=block_rows,
-        interpret=bool(interpret),
+    candp = common.pad_to(max(int(cand_capacity), 8), 8)
+    call = _pallas_dispatch(
+        n, q_threshold_bits(q_db), candp, block_rows, bool(interpret)
     )
+    cand, count = call(arr2d, meta)
     return cand[:cand_capacity, 0], count[0, 0]

@@ -110,6 +110,35 @@ def test_distributed_fused_z_engine_runs_shard_local(mesh, problem):
     assert nb.min() != nb.max()
 
 
+def test_chain_fleet_matches_single_device_batched(problem):
+    """chain_fleet: the chain axis sharded over 8 devices via shard_map is
+    bitwise the single-device chain-batched run — chains are independent,
+    so the fleet step needs zero collectives and placement cannot change
+    the realized trajectories."""
+    from repro import api
+    from repro.distributed.flymc_dist import chain_fleet
+
+    if jax.device_count() < 8:
+        pytest.skip("needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+    chains_mesh = jax.make_mesh((8,), ("chains",))
+    tuned, _, _ = problem
+    alg = api.firefly(
+        tuned, kernel="rwmh", capacity=64, cand_capacity=64, q_db=0.05,
+        step_size=0.1, backend="pallas", z_backend="fused",
+    )
+    fleet = chain_fleet(alg, chains_mesh)
+    t_fleet = api.sample(fleet, jax.random.key(21), 30, num_chains=8,
+                         chunk_size=15)
+    t_local = api.sample(alg, jax.random.key(21), 30, num_chains=8,
+                         chunk_size=15)
+    np.testing.assert_array_equal(
+        np.asarray(t_fleet.theta), np.asarray(t_local.theta)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(t_fleet.stats.n_bright), np.asarray(t_local.stats.n_bright)
+    )
+
+
 def test_distributed_collectors_match_offline(mesh, problem):
     """Streaming collectors under shard_map: carries are replicated (θ and
     the psum'd StepStats come out of the sharded step replicated), so the
