@@ -42,6 +42,85 @@ def merge_write(update: dict, path: Path = BENCH_PATH) -> dict:
     return merged
 
 
+def job_mix(seed: int, n_jobs: int = 8, *, n: int = 2048, d: int = 16,
+            max_samples: int = 256, num_warmup: int = 100,
+            auto_terminate: bool = True, min_ess: float | None = None,
+            target_rhat: float | None = None):
+    """A deterministic heterogeneous serve workload: ``n_jobs`` jobs cycling
+    through (logistic K=1, logistic K=2, softmax, robust, logistic K=2 with
+    a convergence auto-termination policy), each on its own dataset.
+
+    The ONE mix definition shared by ``benchmarks/serving.py``,
+    ``examples/flymc_serve.py`` and ``tests/test_serve.py`` — the benchmark
+    numbers, the example output and the exactness pins are all measured on
+    the same workload, so they cannot silently diverge. ``seed`` shifts
+    every dataset and chain seed; sizes are keyword-tunable (tests shrink
+    them, benchmarks keep the defaults).
+
+    The convergence variant stops on batch-means ESS by default
+    (``min_ess = max_samples / 3`` unless given): ESS grows monotonically
+    with committed samples, so "enough effective samples" is an honest,
+    reachable stopping rule at any workload size — unlike a split-R̂
+    target, which short RWMH chains may never reach (pass ``target_rhat``
+    to use one anyway). ``auto_terminate=False`` makes every job
+    fixed-length (the exactness tests want full-length solo references).
+    """
+    from repro.api import collectors as collectors_lib
+    from repro.data.synthetic import logistic_data, robust_data, softmax_data
+    from repro.serve import Job, TerminationPolicy
+
+    fixed = TerminationPolicy(max_samples=max_samples)
+    conv_collectors = None
+    if auto_terminate:
+        if min_ess is None and target_rhat is None:
+            min_ess = max(8.0, max_samples / 3)
+        conv = TerminationPolicy(
+            max_samples=max_samples,
+            min_samples=max(2, max_samples // 8),
+            target_rhat=target_rhat, min_ess=min_ess, check_every=2,
+        )
+        if min_ess is not None:
+            conv_collectors = lambda: {
+                "trace": collectors_lib.FullTrace(),
+                "rhat": collectors_lib.RHat(),
+                "ess": collectors_lib.BatchMeansESS(),
+            }
+    else:
+        conv = fixed
+    capacity = max(32, n // 4)
+    jobs = []
+    for i in range(n_jobs):
+        key = jax.random.key(1000 * seed + i)
+        kind = i % 5
+        common = dict(seed=seed + i, capacity=capacity,
+                      cand_capacity=capacity, num_warmup=num_warmup)
+        if kind == 0:
+            jobs.append(Job(job_id=f"logistic-{i}", family="logistic",
+                            data=logistic_data(key, n=n, d=d),
+                            policy=fixed, **common))
+        elif kind == 1:
+            jobs.append(Job(job_id=f"logistic2c-{i}", family="logistic",
+                            data=logistic_data(key, n=n, d=d),
+                            num_chains=2, policy=fixed, **common))
+        elif kind == 2:
+            jobs.append(Job(job_id=f"softmax-{i}", family="softmax",
+                            data=softmax_data(key, n=n, d=d, k=3),
+                            policy=fixed, **common))
+        elif kind == 3:
+            data, _ = robust_data(key, n=n, d=d)
+            jobs.append(Job(job_id=f"robust-{i}", family="robust",
+                            data=data, policy=fixed, **common))
+        else:
+            jobs.append(Job(
+                job_id=f"logistic-conv-{i}", family="logistic",
+                data=logistic_data(key, n=n, d=d), num_chains=2,
+                policy=conv,
+                collectors=(conv_collectors() if conv_collectors else None),
+                **common,
+            ))
+    return jobs
+
+
 def quickstart_problem(
     n: int, d: int = 21, map_steps: int = 300, num_chains: int | None = None
 ):

@@ -105,6 +105,19 @@ def main() -> None:
         f"bytes_ratio={crec['bytes_ratio']:.0f}"
     )
 
+    # --- serving: continuous batching vs sequential ------------------------
+    from benchmarks.serving import main as bench_serving
+
+    vrec = bench_serving(quick=args.quick)
+    rows.append(
+        f"serving/batched,{vrec['service']['wall_s'] * 1e6 / vrec['n_jobs']:.0f},"
+        f"seq_s={vrec['sequential']['wall_s']};speedup={vrec['speedup']};"
+        f"p95_s={vrec['service']['latency_p95_s']};"
+        f"occupancy={vrec['service']['occupancy_mean']};"
+        f"steps_saved={vrec['auto_termination']['steps_saved_frac']};"
+        f"bitwise={vrec['fixed_length_results_bitwise_equal']}"
+    )
+
     # --- §3.1 bound tightness ---------------------------------------------
     bt = check_paper_claim()
     print(

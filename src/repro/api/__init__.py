@@ -36,17 +36,21 @@ from repro.api.algorithm import (
 )
 from repro.api.collectors import (
     BatchMeansESS,
+    Collector,
     FullTrace,
     OnlineMoments,
     PosteriorPredictive,
     QueryBudget,
     RHat,
     ThinnedTrace,
+    peek,
 )
-from repro.api.driver import Trace, sample
+from repro.api.driver import ChunkEvent, Trace, sample
 
 __all__ = [
     "BatchMeansESS",
+    "ChunkEvent",
+    "Collector",
     "FullTrace",
     "MCMCState",
     "OnlineMoments",
@@ -58,6 +62,7 @@ __all__ = [
     "Trace",
     "algorithm_from_spec",
     "firefly",
+    "peek",
     "regular_mcmc",
     "sample",
 ]

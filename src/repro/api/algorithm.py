@@ -48,6 +48,21 @@ class SamplingAlgorithm:
     state for the grown buffers without new likelihood queries, and
     ``init_overflow(state)`` flags an initial state that does not fit. All
     three are None for algorithms that cannot overflow.
+
+    ``step_data``/``data``/``stats`` are the dataset-as-operand form of the
+    step: ``step_data(key, state, data, stats)`` is ``step`` with the
+    dataset and its sufficient statistics passed as arguments instead of
+    closed over. When present, the driver threads ``alg.data``/``alg.stats``
+    through the jitted chunk as traced operands rather than baking them in
+    as compile-time constants. This is a bitwise-visible choice, not a
+    plumbing detail: XLA's constant folding rounds data-dependent
+    reductions differently for a baked-in dataset than for the identical
+    values passed as an operand (low-bit ``joint_lp``/``accept_prob``
+    differences on CPU, observed at e.g. N=512, D=8). The operand form is
+    the ONE form shared by solo runs and the :mod:`repro.serve` group
+    engines — whose lanes must take data as operands to pack jobs into a
+    shared executable — which is what makes a packed job's trajectory
+    bitwise its solo run's.
     """
 
     init: Callable[[jax.Array, Any], Any]
@@ -60,6 +75,9 @@ class SamplingAlgorithm:
     spec: Any = None  # engine config (e.g. FlyMCSpec), for introspection
     step_chains: Callable[[jax.Array, Any], tuple[Any, StepStats]] | None = None
     init_chains: Callable[[jax.Array, Any], Any] | None = None
+    step_data: Callable[..., tuple[Any, StepStats]] | None = None
+    data: Any = None
+    stats: Any = None
 
     def position_of(self, state) -> jax.Array:
         if self.position is not None:
@@ -253,6 +271,11 @@ def _firefly_from_spec(
         # the kernel stays a pure function of (key, state).
         return flymc.flymc_step(spec, data, stats, state._replace(rng=key))
 
+    def step_data(key, state, data_, stats_):
+        # The operand-data form the driver and the serve engines both jit
+        # (see the SamplingAlgorithm docstring for why the form matters).
+        return flymc.flymc_step(spec, data_, stats_, state._replace(rng=key))
+
     # Memoized: repeated growth (e.g. across sample() calls that hit the
     # same overflow) must yield the *same* algorithm object so the driver's
     # jit cache keys on a stable step identity and never re-traces.
@@ -286,6 +309,9 @@ def _firefly_from_spec(
         init_overflow=init_overflow,
         default_position=default_position,
         spec=spec,
+        step_data=step_data,
+        data=data,
+        stats=stats,
     )
 
 

@@ -15,6 +15,12 @@ reduction that the :func:`repro.api.sample` driver threads through its jitted
   * ``finalize(carry) -> result`` — host-side post-processing. The carry
     always arrives with a leading ``(num_chains, ...)`` axis (added for
     single-chain runs), so cross-chain reductions (R̂) happen here.
+  * ``peek(carry) -> result`` — OPTIONAL non-destructive mid-run read
+    (default: ``finalize`` on a deep copy of the carry, via the
+    :class:`Collector` base class or the module-level :func:`peek`
+    fallback). This is how the driver's chunk-boundary hook and the
+    :mod:`repro.serve` scheduler stream R̂/ESS out of an in-flight chain;
+    a peek never perturbs the run (bitwise, pinned in tests).
 
 The driver folds carries only over *committed* chunks — a chunk that
 overflowed its capacity is re-run (bitwise, from the saved pre-chunk state)
@@ -53,8 +59,49 @@ def _flat_dim(struct) -> int:
     return int(np.prod(struct.shape, dtype=np.int64)) if struct.shape else 1
 
 
+def _copy_carry(carry):
+    return jax.tree.map(lambda l: jnp.array(l, copy=True), carry)
+
+
+class Collector:
+    """Optional base class for collectors: supplies the default ``peek``.
+
+    The protocol itself stays duck-typed — ``validate_collectors`` checks for
+    ``(init, update, finalize)`` only, and ``peek`` is optional everywhere
+    (:func:`peek` falls back for collectors that don't define it).
+    """
+
+    def peek(self, carry):
+        """Non-destructively read the would-be result of ``finalize(carry)``.
+
+        ``finalize`` may hand back device buffers that *alias* the live carry
+        (``FullTrace`` returns the trace buffer itself), and the driver's
+        committed-chunk fold donates that carry — so finalizing mid-run and
+        keeping the result would read memory the next chunk overwrites in
+        place. ``peek`` finalizes a deep COPY of the carry instead: the live
+        carry is never touched, nothing in the returned result aliases it,
+        and a peek-then-continue run is bitwise identical to one that never
+        peeked (pinned in ``tests/test_collectors.py``).
+        """
+        return self.finalize(_copy_carry(carry))
+
+
+def peek(collector, carry):
+    """``collector.peek(carry)`` with a safe fallback for bare-protocol
+    collectors: finalize a deep copy of the carry (never the carry itself).
+
+    This is the chunk-boundary read used by schedulers and the
+    :mod:`repro.serve` service to stream R̂/ESS/moments out of an in-flight
+    chain without consuming — or aliasing — the collector state.
+    """
+    fn = getattr(collector, "peek", None)
+    if callable(fn):
+        return fn(carry)
+    return collector.finalize(_copy_carry(carry))
+
+
 @dataclasses.dataclass(eq=False)
-class FullTrace:
+class FullTrace(Collector):
     """Today's dense output: every θ sample plus per-iteration StepStats.
 
     This is the default collector — ``sample()`` without ``collectors=``
@@ -89,7 +136,7 @@ class FullTrace:
 
 
 @dataclasses.dataclass(eq=False)
-class ThinnedTrace:
+class ThinnedTrace(Collector):
     """Every ``thin``-th θ, decimated on device: ``theta[thin-1::thin]``.
 
     Entry ``i`` is iteration ``(i+1)·thin - 1`` (the LAST iteration of each
@@ -127,7 +174,7 @@ class ThinnedTrace:
 
 
 @dataclasses.dataclass(eq=False)
-class OnlineMoments:
+class OnlineMoments(Collector):
     """Welford running mean (and covariance) of θ — constant memory.
 
     The carry is ``(count, mean, M2)`` with θ flattened to ``(D,)``; the
@@ -177,7 +224,7 @@ class OnlineMoments:
 
 
 @dataclasses.dataclass(eq=False)
-class RHat:
+class RHat(Collector):
     """Split-chain R̂ accumulators, matching ``diagnostics.split_r_hat``.
 
     Each chain streams Welford moments for its first and second half
@@ -238,9 +285,48 @@ class RHat:
         per_coord = np.atleast_1d(per_coord)
         return {"r_hat": float(per_coord.max()), "per_coordinate": per_coord}
 
+    def peek(self, carry):
+        """Mid-run R̂ over the splits that have data, for convergence polling.
+
+        ``finalize`` assumes both splits of every chain ran to ``half``
+        iterations; a peek mid-run sees the second split partially filled (or
+        empty). The monitor pools every split with ≥ 2 samples at the length
+        of the *shortest* such split's count — a slight length mismatch is
+        acceptable for a termination check, and with k ≥ 2 usable splits
+        (always true for ≥ 2 chains, even early on) the estimate tightens as
+        the run proceeds. Returns ``r_hat = inf`` when fewer than two splits
+        are usable (i.e. "not converged yet", never a premature stop). The
+        carry is only read, never consumed: peek-then-continue stays bitwise
+        identical to never-peeked.
+        """
+        count = np.asarray(jax.device_get(carry["count"]))  # (C, 2)
+        mean = np.asarray(jax.device_get(carry["mean"]), np.float64)
+        m2 = np.asarray(jax.device_get(carry["m2"]), np.float64)
+        c, _, d = mean.shape
+        counts = count.reshape(2 * c)
+        means = mean.reshape(2 * c, d)
+        m2s = m2.reshape(2 * c, d)
+        usable = counts >= 2
+        if int(usable.sum()) < 2:
+            return {
+                "r_hat": float("inf"),
+                "per_coordinate": None,
+                "splits_used": int(usable.sum()),
+            }
+        h = int(counts[usable].min())
+        variances = m2s[usable] / (counts[usable, None] - 1)
+        per_coord = np.atleast_1d(
+            diagnostics.rhat_from_split_moments(h, means[usable], variances)
+        )
+        return {
+            "r_hat": float(per_coord.max()),
+            "per_coordinate": per_coord,
+            "splits_used": int(usable.sum()),
+        }
+
 
 @dataclasses.dataclass(eq=False)
-class BatchMeansESS:
+class BatchMeansESS(Collector):
     """On-device batch-means estimate of τ (and ESS) per coordinate.
 
     The carry holds ``num_batches`` per-batch *running means* plus Welford
@@ -330,7 +416,7 @@ def _default_predict(theta, x_eval):
 
 
 @dataclasses.dataclass(eq=False)
-class PosteriorPredictive:
+class PosteriorPredictive(Collector):
     """Running posterior-mean predictive probability at fixed eval points.
 
     The serving workload: ``E_posterior[p(y | x, θ)]`` for each row of
@@ -369,7 +455,7 @@ class PosteriorPredictive:
 
 
 @dataclasses.dataclass(eq=False)
-class QueryBudget:
+class QueryBudget(Collector):
     """Exact on-device int64 likelihood-query accounting.
 
     Replaces the host-side int64 sum over materialized per-step stats.
@@ -416,11 +502,13 @@ def validate_collectors(collectors: dict) -> dict:
 
 __all__ = [
     "BatchMeansESS",
+    "Collector",
     "FullTrace",
     "OnlineMoments",
     "PosteriorPredictive",
     "QueryBudget",
     "RHat",
     "ThinnedTrace",
+    "peek",
     "validate_collectors",
 ]

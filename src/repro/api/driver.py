@@ -76,6 +76,17 @@ def _cached(key, build):
     return fn
 
 
+def cached_jit(key, build):
+    """The driver's LRU jit cache, for layers that extend the driver.
+
+    ``repro.serve``'s group engines key their chain-scan executables here so
+    a service restart (or an engine torn down and repacked after device
+    loss) re-enters a warm cache instead of recompiling — the same policy,
+    same LRU, same eviction as the driver's own chunk functions.
+    """
+    return _cached(key, build)
+
+
 class Trace(NamedTuple):
     """Everything one `sample()` call produced.
 
@@ -138,25 +149,49 @@ def _capacity_of(alg: SamplingAlgorithm):
     return (getattr(spec, "capacity", None), getattr(spec, "cand_capacity", None))
 
 
+def _threads_data(alg: SamplingAlgorithm) -> bool:
+    """Whether the chunk scan takes the dataset as a traced operand.
+
+    True for algorithms providing the ``step_data`` form (and no custom
+    ``step_chains`` dispatch, which owns its own data placement). The
+    operand form is shared bit-for-bit with the :mod:`repro.serve` group
+    engines — baking the dataset in as a jit constant changes XLA's
+    low-bit rounding of the likelihood reductions, so the form is part of
+    the exactness contract, not an implementation detail.
+    """
+    return (
+        alg.step_data is not None
+        and alg.data is not None
+        and alg.step_chains is None
+    )
+
+
 def _make_scan_fn(alg: SamplingAlgorithm, num_chains: int, cs: int):
     """One jitted chunk of the chain: cs steps, carrying the chain-stacked
     state natively when num_chains > 1 (one scan whose body is the
     chain-batched step — no per-chain scans). Emits the per-step
     (θ, StepStats) as chunk-local O(cs) scan outputs (time axis leading,
-    chain axis second) plus (final_state, any_overflow)."""
+    chain axis second) plus (final_state, any_overflow). Algorithms with
+    the ``step_data`` form get the dataset threaded as a trailing operand
+    (see :func:`_threads_data`); the chunk signature grows accordingly."""
     multi = num_chains > 1
+    threads = _threads_data(alg)
+    if threads:
+        step = (
+            jax.vmap(alg.step_data, in_axes=(0, 0, None, None))
+            if multi else alg.step_data
+        )
+    else:
+        step = alg.batched_step() if multi else alg.step
     if multi:
-        step = alg.batched_step()
         fold_keys = jax.vmap(jax.random.fold_in, in_axes=(0, None))
         position = jax.vmap(alg.position_of)
     else:
-        step, fold_keys, position = (
-            alg.step, jax.random.fold_in, alg.position_of
-        )
+        fold_keys, position = jax.random.fold_in, alg.position_of
 
-    def chunk(state, keys, start):
+    def chunk(state, keys, start, *operands):
         def body(carry, i):
-            new_state, info = step(fold_keys(keys, i), carry)
+            new_state, info = step(fold_keys(keys, i), carry, *operands)
             return new_state, (position(new_state), info)
 
         iters = start + jnp.arange(cs, dtype=jnp.int32)
@@ -166,7 +201,38 @@ def _make_scan_fn(alg: SamplingAlgorithm, num_chains: int, cs: int):
     return jax.jit(chunk)
 
 
-def _make_fold_fn(colls: dict, multi: bool):
+class ChunkEvent:
+    """What the driver exposes to ``on_chunk`` at each committed boundary.
+
+    ``start``/``size`` locate the chunk (``start`` counts committed samples
+    before it, so ``start + size`` is the total committed so far);
+    ``num_samples`` is the run's target; ``state`` the post-chunk chain
+    state. ``peek(name)`` reads the named collector's would-be result
+    through :func:`repro.api.collectors.peek` — non-destructive, never
+    aliasing the live carry, so peeking cannot perturb the run.
+    """
+
+    def __init__(self, start, size, num_samples, state, colls, carries, multi):
+        self.start = start
+        self.size = size
+        self.num_samples = num_samples
+        self.state = state
+        self._colls = colls
+        self._carries = carries
+        self._multi = multi
+
+    @property
+    def committed(self) -> int:
+        return self.start + self.size
+
+    def peek(self, name: str):
+        carry = self._carries[name]
+        if not self._multi:  # finalize/peek contract: leading chain axis
+            carry = jax.tree.map(lambda l: l[None], carry)
+        return collectors_lib.peek(self._colls[name], carry)
+
+
+def make_collector_fold(colls: dict, multi: bool, max_count: int | None = None):
     """Fold one COMMITTED chunk's (θ, StepStats) outputs into the collector
     carries, in step order. The chunk outputs arrive time-major
     ((cs, K, ...) for multi); the fold is one scan over the time axis whose
@@ -181,6 +247,22 @@ def _make_fold_fn(colls: dict, multi: bool):
     the backend supports input-output aliasing), so a trace-type
     collector's O(num_samples) buffer is updated in place instead of being
     copied at every chunk boundary.
+
+    Public because the :mod:`repro.serve` group engines fold the identical
+    protocol over their slot axis — one encoding of the committed-chunk
+    fold, shared by the driver and the service.
+
+    ``max_count`` is the serve engines' masked variant: the fold signature
+    becomes ``fold(carries, counts, pos, infos) -> (carries, counts)`` with
+    int32 ``counts`` of samples folded so far (per-chain ``(K,)`` when
+    ``multi``, scalar otherwise), and updates stop being absorbed once the
+    count reaches ``max_count``. In a packed serve group every member runs
+    the same chunk, so a job whose ``max_samples`` is not chunk-aligned
+    overshoots by up to one chunk — the mask discards exactly the overshoot
+    updates, making the carry bitwise the carry of a solo run of
+    ``max_count`` samples (the kept updates see identical inputs in
+    identical order; collector updates are pure, so discarded applications
+    leave no residue).
     """
     names = tuple(colls)
     updates = {
@@ -188,13 +270,37 @@ def _make_fold_fn(colls: dict, multi: bool):
         for n in names
     }
 
-    def fold(carries, pos, infos):
-        def body(cars, x):
-            p, inf = x
-            return {n: updates[n](cars[n], p, inf) for n in names}, None
+    if max_count is None:
 
-        cars, _ = jax.lax.scan(body, carries, (pos, infos))
-        return cars
+        def fold(carries, pos, infos):
+            def body(cars, x):
+                p, inf = x
+                return {n: updates[n](cars[n], p, inf) for n in names}, None
+
+            cars, _ = jax.lax.scan(body, carries, (pos, infos))
+            return cars
+
+    else:
+        limit = jnp.int32(max_count)
+
+        def fold(carries, counts, pos, infos):
+            def body(carry, x):
+                cars, cnt = carry
+                p, inf = x
+                new = {n: updates[n](cars[n], p, inf) for n in names}
+                active = cnt < limit
+
+                def sel(a, b):
+                    m = active.reshape(
+                        active.shape + (1,) * (a.ndim - active.ndim)
+                    )
+                    return jnp.where(m, a, b)
+
+                cars = jax.tree.map(sel, new, cars)
+                return (cars, cnt + active.astype(cnt.dtype)), None
+
+            (cars, cnt), _ = jax.lax.scan(body, (carries, counts), (pos, infos))
+            return cars, cnt
 
     donate = (0,) if jax.default_backend() != "cpu" else ()
     return jax.jit(fold, donate_argnums=donate)
@@ -211,6 +317,7 @@ def sample(
     init_position=None,
     init_state=None,
     collectors: dict | None = None,
+    on_chunk=None,
 ) -> Trace:
     """Run ``num_samples`` iterations of ``alg`` on device; return a Trace.
 
@@ -241,6 +348,15 @@ def sample(
     stats stay per-iteration) — with explicit collectors use
     :class:`~repro.api.collectors.ThinnedTrace` instead. Host syncs: one per
     chunk (plus one at resume).
+
+    ``on_chunk`` is the chunk-boundary hook: called with a
+    :class:`ChunkEvent` after every COMMITTED chunk (never for an overflowed
+    chunk awaiting its capacity re-run). ``event.peek(name)`` streams any
+    collector's current value without consuming its carry — peeking leaves
+    the run bitwise unchanged. Returning a truthy value stops the run early
+    at that boundary (convergence-based termination): the Trace then holds
+    only the committed samples (``theta``/``stats`` sliced on the default
+    path; streaming collectors simply saw fewer updates).
     """
     if num_samples <= 0:
         raise ValueError("num_samples must be positive")
@@ -289,6 +405,41 @@ def sample(
                     f"({vals.tolist()}); resume needs a uniform offset"
                 )
             start_offset = int(vals.flat[0] if vals.ndim else vals)
+        # A checkpointed state may carry buffers grown past the algorithm's
+        # built capacity (overflow doubles them mid-run), so the two can
+        # disagree on buffer shapes at resume. Normalize the algorithm UP
+        # to the state's capacity — growing is lossless, and trajectories
+        # are bitwise capacity-invariant — then (if the doubling overshot)
+        # resize the state up to the algorithm's capacity so they agree.
+        if alg.resize is not None:
+            struct = jax.tree.map(
+                lambda l: jax.ShapeDtypeStruct(
+                    jnp.shape(l)[1:] if multi else jnp.shape(l), l.dtype
+                ),
+                state,
+            )
+
+            def _alg_undersized(a):
+                tgt = jax.eval_shape(a.resize, struct)
+                return any(
+                    np.prod(t.shape) < np.prod(c.shape)
+                    for t, c in zip(
+                        jax.tree.leaves(tgt), jax.tree.leaves(struct)
+                    )
+                )
+
+            while alg.grow is not None and _alg_undersized(alg):
+                alg = _grown(alg)
+            tgt = jax.eval_shape(alg.resize, struct)
+            if any(
+                t.shape != c.shape
+                for t, c in zip(jax.tree.leaves(tgt), jax.tree.leaves(struct))
+            ):
+                resize = alg.resize
+                state = _cached(
+                    ("resize", resize, multi),
+                    lambda: jax.jit(jax.vmap(resize) if multi else resize),
+                )(state)
         k_steps = key
     else:
         k_init, k_steps = jax.random.split(key)
@@ -356,7 +507,8 @@ def sample(
         # (memoized alg.grow() → same step identity) reuses it.
         return _cached(
             ("scan", alg.step, alg.step_chains, alg.position, num_chains,
-             cs, _capacity_of(alg), kernels_common.chain_batching_enabled()),
+             cs, _capacity_of(alg), kernels_common.chain_batching_enabled(),
+             alg.step_data),
             lambda: _make_scan_fn(alg, num_chains, cs),
         )
 
@@ -365,8 +517,11 @@ def sample(
     # an overflow retry never recompiles it.
     fold_fn = _cached(
         ("fold", tuple(colls.items()), multi),
-        lambda: _make_fold_fn(colls, multi),
+        lambda: make_collector_fold(colls, multi),
     )
+
+    def scan_operands(alg):
+        return (alg.data, alg.stats) if _threads_data(alg) else ()
 
     start = 0
     while start < num_samples:
@@ -374,7 +529,8 @@ def sample(
         # Keep the pre-chunk state alive for the exact re-run on overflow.
         prev = state
         final, pos, infos, overflow = scan_fn_for(alg, cs)(
-            state, chain_keys, jnp.int32(start_offset + start)
+            state, chain_keys, jnp.int32(start_offset + start),
+            *scan_operands(alg)
         )
         while bool(jax.device_get(overflow)):  # the chunk's one host sync
             alg = _grown(alg)
@@ -384,7 +540,8 @@ def sample(
                 lambda: jax.jit(jax.vmap(resize) if multi else resize),
             )(prev)
             final, pos, infos, overflow = scan_fn_for(alg, cs)(
-                prev, chain_keys, jnp.int32(start_offset + start)
+                prev, chain_keys, jnp.int32(start_offset + start),
+                *scan_operands(alg)
             )
         # Only a committed (non-overflowed) chunk reaches the collectors, so
         # capacity re-runs never need a carry rollback; the donated carry is
@@ -393,6 +550,13 @@ def sample(
             carries = fold_fn(carries, pos, infos)
         state = final
         start += cs
+        if on_chunk is not None and on_chunk(
+            ChunkEvent(start - cs, cs, num_samples, state, colls, carries,
+                       multi)
+        ):
+            break
+
+    committed = start
 
     # finalize() always sees a leading (num_chains, ...) carry axis.
     if not multi:
@@ -402,6 +566,9 @@ def sample(
     if default_path:
         tr = results["trace"]
         theta, stats = tr["theta"], tr["stats"]
+        if committed < num_samples:  # on_chunk stopped the run early
+            theta = theta[:, :committed]
+            stats = jax.tree.map(lambda l: l[:, :committed], stats)
         if thin > 1:
             theta = theta[:, thin - 1 :: thin]
         total_queries = int(

@@ -46,11 +46,24 @@ def _flatten_with_paths(tree) -> list[tuple[str, Any]]:
 
 
 class Checkpointer:
-    def __init__(self, directory: str | os.PathLike, keep: int = 3):
+    def __init__(self, directory: str | os.PathLike, keep: int = 3,
+                 keep_last: int | None = None):
+        """``keep_last`` (alias ``keep``): retain the newest N completed
+        checkpoints, GC'ing older ones after every save; 0 disables GC (keep
+        everything). An always-on service cannot grow disk without bound, so
+        startup also sweeps stale ``step_*.tmp`` dirs — debris a crash
+        mid-write leaves behind that restore already ignores but that would
+        otherwise accumulate forever."""
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
-        self.keep = keep
+        self.keep = keep if keep_last is None else keep_last
         self._thread: threading.Thread | None = None
+        self._sweep_tmp()
+
+    def _sweep_tmp(self):
+        for p in self.dir.iterdir():
+            if p.is_dir() and p.name.startswith("step_") and p.name.endswith(".tmp"):
+                shutil.rmtree(p, ignore_errors=True)
 
     # ------------------------------------------------------------------ save
 
@@ -126,6 +139,22 @@ class Checkpointer:
     def latest_step(self) -> int | None:
         steps = self.all_steps()
         return steps[-1] if steps else None
+
+    def manifest(self, step: int | None = None) -> dict:
+        """Parsed manifest.json of a checkpoint (latest by default).
+
+        Lets a caller read ``extra`` metadata — e.g. the serve layer's job
+        registry — *before* it can build the restore target tree, which is
+        exactly the bootstrapping order a service restart needs.
+        """
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        return json.loads(
+            (self.dir / f"step_{step:08d}" / "manifest.json").read_text()
+        )
 
     def restore(self, target_tree, step: int | None = None, shardings=None):
         """Restore into the structure of ``target_tree``.

@@ -51,6 +51,22 @@ def plan_mesh(n_devices: int, model_parallel: int = 16):
                          devices=jax.devices()[: groups * model_parallel])
 
 
+def plan_chain_slots(n_devices: int, slots_per_device: int = 8) -> int:
+    """Chain-slot budget per batching group for the sampling service.
+
+    The serve scheduler packs jobs onto the chain axis of the batched
+    megakernels; the chain axis is the elastic dimension (chains shard with
+    zero cross-chain collectives — ``flymc_dist.chain_fleet``), so device
+    loss translates linearly into slot loss. On loss the service
+    checkpoints, shrinks every group to the surviving budget, and repacks —
+    the chain-level analogue of :func:`plan_mesh` absorbing device loss
+    into the data axes.
+    """
+    if n_devices < 1:
+        raise ValueError(f"need at least one device, got {n_devices}")
+    return n_devices * slots_per_device
+
+
 @dataclasses.dataclass
 class StragglerMonitor:
     """EWMA step-time tracker; flags hosts slower than median × threshold."""

@@ -1,0 +1,47 @@
+"""repro.serve — multi-tenant posterior sampling as a service.
+
+Jobs (dataset + GLM family + FlyMC spec + convergence policy) arrive in a
+queue; the scheduler packs compatible jobs onto the lane axis of shared
+group engines (continuous batching: join/leave at chunk boundaries);
+results stream per job through non-destructive collector peeks; R̂/ESS
+policies auto-terminate; checkpoints restore bit-exact.
+
+The contract that makes multi-tenancy safe: every job's trajectory and
+every result is bitwise what a solo ``api.sample`` call with the same seed
+produces, regardless of packing, neighbors, re-packs, or restore — see
+``repro.serve.engine`` for how.
+
+    svc = Service(chunk_size=64)
+    h = svc.submit(Job(job_id="a", family="logistic", data=data, seed=0,
+                       policy=TerminationPolicy(max_samples=2000,
+                                                target_rhat=1.01)))
+    results = svc.run()          # {job_id: JobResult}
+    theta = results["a"].samples()
+"""
+
+from repro.serve.engine import GroupEngine
+from repro.serve.job import (
+    Job,
+    TerminationPolicy,
+    build_algorithm,
+    default_collectors,
+    group_key,
+)
+from repro.serve.results import JobHandle, JobResult, JobStatus, StreamUpdate
+from repro.serve.scheduler import Scheduler
+from repro.serve.service import Service
+
+__all__ = [
+    "GroupEngine",
+    "Job",
+    "JobHandle",
+    "JobResult",
+    "JobStatus",
+    "Scheduler",
+    "Service",
+    "StreamUpdate",
+    "TerminationPolicy",
+    "build_algorithm",
+    "default_collectors",
+    "group_key",
+]

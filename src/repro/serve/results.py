@@ -1,0 +1,96 @@
+"""Per-job result surfaces: status, streamed updates, finished results.
+
+The service's read side. While a job runs, the client sees
+:class:`StreamUpdate`s at chunk boundaries (committed counts plus
+non-destructive collector peeks — :func:`repro.api.collectors.peek`, so
+observing a job never perturbs it). When it retires, the client gets a
+:class:`JobResult` holding exactly what a solo ``api.sample`` call with the
+same seed would have returned in ``Trace.results`` — bitwise, that is the
+service's whole exactness contract.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any
+
+
+class JobStatus(enum.Enum):
+    QUEUED = "queued"        # submitted, not yet packed into a group
+    RUNNING = "running"      # occupying lanes in a group engine
+    SUSPENDED = "suspended"  # evicted for capacity (device loss); will repack
+    DONE = "done"
+    CANCELLED = "cancelled"
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamUpdate:
+    """One chunk boundary's view of one running job.
+
+    ``peeks`` maps collector names to peeked (would-be) results for the
+    collectors the caller subscribed to via ``Service.submit(stream=...)``
+    — plus, always, any peeks the termination policy consumed this
+    boundary (they were already computed; the client may as well see the
+    convergence trail).
+    """
+
+    job_id: str
+    committed: int
+    peeks: dict
+    done: bool = False
+    reason: str | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class JobResult:
+    """A retired job. ``results`` = finalized ``{name: collector result}``,
+    bitwise the solo run's ``Trace.results``. ``reason`` ∈
+    {"max_samples", "converged", "cancelled"}; ``committed`` counts folded
+    samples (== ``policy.max_samples`` unless converged/cancelled early —
+    convergence stops FOLDING at the next boundary, it never unfolds)."""
+
+    job_id: str
+    results: dict
+    committed: int
+    reason: str
+
+    def samples(self, name: str = "trace"):
+        """The (num_chains, committed, ...) θ trajectory of a trace-type
+        collector result, sliced to the committed prefix (an
+        early-terminated job's trace buffer is sized for ``max_samples``;
+        the tail past ``committed`` was never written)."""
+        theta = self.results[name]["theta"]
+        return theta[:, : self.committed]
+
+
+class JobHandle:
+    """The client's grip on a submitted job. Thin: every read delegates to
+    the service's live registry, so a handle is never stale."""
+
+    def __init__(self, service, job_id: str):
+        self._service = service
+        self.job_id = job_id
+
+    @property
+    def status(self) -> JobStatus:
+        return self._service.status(self.job_id)
+
+    @property
+    def committed(self) -> int:
+        return self._service.committed(self.job_id)
+
+    def peek(self, name: str) -> Any:
+        """Non-destructive mid-run read of one collector (running jobs)."""
+        return self._service.peek(self.job_id, name)
+
+    def result(self) -> JobResult | None:
+        """The JobResult once DONE/CANCELLED; None while in flight."""
+        return self._service.result(self.job_id)
+
+    def cancel(self) -> bool:
+        return self._service.cancel(self.job_id)
+
+    def __repr__(self):
+        return (f"JobHandle({self.job_id!r}, {self.status.value}, "
+                f"committed={self.committed})")

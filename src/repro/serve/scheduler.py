@@ -1,0 +1,138 @@
+"""Continuous-batching scheduler: jobs → group engines, under a slot budget.
+
+The scheduler owns the packing decisions and nothing else — engines do the
+math, the service does the policy. Its invariants:
+
+  * **One engine per live group key** (:func:`repro.serve.job.group_key`);
+    an engine exists exactly while it has members, and its compiled chunk
+    executables outlive it in the driver's jit cache (the key is a pure
+    value), so churn is cheap.
+  * **A slot budget in chains.** A job costs ``num_chains`` slots
+    (:func:`repro.launch.elastic.plan_chain_slots` converts devices to
+    slots); lane padding is compile-time geometry, not billed occupancy.
+  * **FIFO with skip.** Admission scans the queue in arrival order and
+    admits every job that fits the remaining budget — a wide job at the
+    head does not block narrow jobs behind it (head-of-line skip), but
+    arrival order still decides ties, so nothing starves: the head is
+    always first in line for freed slots.
+  * **Suspended jobs outrank the queue.** A job evicted for capacity
+    (device loss) holds committed work; on any freed slots it is repacked
+    before fresh admissions, via :meth:`GroupEngine.admit_restored` — its
+    lanes carry their iteration counters, so it resumes its exact solo
+    trajectory (bitwise, pinned in tests).
+
+Packing never affects results — that is the engines' exactness contract —
+so the scheduler is free to be greedy.
+"""
+
+from __future__ import annotations
+
+from repro.serve import job as job_lib
+from repro.serve.engine import GroupEngine
+
+
+class Scheduler:
+    def __init__(self, slot_budget: int, lane_backend: str = "map"):
+        if slot_budget < 1:
+            raise ValueError("slot_budget must be >= 1")
+        self.slot_budget = slot_budget
+        self.lane_backend = lane_backend
+        self.engines: dict[tuple, GroupEngine] = {}  # group_key -> engine
+        self.queue: list[job_lib.Job] = []           # arrival order
+        # job_id -> (job, lane trees): capacity-evicted, awaiting repack
+        self.suspended: dict[str, tuple] = {}
+
+    # ------------------------------------------------------------- accounting
+
+    @property
+    def slots_used(self) -> int:
+        return sum(e.num_slots for e in self.engines.values())
+
+    @property
+    def slots_free(self) -> int:
+        return self.slot_budget - self.slots_used
+
+    def engine_of(self, job_id: str) -> GroupEngine | None:
+        for eng in self.engines.values():
+            if job_id in eng.job_ids:
+                return eng
+        return None
+
+    # -------------------------------------------------------------- admission
+
+    def enqueue(self, job: job_lib.Job):
+        self.queue.append(job)
+
+    def _engine_for(self, job: job_lib.Job,
+                    capacity: int | None = None,
+                    cand_capacity: int | None = None) -> GroupEngine:
+        key = job_lib.group_key(job)
+        eng = self.engines.get(key)
+        if eng is None:
+            eng = self.engines[key] = GroupEngine(
+                job, capacity=capacity, cand_capacity=cand_capacity,
+                lane_backend=self.lane_backend,
+            )
+        return eng
+
+    def admit_pending(self) -> list[str]:
+        """One admission round: suspended first, then the queue, FIFO with
+        skip. Returns the admitted job ids (their groups repack at the next
+        chunk boundary — callers run this BETWEEN chunks only)."""
+        admitted = []
+        for job_id in list(self.suspended):
+            job, lane, caps = self.suspended[job_id]
+            if job.num_chains > self.slots_free:
+                continue
+            eng = self._engine_for(job, capacity=caps[0],
+                                   cand_capacity=caps[1])
+            eng.admit_restored(job, lane)
+            del self.suspended[job_id]
+            admitted.append(job_id)
+        remaining = []
+        for job in self.queue:
+            if job.num_chains <= self.slots_free:
+                self._engine_for(job).admit(job)
+                admitted.append(job.job_id)
+            else:
+                remaining.append(job)
+        self.queue = remaining
+        return admitted
+
+    # --------------------------------------------------------------- eviction
+
+    def evict(self, job_id: str) -> tuple[GroupEngine, dict]:
+        """Remove a finished/cancelled job; returns (engine, lane trees).
+        Drops the engine when its last member leaves."""
+        eng = self.engine_of(job_id)
+        if eng is None:
+            raise KeyError(f"job {job_id!r} is not running")
+        lane = eng.evict(job_id)
+        if not eng.job_ids:
+            del self.engines[eng.group_key]
+        return eng, lane
+
+    def suspend(self, job_id: str):
+        """Evict a RUNNING job but keep its lanes for later repack — the
+        capacity-pressure path. Suspension order is the reverse of a
+        group's membership (newest member first), so the longest-running
+        work is the last to yield its slots."""
+        eng = self.engine_of(job_id)
+        job = eng.job(job_id)
+        caps = (eng.capacity, eng.cand_capacity)
+        _, lane = self.evict(job_id)
+        self.suspended[job_id] = (job, lane, caps)
+
+    def shrink_to_budget(self, slot_budget: int) -> list[str]:
+        """Apply a new (smaller or larger) budget; suspend newest-first
+        until occupancy fits. Returns the suspended job ids. The caller
+        (service) checkpoints BEFORE shrinking — suspension itself is
+        lossless, but the checkpoint is what survives a process death."""
+        self.slot_budget = int(slot_budget)
+        out = []
+        while self.slots_used > self.slot_budget:
+            eng = max(self.engines.values(), key=lambda e: e.num_slots)
+            victim = eng.job_ids[-1]  # newest member of the widest group
+            self.suspend(victim)
+            out.append(victim)
+        return out

@@ -1,0 +1,427 @@
+"""The always-on posterior-sampling service.
+
+``Service`` ties the serve stack together: clients :meth:`~Service.submit`
+:class:`~repro.serve.job.Job`s and get :class:`~repro.serve.results.
+JobHandle`s back; :meth:`~Service.step` advances every batching group one
+chunk (continuous batching: jobs join and leave BETWEEN chunks, never
+mid-scan); :meth:`~Service.run` loops until the work drains. Per step:
+
+    1. admission — the scheduler packs suspended + queued jobs into group
+       engines, FIFO with head-of-line skip, under the chain-slot budget
+       (:func:`repro.launch.elastic.plan_chain_slots`);
+    2. one :meth:`GroupEngine.run_chunk` per engine — each a single jitted
+       call advancing every member ``chunk_size`` steps;
+    3. termination — every running job is checked against its
+       :class:`~repro.serve.job.TerminationPolicy`: the ``max_samples``
+       stop always, convergence (peeked split-R̂ / batch-means ESS —
+       non-destructive, so a peek never perturbs the chain) once
+       ``min_samples`` committed, throttled by ``check_every``. Retiring
+       jobs are evicted and finalized into
+       :class:`~repro.serve.results.JobResult`s whose contents are bitwise
+       the solo ``api.sample`` run's;
+    4. optionally, a checkpoint (``checkpoint_every`` steps).
+
+**Checkpoint/restore.** :meth:`checkpoint` snapshots every admitted job's
+lane trees (chain states with their iteration counters, chain keys,
+dataset, collector carries, fold counts) through
+:class:`repro.checkpoint.Checkpointer` — one atomic step directory — with
+the job registry (hyperparameters, policies, collector configs, progress)
+in the manifest's ``extra``. :meth:`Service.restore` reads the manifest
+FIRST (that is why ``Checkpointer.manifest`` exists), rebuilds the jobs,
+constructs the restore target from the engines' own lane-structure code
+(:meth:`GroupEngine.build_lane` on placeholder data — every value is then
+overwritten), and re-admits each job via ``admit_restored``. A restored
+job continues its exact solo trajectory — bitwise, because per-iteration
+keys derive from the checkpointed iteration counters (pinned in tests).
+
+**Device loss.** :meth:`handle_device_loss` is the elastic path:
+checkpoint, shrink the slot budget to the surviving devices
+(``plan_chain_slots``), suspend newest-first until occupancy fits, repack.
+Suspended jobs hold their lanes host-side and outrank the queue for freed
+slots; nothing loses committed work.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.api import collectors as collectors_lib
+from repro.launch import elastic
+from repro.serve import job as job_lib
+from repro.serve.engine import GroupEngine
+from repro.serve.results import JobHandle, JobResult, JobStatus, StreamUpdate
+from repro.serve.scheduler import Scheduler
+
+_JOB_META_FIELDS = (
+    "job_id", "family", "seed", "num_chains", "prior_scale", "xi",
+    "n_classes", "nu", "sigma", "kernel", "step_size", "q_db", "mode",
+    "resample_fraction", "capacity", "cand_capacity", "backend",
+    "z_backend", "adapt_target", "num_warmup",
+)
+
+
+def _collector_specs(colls: dict) -> list:
+    """JSON-able (name, class, config) triples — the checkpointable subset:
+    dataclass fields must be plain values (a collector closing over arrays
+    or callables, e.g. PosteriorPredictive, cannot ride in a manifest)."""
+    out = []
+    for name in sorted(colls):
+        col = colls[name]
+        fields = {}
+        if dataclasses.is_dataclass(col):
+            for f in dataclasses.fields(col):
+                v = getattr(col, f.name)
+                if callable(v) or hasattr(v, "shape"):
+                    raise ValueError(
+                        f"collector {name!r} ({type(col).__name__}) holds a "
+                        f"{'callable' if callable(v) else 'array'} field "
+                        f"{f.name!r} and cannot be checkpointed; drop it or "
+                        f"run the job without service checkpointing"
+                    )
+                fields[f.name] = v
+        out.append([name, type(col).__name__, fields])
+    return out
+
+
+def _collectors_from_specs(specs: list) -> dict:
+    return {
+        name: getattr(collectors_lib, cls)(**fields)
+        for name, cls, fields in specs
+    }
+
+
+def _finalize_lane_with(colls: dict, lane: dict) -> dict:
+    """Finalized {name: result} for a lane outside any engine (suspended/
+    cancelled jobs) — the same (K, ...)-carry finalize contract."""
+    return {
+        name: col.finalize(
+            jax.tree.map(lambda l: l[0], lane["carries"][name])
+        )
+        for name, col in colls.items()
+    }
+
+
+class Service:
+    def __init__(self, slot_budget: int | None = None, chunk_size: int = 64,
+                 lane_backend: str = "map", checkpointer=None,
+                 checkpoint_every: int | None = None):
+        if slot_budget is None:
+            slot_budget = elastic.plan_chain_slots(len(jax.devices()))
+        if chunk_size < 1:
+            raise ValueError("chunk_size must be >= 1")
+        self.chunk_size = int(chunk_size)
+        self.scheduler = Scheduler(slot_budget, lane_backend=lane_backend)
+        self.checkpointer = checkpointer
+        self.checkpoint_every = checkpoint_every
+        if checkpoint_every is not None and checkpointer is None:
+            raise ValueError("checkpoint_every needs a checkpointer")
+        self._jobs: dict[str, job_lib.Job] = {}
+        self._status: dict[str, JobStatus] = {}
+        self._results: dict[str, JobResult] = {}
+        self._chunks: dict[str, int] = {}   # chunks run, for check_every
+        self._stream: dict[str, tuple] = {}  # subscribed peek names
+        self._step_count = 0
+
+    # ---------------------------------------------------------------- submit
+
+    def submit(self, job: job_lib.Job, stream: tuple = ()) -> JobHandle:
+        """Queue a job; it joins a group at the next chunk boundary.
+        ``stream`` names collectors to peek into every StreamUpdate."""
+        if job.job_id in self._jobs:
+            raise ValueError(f"job id {job.job_id!r} already submitted")
+        if job.num_chains > self.scheduler.slot_budget:
+            raise ValueError(
+                f"job {job.job_id!r} needs {job.num_chains} chain slots; "
+                f"the service budget is {self.scheduler.slot_budget}"
+            )
+        unknown = set(stream) - set(job.collectors)
+        if unknown:
+            raise ValueError(f"stream names {sorted(unknown)} are not "
+                             f"collectors of job {job.job_id!r}")
+        self._jobs[job.job_id] = job
+        self._status[job.job_id] = JobStatus.QUEUED
+        self._chunks[job.job_id] = 0
+        self._stream[job.job_id] = tuple(stream)
+        self.scheduler.enqueue(job)
+        return JobHandle(self, job.job_id)
+
+    # --------------------------------------------------------------- queries
+
+    def status(self, job_id: str) -> JobStatus:
+        return self._status[job_id]
+
+    def committed(self, job_id: str) -> int:
+        st = self._status[job_id]
+        if st is JobStatus.RUNNING:
+            return self.scheduler.engine_of(job_id).committed(job_id)
+        if st is JobStatus.SUSPENDED:
+            _, lane, _ = self.scheduler.suspended[job_id]
+            return int(jax.device_get(lane["counts"][0]))
+        if st in (JobStatus.DONE, JobStatus.CANCELLED):
+            return self._results[job_id].committed
+        return 0
+
+    def peek(self, job_id: str, name: str):
+        if self._status[job_id] is not JobStatus.RUNNING:
+            raise ValueError(f"job {job_id!r} is not running "
+                             f"({self._status[job_id].value})")
+        return self.scheduler.engine_of(job_id).peek(job_id, name)
+
+    def result(self, job_id: str) -> JobResult | None:
+        return self._results.get(job_id)
+
+    def active(self) -> bool:
+        return any(
+            s in (JobStatus.QUEUED, JobStatus.RUNNING, JobStatus.SUSPENDED)
+            for s in self._status.values()
+        )
+
+    # ---------------------------------------------------------------- cancel
+
+    def cancel(self, job_id: str) -> bool:
+        """Stop a job at the current boundary; partial results are
+        finalized (committed prefix only). Safe in any state."""
+        st = self._status[job_id]
+        job = self._jobs[job_id]
+        if st is JobStatus.QUEUED:
+            self.scheduler.queue = [
+                j for j in self.scheduler.queue if j.job_id != job_id
+            ]
+            self._retire(job_id, {}, 0, "cancelled")
+            return True
+        if st is JobStatus.RUNNING:
+            eng, lane = self.scheduler.evict(job_id)
+            n = int(jax.device_get(lane["counts"][0]))
+            self._retire(job_id, eng.finalize_lane(lane), n, "cancelled")
+            return True
+        if st is JobStatus.SUSPENDED:
+            _, lane, _ = self.scheduler.suspended.pop(job_id)
+            n = int(jax.device_get(lane["counts"][0]))
+            self._retire(job_id, _finalize_lane_with(job.collectors, lane),
+                         n, "cancelled")
+            return True
+        return False  # already DONE/CANCELLED
+
+    def _retire(self, job_id: str, results: dict, committed: int,
+                reason: str):
+        self._results[job_id] = JobResult(
+            job_id=job_id, results=results, committed=committed,
+            reason=reason,
+        )
+        self._status[job_id] = (
+            JobStatus.CANCELLED if reason == "cancelled" else JobStatus.DONE
+        )
+
+    # ------------------------------------------------------------ scheduling
+
+    def _stop_reason(self, job: job_lib.Job, eng: GroupEngine,
+                     committed: int):
+        """(reason | None, peeks-consumed): the TerminationPolicy check."""
+        p = job.policy
+        if committed >= p.max_samples:
+            return "max_samples", {}
+        if p.target_rhat is None and p.min_ess is None:
+            return None, {}
+        if committed < max(p.min_samples, 1):
+            return None, {}
+        if self._chunks[job.job_id] % p.check_every:
+            return None, {}
+        peeks, ok = {}, True
+        if p.target_rhat is not None:
+            r = peeks["rhat"] = eng.peek(job.job_id, "rhat")
+            ok = ok and (r["r_hat"] <= p.target_rhat)
+        if p.min_ess is not None:
+            e = peeks["ess"] = eng.peek(job.job_id, "ess")
+            ess = np.asarray(e["ess"], dtype=np.float64)
+            total = float(np.nansum(ess)) if np.isfinite(ess).any() else 0.0
+            ok = ok and (total >= p.min_ess)
+        return ("converged" if ok else None), peeks
+
+    def step(self) -> list[StreamUpdate]:
+        """One service round: admit → chunk every group → check termination
+        → (maybe) checkpoint. Returns this boundary's stream updates."""
+        for job_id in self.scheduler.admit_pending():
+            self._status[job_id] = JobStatus.RUNNING
+        updates = []
+        for eng in list(self.scheduler.engines.values()):
+            eng.run_chunk(self.chunk_size)
+            for job_id in eng.job_ids:
+                self._chunks[job_id] += 1
+            for job_id in list(eng.job_ids):
+                job = self._jobs[job_id]
+                committed = eng.committed(job_id)
+                reason, peeks = self._stop_reason(job, eng, committed)
+                for name in self._stream[job_id]:
+                    if name not in peeks:
+                        peeks[name] = eng.peek(job_id, name)
+                if reason is not None:
+                    _, lane = self.scheduler.evict(job_id)
+                    self._retire(job_id, eng.finalize_lane(lane),
+                                 committed, reason)
+                updates.append(StreamUpdate(
+                    job_id=job_id, committed=committed, peeks=peeks,
+                    done=reason is not None, reason=reason,
+                ))
+        self._step_count += 1
+        if (self.checkpoint_every
+                and self._step_count % self.checkpoint_every == 0
+                and (self.scheduler.engines or self.scheduler.suspended)):
+            self.checkpoint()
+        return updates
+
+    def run(self, on_update=None, max_steps: int | None = None) -> dict:
+        """Step until every submitted job retires; returns
+        ``{job_id: JobResult}``. ``on_update`` sees every StreamUpdate."""
+        steps = 0
+        while self.active():
+            if max_steps is not None and steps >= max_steps:
+                raise RuntimeError(f"run() did not drain in {max_steps} steps")
+            before = self._progress_mark()
+            for u in self.step():
+                if on_update is not None:
+                    on_update(u)
+            steps += 1
+            if not self.scheduler.engines and self._progress_mark() == before:
+                raise RuntimeError(
+                    "service stalled: queued/suspended jobs cannot fit the "
+                    f"slot budget ({self.scheduler.slot_budget})"
+                )
+        return dict(self._results)
+
+    def _progress_mark(self):
+        return (len(self._results), len(self.scheduler.queue),
+                len(self.scheduler.suspended),
+                len(self.scheduler.engines))
+
+    # ------------------------------------------------------------ checkpoint
+
+    def checkpoint(self, blocking: bool = True):
+        """One atomic checkpoint of every admitted (running or suspended)
+        job: lane trees as array leaves, the job registry + progress in the
+        manifest ``extra``. Queued jobs are not yet state — clients
+        resubmit them after a restart."""
+        if self.checkpointer is None:
+            raise ValueError("service has no checkpointer")
+        tree, jobs_meta = {}, {}
+        for eng in self.scheduler.engines.values():
+            for job_id in eng.job_ids:
+                tree[job_id] = eng.lane_of(job_id)
+                jobs_meta[job_id] = self._job_meta(
+                    self._jobs[job_id], (eng.capacity, eng.cand_capacity)
+                )
+        for job_id, (job, lane, caps) in self.scheduler.suspended.items():
+            tree[job_id] = lane
+            jobs_meta[job_id] = self._job_meta(job, caps)
+        self.checkpointer.save(
+            self._step_count, tree,
+            extra_metadata={
+                "serve": {
+                    "jobs": jobs_meta,
+                    "slot_budget": self.scheduler.slot_budget,
+                    "chunk_size": self.chunk_size,
+                    "step_count": self._step_count,
+                }
+            },
+            blocking=blocking,
+        )
+
+    def _job_meta(self, job: job_lib.Job, caps: tuple) -> dict:
+        meta = {f: getattr(job, f) for f in _JOB_META_FIELDS}
+        meta["policy"] = dataclasses.asdict(job.policy)
+        meta["collectors"] = _collector_specs(job.collectors)
+        meta["group_caps"] = list(caps)
+        meta["chunks"] = self._chunks[job.job_id]
+        meta["stream"] = list(self._stream[job.job_id])
+        return meta
+
+    @classmethod
+    def restore(cls, checkpointer, step: int | None = None,
+                slot_budget: int | None = None, chunk_size: int | None = None,
+                lane_backend: str = "map", checkpoint_every=None):
+        """Rebuild a service from a checkpoint; every restored job resumes
+        its exact chain (bitwise — the states carry their iteration
+        counters, the keys their original chain keys). Restored jobs enter
+        SUSPENDED and repack on the first :meth:`step`."""
+        man = checkpointer.manifest(step)
+        serve = man["extra"]["serve"]
+        svc = cls(
+            slot_budget=(serve["slot_budget"] if slot_budget is None
+                         else slot_budget),
+            chunk_size=(serve["chunk_size"] if chunk_size is None
+                        else chunk_size),
+            lane_backend=lane_backend, checkpointer=checkpointer,
+            checkpoint_every=checkpoint_every,
+        )
+        svc._step_count = serve["step_count"]
+        # Build the restore target from the engines' own lane-structure
+        # code, on placeholder jobs with zero datasets of the saved shapes
+        # (the manifest records every leaf's shape) — Checkpointer.restore
+        # then overwrites every value and validates shapes leaf-by-leaf.
+        leaf_shapes = {
+            m["path"]: (tuple(m["shape"]), m["dtype"]) for m in man["leaves"]
+        }
+        target, jobs, caps_of = {}, {}, {}
+        for job_id, meta in serve["jobs"].items():
+            data = _placeholder_data(job_id, meta, leaf_shapes)
+            job = job_lib.Job(
+                data=data,
+                policy=job_lib.TerminationPolicy(**meta["policy"]),
+                collectors=_collectors_from_specs(meta["collectors"]),
+                **{f: meta[f] for f in _JOB_META_FIELDS},
+            )
+            caps = tuple(meta["group_caps"])
+            skeleton = GroupEngine(job, capacity=caps[0],
+                                   cand_capacity=caps[1])
+            target[job_id], _ = skeleton.build_lane(job)
+            jobs[job_id], caps_of[job_id] = job, caps
+        restored, _ = checkpointer.restore(target, step)
+        for job_id, meta in serve["jobs"].items():
+            lane = restored[job_id]
+            job = dataclasses.replace(
+                jobs[job_id],
+                data=jax.tree.map(lambda l: l[0], lane["data"]),
+            )
+            svc._jobs[job_id] = job
+            svc._status[job_id] = JobStatus.SUSPENDED
+            svc._chunks[job_id] = meta["chunks"]
+            svc._stream[job_id] = tuple(meta["stream"])
+            svc.scheduler.suspended[job_id] = (job, lane, caps_of[job_id])
+        return svc
+
+    # --------------------------------------------------------- device loss
+
+    def handle_device_loss(self, n_devices: int,
+                           slots_per_device: int = 8) -> list[str]:
+        """The elastic response: checkpoint (when configured), shrink the
+        slot budget to the surviving devices, suspend newest-first until
+        occupancy fits, repack what still fits. Returns the ids suspended
+        by the shrink (they outrank the queue for future slots)."""
+        budget = elastic.plan_chain_slots(n_devices, slots_per_device)
+        if self.checkpointer is not None:
+            self.checkpoint()
+        suspended = self.scheduler.shrink_to_budget(budget)
+        for job_id in suspended:
+            self._status[job_id] = JobStatus.SUSPENDED
+        for job_id in self.scheduler.admit_pending():
+            self._status[job_id] = JobStatus.RUNNING
+        return suspended
+
+
+def _placeholder_data(job_id: str, meta: dict, leaf_shapes: dict):
+    """Zeros GLMData with the checkpointed lane's shapes (sans the lane
+    axis) — enough structure to rebuild the Job and the restore target."""
+    import jax.numpy as jnp
+
+    from repro.core.bounds import GLMData
+
+    leaves = {}
+    for field in ("x", "t", "xi"):
+        path = f"['{job_id}']['data'].{field}"
+        if path not in leaf_shapes:
+            raise KeyError(f"checkpoint missing {path}")
+        shape, dtype = leaf_shapes[path]
+        leaves[field] = jnp.zeros(shape[1:], dtype)
+    return GLMData(**leaves)

@@ -51,6 +51,28 @@ def test_gc_keeps_last_k(tmp_path):
     assert ck.all_steps() == [3, 4]
 
 
+def test_keep_last_alias_and_zero_disables_gc(tmp_path):
+    ck = Checkpointer(Path(tmp_path) / "a", keep_last=1)
+    for s in (1, 2, 3):
+        ck.save(s, _tree(s), blocking=True)
+    assert ck.all_steps() == [3]
+    ck0 = Checkpointer(Path(tmp_path) / "b", keep_last=0)
+    for s in (1, 2, 3):
+        ck0.save(s, _tree(s), blocking=True)
+    assert ck0.all_steps() == [1, 2, 3]
+
+
+def test_startup_sweeps_stale_tmp_dirs(tmp_path):
+    ck = Checkpointer(tmp_path)
+    ck.save(3, _tree(), blocking=True)
+    stale = Path(tmp_path) / "step_00000009.tmp"
+    stale.mkdir()
+    (stale / "leaf_0000.npy").write_bytes(b"garbage")
+    ck2 = Checkpointer(tmp_path)  # a restarted process
+    assert not stale.exists()
+    assert ck2.all_steps() == [3]
+
+
 def test_partial_write_is_invisible(tmp_path):
     ck = Checkpointer(tmp_path)
     ck.save(5, _tree(), blocking=True)
@@ -101,3 +123,49 @@ def test_flymc_chain_resume_is_exact(tmp_path):
         s2, _ = flymc.flymc_step(spec, model.data, model.stats, s2)
         out.append(np.asarray(s2.sampler.theta))
     np.testing.assert_array_equal(np.stack(ref[15:]), np.stack(out))
+
+
+def _tiny_firefly():
+    """Deliberately undersized buffers: the init grow loop takes capacity
+    8 → 32 before the first sample, so every checkpoint of this chain holds
+    an overflow-grown state — larger than anything a fresh build has."""
+    from repro import api
+
+    data = logistic_data(jax.random.key(0), n=150, d=3)
+    model = GLMModel.logistic(data, prior_scale=2.0)
+    return api.firefly(model, kernel="rwmh", capacity=8, cand_capacity=8,
+                       q_db=0.1, resample_fraction=0.5, num_warmup=5)
+
+
+@pytest.mark.parametrize("num_chains", [1, 2])
+def test_driver_checkpoint_roundtrip_is_bitwise(tmp_path, num_chains):
+    """Checkpointer round trip at the api.sample level: run half, save the
+    final_state, restore it into a FRESHLY BUILT algorithm (capacity 8 —
+    the saved buffers are overflow-grown to 32, so the driver must
+    normalize the algorithm up to the state's capacity), resume with
+    ``init_state``. θ of (half + resumed half) is bitwise the
+    uninterrupted run's."""
+    from repro import api
+
+    key = jax.random.key(1)
+    k_steps = jax.random.split(key)[1]  # resume passes the chain key
+    full = api.sample(_tiny_firefly(), key, 40, chunk_size=10,
+                      num_chains=num_chains)
+    half = api.sample(_tiny_firefly(), key, 20, chunk_size=10,
+                      num_chains=num_chains)
+    assert half.final_state.sampler.aux.shape[-1] > 8  # overflow-grown
+
+    ck = Checkpointer(tmp_path)
+    ck.save(20, half.final_state._asdict(), blocking=True)
+    restored, _ = ck.restore(
+        jax.tree.map(jnp.zeros_like, half.final_state._asdict())
+    )
+    resumed = api.sample(_tiny_firefly(), k_steps, 20, chunk_size=10,
+                         num_chains=num_chains,
+                         init_state=flymc.FlyMCState(**restored))
+    np.testing.assert_array_equal(
+        np.asarray(full.theta[:, :20]), np.asarray(half.theta)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(full.theta[:, 20:]), np.asarray(resumed.theta)
+    )

@@ -321,7 +321,10 @@ def test_collectors_only_chunk_traces_no_num_samples_buffer(model, alg):
 
     # the chain scan emits chunk-local O(cs) outputs regardless of collectors
     scan = driver_lib._make_scan_fn(alg, False, cs)
-    scan_jaxpr = jax.make_jaxpr(scan)(state, jax.random.key(1), jnp.int32(0))
+    operands = (alg.data, alg.stats) if driver_lib._threads_data(alg) else ()
+    scan_jaxpr = jax.make_jaxpr(scan)(
+        state, jax.random.key(1), jnp.int32(0), *operands
+    )
     assert _max_dim(scan_jaxpr.jaxpr) < num_samples
 
     # a collectors-only fold carries nothing O(num_samples) either
@@ -333,13 +336,13 @@ def test_collectors_only_chunk_traces_no_num_samples_buffer(model, alg):
         n: c.init(num_samples, pos_struct, stats_struct)
         for n, c in colls.items()
     }
-    fold = driver_lib._make_fold_fn(colls, False)
+    fold = driver_lib.make_collector_fold(colls, False)
     jaxpr = jax.make_jaxpr(fold)(carries, pos, infos)
     assert _max_dim(jaxpr.jaxpr) < num_samples
 
     full = {"full": api.FullTrace()}
     carries_f = {"full": full["full"].init(num_samples, pos_struct, stats_struct)}
-    fold_f = driver_lib._make_fold_fn(full, False)
+    fold_f = driver_lib.make_collector_fold(full, False)
     jaxpr_f = jax.make_jaxpr(fold_f)(carries_f, pos, infos)
     assert _max_dim(jaxpr_f.jaxpr) >= num_samples  # the detector is real
 
@@ -393,3 +396,100 @@ def test_collectors_work_with_regular_mcmc(model):
     assert tr.results["q"] == 40 * N
     assert tr.results["m"]["mean"].shape == (1, D)
     assert "cov" not in tr.results["m"]
+
+
+# ---------------------------------------------------------------------------
+# Chunk-boundary peeks (the serve streaming contract)
+# ---------------------------------------------------------------------------
+
+
+def _eq_trees(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@pytest.mark.parametrize("num_chains", [1, 2])
+def test_peek_then_continue_is_bitwise(model, alg, num_chains):
+    """Peeking EVERY built-in collector at EVERY chunk boundary leaves the
+    run bitwise identical to one that never peeked — peek finalizes a deep
+    copy, so neither the carry values nor the donated-buffer aliasing are
+    disturbed. This is what makes serve-side streaming free."""
+    num_samples, cs = 48, 16
+    ref = api.sample(
+        alg, jax.random.key(3), num_samples, chunk_size=cs,
+        num_chains=num_chains, collectors=_all_builtins(model),
+    )
+    peeked = {}
+
+    def hook(ev):
+        peeked[ev.committed] = {n: ev.peek(n) for n in _all_builtins(model)}
+        return False
+
+    tr = api.sample(
+        alg, jax.random.key(3), num_samples, chunk_size=cs,
+        num_chains=num_chains, collectors=_all_builtins(model),
+        on_chunk=hook,
+    )
+    assert sorted(peeked) == [16, 32, 48]  # every boundary peeked
+    for name in ref.results:
+        _eq_trees(ref.results[name], tr.results[name])
+
+
+def test_final_boundary_peek_matches_finalize(model, alg):
+    """At the last boundary a peek IS the result: identical values for
+    every collector (R̂'s mid-run monitor pools full-length splits there,
+    so even its guarded path lands on the finalize value)."""
+    num_samples, cs = 48, 16
+    last = {}
+
+    def hook(ev):
+        if ev.committed == num_samples:
+            last.update({n: ev.peek(n) for n in _all_builtins(model)})
+        return False
+
+    tr = api.sample(
+        alg, jax.random.key(3), num_samples, chunk_size=cs,
+        collectors=_all_builtins(model), on_chunk=hook,
+    )
+    for name, res in tr.results.items():
+        got = last[name]
+        if isinstance(res, dict) and isinstance(got, dict):
+            common = set(res) & set(got)
+            assert common  # peek may add keys (e.g. splits_used), not drop
+            res = {k: res[k] for k in common if res[k] is not None}
+            got = {k: got[k] for k in common if got[k] is not None}
+        _eq_trees(res, got)
+
+
+def test_peek_result_never_aliases_live_carry(model, alg):
+    """Mutating a peeked FullTrace buffer in place must not leak into the
+    run's final results — the peek contract is copy-on-read."""
+    num_samples, cs = 32, 16
+    grabbed = []
+
+    def hook(ev):
+        if ev.committed == cs:
+            pk = ev.peek("full")
+            pk["theta"].block_until_ready()
+            # numpy view of the device buffer would be unsafe to write; the
+            # contract is stronger: the peeked arrays are fresh buffers, so
+            # even deleting them cannot perturb the carry.
+            grabbed.append(jax.tree.map(np.asarray, pk))
+        return False
+
+    ref = api.sample(
+        alg, jax.random.key(5), num_samples, chunk_size=cs,
+        collectors={"full": api.FullTrace()},
+    )
+    tr = api.sample(
+        alg, jax.random.key(5), num_samples, chunk_size=cs,
+        collectors={"full": api.FullTrace()}, on_chunk=hook,
+    )
+    _eq_trees(ref.results["full"], tr.results["full"])
+    # the peek saw exactly the first chunk's committed prefix
+    np.testing.assert_array_equal(
+        grabbed[0]["theta"][:, :cs],
+        np.asarray(ref.results["full"]["theta"][:, :cs]),
+    )

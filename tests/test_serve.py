@@ -1,0 +1,319 @@
+"""Exactness pins for the posterior-sampling service (:mod:`repro.serve`).
+
+The contract under test: a job's sampled trajectory — θ trace, per-step
+stats, every collector result — is bitwise identical to a solo
+``api.sample`` run with the same seed, REGARDLESS of how the service packs
+it: which neighbors share its group engine, jobs joining or leaving
+between chunks, a neighbor auto-terminating mid-flight, a checkpoint/
+restore cycle, or a device-loss suspend/resume. Packing is performance
+geometry, never statistics.
+
+The workload comes from :func:`benchmarks._util.job_mix` — the same mix
+the serving benchmark times and the example streams, shrunk to test sizes.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks._util import job_mix
+from repro import api
+from repro.api import collectors as C
+from repro.checkpoint import Checkpointer
+from repro.data.synthetic import logistic_data
+from repro.serve import (
+    GroupEngine,
+    Job,
+    JobStatus,
+    Service,
+    TerminationPolicy,
+    group_key,
+)
+from repro.serve import job as job_lib
+
+jax.config.update("jax_platform_name", "cpu")
+
+CHUNK = 16
+MAX = 48
+N, D = 96, 5
+WARM = 10
+
+
+def _mix():
+    """The shared 5-kind workload at test sizes, fixed length (no auto-
+    termination) so every job has a full-length solo reference."""
+    return job_mix(0, 5, n=N, d=D, max_samples=MAX, num_warmup=WARM,
+                   auto_terminate=False)
+
+
+def _solo(job, on_chunk=None):
+    """The reference: one plain api.sample run of the job, same seed/chunk
+    discipline, fresh default collectors."""
+    alg = job_lib.build_algorithm(job)
+    tr = api.sample(
+        alg, jax.random.key(job.seed), job.policy.max_samples,
+        num_chains=job.num_chains, chunk_size=CHUNK,
+        collectors={"trace": C.FullTrace(), "rhat": C.RHat()},
+        on_chunk=on_chunk,
+    )
+    return tr.results
+
+
+def _eq(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(la, lb)
+    )
+
+
+@pytest.fixture(scope="module")
+def solo_refs():
+    """Solo results for the shared mix, computed once per module."""
+    return {j.job_id: _solo(j) for j in _mix()}
+
+
+def _logistic_job(i, *, num_chains=1, policy=None, seed=None):
+    return Job(
+        job_id=f"log{i}", family="logistic",
+        data=logistic_data(jax.random.key(100 + i), n=N, d=D),
+        seed=(7 * i + 1 if seed is None else seed), num_chains=num_chains,
+        capacity=32, cand_capacity=32, num_warmup=WARM,
+        policy=policy or TerminationPolicy(max_samples=MAX),
+    )
+
+
+# ---------------------------------------------------------------- packing
+
+
+def test_mixed_mix_bitwise_vs_solo(solo_refs):
+    """Every job of the heterogeneous mix — K=1 and K=2, three GLM
+    families, packed into shared group engines — retires with results
+    bitwise equal to its solo run."""
+    svc = Service(slot_budget=16, chunk_size=CHUNK)
+    for j in _mix():
+        svc.submit(j)
+    res = svc.run(max_steps=MAX // CHUNK + 4)
+    assert len(svc.scheduler.engines) == 0
+    for job_id, ref in solo_refs.items():
+        r = res[job_id]
+        assert r.reason == "max_samples"
+        assert r.committed == MAX
+        assert _eq(r.results["trace"], ref["trace"]), job_id
+        assert _eq(r.results["rhat"], ref["rhat"]), job_id
+
+
+def test_join_between_chunks_is_bitwise_invisible(solo_refs):
+    """Continuous batching: a job joining a running group mid-flight
+    neither perturbs the incumbents nor loses its own solo trajectory."""
+    jobs = {j.job_id: j for j in _mix()}
+    late_ids = [i for i in jobs if i.startswith(("softmax", "robust"))]
+    svc = Service(slot_budget=16, chunk_size=CHUNK)
+    for job_id, j in jobs.items():
+        if job_id not in late_ids:
+            svc.submit(j)
+    svc.step()  # incumbents commit one chunk
+    for job_id in late_ids:
+        svc.submit(jobs[job_id])
+    res = svc.run(max_steps=MAX // CHUNK + 4)
+    for job_id, ref in solo_refs.items():
+        assert _eq(res[job_id].results["trace"], ref["trace"]), job_id
+
+
+def test_same_group_jobs_share_one_engine():
+    jobs = [_logistic_job(i) for i in range(3)]
+    assert len({group_key(j) for j in jobs}) == 1
+    svc = Service(slot_budget=8, chunk_size=CHUNK)
+    for j in jobs:
+        svc.submit(j)
+    svc.step()
+    assert len(svc.scheduler.engines) == 1
+    (eng,) = svc.scheduler.engines.values()
+    assert sorted(eng.job_ids) == sorted(j.job_id for j in jobs)
+    assert eng.num_slots == 3
+
+
+def test_auto_terminated_neighbor_leaves_others_bitwise():
+    """A converging job leaving its group early must not shift a single
+    bit of its fixed-length neighbors — and its own committed prefix is
+    the solo run's prefix."""
+    fixed = [_logistic_job(i) for i in range(2)]
+    conv = _logistic_job(
+        9,
+        policy=TerminationPolicy(
+            max_samples=MAX, min_samples=CHUNK, target_rhat=50.0,
+        ),
+    )
+    assert group_key(conv) == group_key(fixed[0])  # same engine
+    svc = Service(slot_budget=8, chunk_size=CHUNK)
+    for j in (*fixed, conv):
+        svc.submit(j)
+    res = svc.run(max_steps=MAX // CHUNK + 4)
+
+    r = res[conv.job_id]
+    assert r.reason == "converged"
+    assert CHUNK <= r.committed < MAX
+    solo_conv = _solo(conv)
+    np.testing.assert_array_equal(
+        np.asarray(r.samples()),
+        np.asarray(solo_conv["trace"]["theta"][:, : r.committed]),
+    )
+    for j in fixed:
+        assert res[j.job_id].committed == MAX
+        assert _eq(res[j.job_id].results["trace"], _solo(j)["trace"])
+
+
+# ------------------------------------------------------------- streaming
+
+
+def test_peek_matches_solo_on_chunk_peek():
+    """Service-side peeks ARE the driver's chunk-boundary peeks: the R̂
+    peeked from a running group at committed==2·CHUNK equals the solo
+    run's ``event.peek`` at the same boundary, bit for bit — and peeking
+    does not perturb the final results."""
+    job = _logistic_job(4, num_chains=2)
+    svc = Service(slot_budget=8, chunk_size=CHUNK)
+    svc.submit(job)
+    svc.step()
+    svc.step()
+    assert svc.committed(job.job_id) == 2 * CHUNK
+    served = svc.peek(job.job_id, "rhat")
+
+    captured = {}
+
+    def hook(ev):
+        if ev.committed == 2 * CHUNK:
+            captured["rhat"] = ev.peek("rhat")
+        return False
+
+    ref = _solo(job, on_chunk=hook)
+    assert _eq(served, captured["rhat"])
+    res = svc.run(max_steps=MAX // CHUNK + 2)
+    assert _eq(res[job.job_id].results["trace"], ref["trace"])
+
+
+def test_stream_updates_arrive_each_boundary():
+    job = _logistic_job(5)
+    svc = Service(slot_budget=4, chunk_size=CHUNK)
+    svc.submit(job, stream=("rhat",))
+    seen = []
+    svc.run(on_update=seen.append, max_steps=MAX // CHUNK + 2)
+    assert [u.committed for u in seen] == [CHUNK, 2 * CHUNK, 3 * CHUNK]
+    assert all("rhat" in u.peeks for u in seen)
+    assert [u.done for u in seen] == [False, False, True]
+    assert seen[-1].reason == "max_samples"
+
+
+# ---------------------------------------------------- checkpoint / elastic
+
+
+def test_checkpoint_restore_continues_bitwise(tmp_path, solo_refs):
+    """Kill the service after one chunk, restore from the checkpoint
+    alone (datasets travel in the checkpoint), drain — every job's
+    results are still bitwise the solo run's."""
+    svc = Service(slot_budget=16, chunk_size=CHUNK)
+    for j in _mix():
+        svc.submit(j)
+    svc.step()
+    ck = Checkpointer(str(tmp_path), keep_last=2)
+    svc.checkpointer = ck
+    svc.checkpoint()
+    del svc
+
+    svc2 = Service.restore(ck)
+    for job_id in solo_refs:
+        assert svc2.status(job_id) is JobStatus.SUSPENDED
+        assert svc2.committed(job_id) == CHUNK
+    res = svc2.run(max_steps=MAX // CHUNK + 4)
+    for job_id, ref in solo_refs.items():
+        assert res[job_id].committed == MAX
+        assert _eq(res[job_id].results["trace"], ref["trace"]), job_id
+        assert _eq(res[job_id].results["rhat"], ref["rhat"]), job_id
+
+
+def test_device_loss_suspend_resume_bitwise(solo_refs):
+    """Shrinking the slot budget mid-flight suspends the newest jobs;
+    they drain later, time-sliced through the reduced budget, every
+    trajectory still bitwise solo."""
+    svc = Service(slot_budget=16, chunk_size=CHUNK)
+    for j in _mix():
+        svc.submit(j)
+    svc.step()
+    suspended = svc.handle_device_loss(n_devices=1, slots_per_device=2)
+    assert svc.scheduler.slot_budget == 2
+    assert suspended  # the mix needs 7 slots, so some jobs must yield
+    for job_id in suspended:
+        assert svc.status(job_id) is JobStatus.SUSPENDED
+    res = svc.run(max_steps=12 * (MAX // CHUNK + 4))
+    for job_id, ref in solo_refs.items():
+        assert _eq(res[job_id].results["trace"], ref["trace"]), job_id
+
+
+# ----------------------------------------------------------- service edges
+
+
+def test_cancel_returns_committed_prefix():
+    jobs = [_logistic_job(i) for i in range(2)]
+    svc = Service(slot_budget=8, chunk_size=CHUNK)
+    for j in jobs:
+        svc.submit(j)
+    svc.step()
+    assert svc.cancel(jobs[0].job_id)
+    r = svc.result(jobs[0].job_id)
+    assert svc.status(jobs[0].job_id) is JobStatus.CANCELLED
+    assert r.reason == "cancelled" and r.committed == CHUNK
+    np.testing.assert_array_equal(
+        np.asarray(r.samples()),
+        np.asarray(_solo(jobs[0])["trace"]["theta"][:, :CHUNK]),
+    )
+    assert not svc.cancel(jobs[0].job_id)  # idempotent on retired jobs
+    res = svc.run(max_steps=MAX // CHUNK + 2)  # the survivor drains
+    assert res[jobs[1].job_id].reason == "max_samples"
+
+
+def test_submit_validation():
+    svc = Service(slot_budget=2, chunk_size=CHUNK)
+    job = _logistic_job(0)
+    svc.submit(job)
+    with pytest.raises(ValueError, match="already submitted"):
+        svc.submit(_logistic_job(0))
+    with pytest.raises(ValueError, match="chain slots"):
+        svc.submit(_logistic_job(1, num_chains=4))
+    with pytest.raises(ValueError, match="not\\s+collectors"):
+        svc.submit(_logistic_job(2), stream=("nope",))
+
+
+def test_lane_backend_default_is_map():
+    """lax.map over lanes is the exactness-bearing default — vmap is the
+    opt-in fast path. Pinned so a perf patch cannot silently flip it."""
+    import inspect
+
+    sig = inspect.signature(GroupEngine.__init__)
+    assert sig.parameters["lane_backend"].default == "map"
+    svc = Service(slot_budget=4)
+    assert svc.scheduler.lane_backend == "map"
+
+
+def test_job_validation():
+    with pytest.raises(ValueError):
+        _logistic_job(0, policy=TerminationPolicy(max_samples=0))
+    with pytest.raises(ValueError):
+        dataclasses.replace(_logistic_job(0), num_chains=0)
+    with pytest.raises(ValueError):
+        dataclasses.replace(_logistic_job(0), family="nope")
+
+
+def test_group_key_separates_incompatible_jobs():
+    base = _logistic_job(0)
+    assert group_key(base) == group_key(_logistic_job(1))
+    assert group_key(base) != group_key(_logistic_job(2, num_chains=2))
+    assert group_key(base) != group_key(
+        _logistic_job(3, policy=TerminationPolicy(max_samples=2 * MAX))
+    )
+    small = dataclasses.replace(
+        base, job_id="small",
+        data=jax.tree.map(lambda l: l[: N // 2], base.data),
+    )
+    assert group_key(base) != group_key(small)
