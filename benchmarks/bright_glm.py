@@ -24,7 +24,7 @@ import jax
 from benchmarks._util import BENCH_PATH, best_of, merge_write, quickstart_problem
 from repro import api
 from repro.core import brightness, flymc
-from repro.kernels.bright_glm.ops import default_interpret
+from repro.kernels.common import default_interpret
 
 
 def _bytes_model(n_bright_cap: int, d: int, dp: int) -> dict:

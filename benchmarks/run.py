@@ -118,6 +118,20 @@ def main() -> None:
         f"bitwise={vrec['fixed_length_results_bitwise_equal']}"
     )
 
+    # --- static analysis: cost fingerprints of every hot-path jit ----------
+    from benchmarks.static_analysis import main as bench_static
+
+    arec = bench_static(quick=args.quick)
+    worst_rng = max(
+        e["max_rng_size"] for name, e in arec["entry_points"].items()
+        if name != "step.jnp"  # the registered known-bad engine
+    )
+    rows.append(
+        f"static_analysis/sweep,0.0,"
+        f"ok={arec['ok']};entry_points={len(arec['entry_points'])};"
+        f"worst_fused_rng={worst_rng}"
+    )
+
     # --- §3.1 bound tightness ---------------------------------------------
     bt = check_paper_claim()
     print(

@@ -11,7 +11,6 @@ token subset pays a likelihood evaluation per iteration.
 import argparse
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro import api

@@ -1,0 +1,48 @@
+"""repro.analysis — a jaxpr-level exactness & cost linter for hot-path jits.
+
+FlyMC's value proposition is *exactness at subset cost*; both halves are
+invariants of traced programs, so both are checkable statically. This
+package is the rule engine that checks them:
+
+* :mod:`repro.analysis.walker` — recursive jaxpr traversal (scan/while/
+  cond/pjit bodies and Pallas inner jaxprs), the shared substrate the
+  tests' former ad-hoc ``_walk_eqns`` helpers migrated onto;
+* :mod:`repro.analysis.rules` — the five rules (cost-model,
+  closure-constant, rng-lineage, capacity-independence, donation) and the
+  :func:`check` library API;
+* :mod:`repro.analysis.report` — Finding / Report / Summary with
+  first-class expected-fail semantics;
+* :mod:`repro.analysis.registry` — the registered hot-path entry points,
+  swept by ``python -m repro.analysis`` and gated by the
+  ``static-analysis`` CI lane.
+
+Library use::
+
+    from repro import analysis
+    report = analysis.check(
+        alg.step_data, key, state, alg.data, alg.stats,
+        rules=[analysis.CostModelRule(n=N)], name="my.step",
+    )
+    assert report.ok, "\\n".join(map(str, report.findings))
+"""
+
+from repro.analysis import walker  # noqa: F401
+from repro.analysis.report import Finding, Report, Summary  # noqa: F401
+from repro.analysis.rules import (  # noqa: F401
+    CapacityIndependenceRule,
+    ClosureConstRule,
+    Context,
+    CostModelRule,
+    DonationRule,
+    RngLineageRule,
+    Rule,
+    check,
+)
+
+
+def run_registry(names=None):
+    """Sweep the registered entry points (lazy import: registry construction
+    touches api/serve/distributed, which library users may not need)."""
+    from repro.analysis import registry
+
+    return registry.run_registry(names)

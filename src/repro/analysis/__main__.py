@@ -1,0 +1,59 @@
+"""``python -m repro.analysis`` — sweep the registered hot-path entry points.
+
+Prints the per-entry-point rule table and exits nonzero on any regression:
+an unexpected finding, OR an expected-fail rule that went quiet (the jnp
+engine passing cost-model would mean the detector is blind). ``--json``
+emits the same record ``benchmarks/run.py`` stores under
+``static_analysis`` in ``BENCH_flymc.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.analysis import registry
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static exactness & cost sweep over registered jits",
+    )
+    parser.add_argument(
+        "names", nargs="*",
+        help="entry points to sweep (default: all registered)",
+    )
+    parser.add_argument("--list", action="store_true",
+                        help="list registered entry points and exit")
+    parser.add_argument("--json", action="store_true",
+                        help="emit the sweep record as JSON")
+    args = parser.parse_args(argv)
+
+    if args.list:
+        for name in registry.REGISTRY:
+            print(name)
+        return 0
+
+    unknown = [n for n in args.names if n not in registry.REGISTRY]
+    if unknown:
+        parser.error(
+            f"unknown entry points {unknown}; see --list"
+        )
+    summary = registry.run_registry(args.names or None)
+    if args.json:
+        print(json.dumps(summary.to_record(), indent=2, sort_keys=True))
+    else:
+        print(summary.format_table())
+        for report in summary.reports:
+            for finding in report.unexpected_failures:
+                print(f"  {finding}")
+        verdict = "OK" if summary.ok else "FAIL"
+        print(f"\nstatic-analysis: {verdict} "
+              f"({len(summary.reports)} entry points)")
+    return 0 if summary.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,266 @@
+"""The registered hot-path entry points the CLI sweep gates.
+
+Every jit the sampler's hot loop runs through is (or should be) registered
+here with the rules it must satisfy: the fused / jnp / pallas steps, the
+driver's chunk scan and committed-chunk fold, the serve group chunk, and
+the distributed chain fleet. ``python -m repro.analysis`` sweeps them all;
+the ``static-analysis`` CI lane fails on any regression. New subsystems
+(data_fleet, paged bright-set memory) register here as part of landing.
+
+Registering a new entry point::
+
+    @entry_point("mything.step")
+    def _mything():
+        fn, args = ...          # what to trace (structs are fine)
+        return check(fn, *args, rules=[...], name="mything.step")
+
+Builders trace with ``jax.eval_shape``-derived structs wherever possible —
+the sweep never *runs* a sampler step, it only traces and (for the
+donation rule) lowers, so it stays cheap enough to gate every commit. The
+jnp z-engine is registered ``expect_fail={"cost-model"}`` on purpose: it
+is the known-O(N) engine, and its report going quiet would mean the
+detector went blind (reported as ``xpass``, which fails the sweep).
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.report import Report, Summary
+from repro.analysis.rules import (
+    CapacityIndependenceRule,
+    ClosureConstRule,
+    CostModelRule,
+    DonationRule,
+    RngLineageRule,
+    check,
+)
+
+# One shared problem shape for the whole sweep: big enough that O(N) work
+# is unambiguous (N well above every capacity-shaped buffer), small enough
+# to trace in milliseconds.
+N, D, CAPACITY = 1024, 4, 64
+
+REGISTRY: OrderedDict[str, Callable[[], Report]] = OrderedDict()
+
+
+def entry_point(name: str):
+    """Register a thunk producing one entry point's Report."""
+
+    def deco(build):
+        REGISTRY[name] = build
+        return build
+
+    return deco
+
+
+def run_registry(names=None) -> Summary:
+    """Run the sweep (all entry points, or a subset by name)."""
+    selected = list(REGISTRY) if names is None else list(names)
+    reports = []
+    for name in selected:
+        reports.append(REGISTRY[name]())
+    return Summary(reports=reports)
+
+
+# ---------------------------------------------------------------------------
+# shared fixtures (built lazily, cached — the sweep reuses one dataset)
+# ---------------------------------------------------------------------------
+
+_CACHE: dict = {}
+
+
+def _data():
+    if "data" not in _CACHE:
+        from repro.data import logistic_data
+
+        _CACHE["data"] = logistic_data(jax.random.key(0), n=N, d=D,
+                                       separation=1.5)
+    return _CACHE["data"]
+
+
+def _alg(z_backend="fused", backend="jnp", capacity=CAPACITY):
+    key = ("alg", z_backend, backend, capacity)
+    if key not in _CACHE:
+        from repro import api
+        from repro.models.bayes_glm import GLMModel
+
+        model = GLMModel.logistic(_data(), prior_scale=2.0, xi=1.5)
+        _CACHE[key] = api.firefly(
+            model, kernel="rwmh", capacity=capacity, cand_capacity=capacity,
+            q_db=0.01, step_size=0.1, backend=backend, z_backend=z_backend,
+        )
+    return _CACHE[key]
+
+
+def _key_struct():
+    return jax.eval_shape(lambda: jax.random.key(0))
+
+
+def _state_struct(alg):
+    return jax.eval_shape(alg.init, _key_struct(), alg.default_position)
+
+
+def _step_rules():
+    return [CostModelRule(n=N), ClosureConstRule(), RngLineageRule()]
+
+
+def _check_step(alg, name, **kw):
+    # The operand-data form is the form the driver/serve actually jit; it
+    # is also what makes closure-constant meaningful (data is an operand).
+    return check(
+        alg.step_data, _key_struct(), _state_struct(alg), alg.data, alg.stats,
+        rules=_step_rules(), name=name, **kw,
+    )
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+
+
+@entry_point("step.fused")
+def _step_fused() -> Report:
+    """The production CPU/TPU step: jnp θ-engine + fused z-engine."""
+    return _check_step(_alg(z_backend="fused"), "step.fused")
+
+
+@entry_point("step.jnp")
+def _step_jnp() -> Report:
+    """The known-O(N) reference engine — the cost-model rule's sanity case:
+    its (N,) uniforms and full-N cumsum MUST trip the detector."""
+    return _check_step(
+        _alg(z_backend="jnp"), "step.jnp", expect_fail=("cost-model",)
+    )
+
+
+@entry_point("step.pallas")
+def _step_pallas() -> Report:
+    """Fused θ-kernel (pallas_call) + fused z-engine: the walker descends
+    into the Pallas inner jaxprs, so in-kernel tile RNG is costed too."""
+    return _check_step(
+        _alg(z_backend="fused", backend="pallas"), "step.pallas"
+    )
+
+
+@entry_point("driver.chunk")
+def _driver_chunk() -> Report:
+    """api.sample's jitted chunk scan (multi-chain, operand-data form)."""
+    from repro.api import driver
+
+    alg = _alg()
+    k = 2
+    chunk = driver._make_scan_fn(alg, num_chains=k, cs=8)
+    keys = jax.eval_shape(lambda: jax.random.split(jax.random.key(0), k))
+    states = jax.eval_shape(
+        alg.batched_init(), keys,
+        jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct((k,) + jnp.shape(l), l.dtype),
+            alg.default_position,
+        ),
+    )
+    start = jax.ShapeDtypeStruct((), jnp.int32)
+    return check(
+        chunk, states, keys, start, alg.data, alg.stats,
+        rules=_step_rules(), name="driver.chunk",
+    )
+
+
+def _fold_args(alg, colls, k=2, cs=8, num_samples=32):
+    """(carries, pos, infos) structs for a committed-chunk fold of ``alg``."""
+    state1 = _state_struct(alg)
+    pos_s, stats_s = alg.output_structs(state1)
+    carries = {
+        name: jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct((k,) + l.shape, l.dtype),
+            col.init(num_samples, pos_s, stats_s),
+        )
+        for name, col in colls.items()
+    }
+    chunked = lambda s: jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct((cs, k) + l.shape, l.dtype), s
+    )
+    return carries, chunked(pos_s), chunked(stats_s)
+
+
+@entry_point("driver.fold")
+def _driver_fold() -> Report:
+    """The committed-chunk collector fold: donated carries must really
+    alias, and the jaxpr must be IDENTICAL across buffer capacities (the
+    PR 5 pin — overflow re-runs retrace only the chain scan, never this)."""
+    from repro.api import collectors as collectors_lib
+    from repro.api import driver
+
+    colls = {
+        "trace": collectors_lib.FullTrace(),
+        "moments": collectors_lib.OnlineMoments(),
+    }
+    fold = driver.make_collector_fold(colls, multi=True)
+    args = _fold_args(_alg(capacity=CAPACITY), colls)
+
+    def variant(capacity):
+        return lambda: jax.make_jaxpr(fold)(
+            *_fold_args(_alg(capacity=capacity), colls)
+        )
+
+    rules = [
+        ClosureConstRule(),
+        DonationRule(donate_argnums=(0,)),
+        CapacityIndependenceRule({
+            f"capacity-{c}": variant(c) for c in (CAPACITY, 2 * CAPACITY)
+        }),
+    ]
+    return check(fold, *args, rules=rules, name="driver.fold")
+
+
+@entry_point("serve.run_chunk")
+def _serve_run_chunk() -> Report:
+    """The serve GroupEngine's group chunk (lane axis over jobs)."""
+    from repro.data import logistic_data
+    from repro.serve.engine import GroupEngine
+    from repro.serve.job import Job, TerminationPolicy
+
+    if "serve_engine" not in _CACHE:
+        job = Job(
+            job_id="analysis-probe", family="logistic",
+            data=logistic_data(jax.random.key(1), n=256, d=D,
+                               separation=1.5),
+            capacity=32, cand_capacity=32, z_backend="fused",
+            policy=TerminationPolicy(max_samples=64),
+        )
+        engine = GroupEngine(job)
+        engine.admit(job)
+        _CACHE["serve_engine"] = engine
+    engine = _CACHE["serve_engine"]
+    chunk = engine._build_chunk(cs=4)
+    lanes = engine._lanes
+    rules = [CostModelRule(n=256), ClosureConstRule(), RngLineageRule()]
+    return check(
+        chunk, lanes["states"], lanes["keys"], lanes["data"], lanes["stats"],
+        rules=rules, name="serve.run_chunk",
+    )
+
+
+@entry_point("dist.chain_fleet")
+def _dist_chain_fleet() -> Report:
+    """The chain fleet's sharded step in its operand-data form: even across
+    a mesh, the dataset must be a (replicated) traced operand, not a
+    closure constant baked into every device's executable."""
+    from repro.distributed.flymc_dist import chain_fleet
+
+    mesh = jax.make_mesh((jax.device_count(),), ("chains",))
+    fleet = chain_fleet(_alg(), mesh)
+    k = jax.device_count()
+    keys = jax.eval_shape(lambda: jax.random.split(jax.random.key(0), k))
+    states = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct((k,) + l.shape, l.dtype),
+        _state_struct(fleet),
+    )
+    return check(
+        fleet.step_chains_data, keys, states, fleet.data, fleet.stats,
+        rules=_step_rules(), name="dist.chain_fleet",
+    )

@@ -1,0 +1,136 @@
+"""Structured output of an analysis run: findings, reports, sweep summary.
+
+A :class:`Finding` is one rule violation with enough detail to act on; a
+:class:`Report` is one entry point's findings plus the cost metrics the
+benchmark harness records (eqn counts, worst RNG/cumsum sizes, const
+bytes); a :class:`Summary` is a registry sweep — what the CLI prints and
+the CI lane gates on.
+
+"Expected-fail" is first-class: the jnp z-engine exists precisely to trip
+the cost-model rule (it is the sanity check that the detectors detect), so
+a report carries the set of rules it is *expected* to fail and ``ok``
+means "failed exactly the expected rules, no more, no fewer" — an
+expected-fail rule that silently passes is itself a regression (the
+detector went blind).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at one entry point."""
+
+    rule: str
+    entry_point: str
+    message: str
+    details: dict = dataclasses.field(default_factory=dict)
+
+    def __str__(self) -> str:
+        return f"[{self.rule}] {self.entry_point}: {self.message}"
+
+
+@dataclasses.dataclass
+class Report:
+    """One entry point's analysis result.
+
+    ``metrics`` is the cost fingerprint recorded into ``BENCH_flymc.json``
+    (see :func:`repro.analysis.registry.sweep_record`); ``rules_run`` lists
+    every rule name that executed so a silently-skipped rule is visible.
+    """
+
+    entry_point: str
+    findings: list[Finding]
+    rules_run: list[str]
+    metrics: dict[str, Any] = dataclasses.field(default_factory=dict)
+    expect_fail: frozenset[str] = frozenset()
+
+    @property
+    def failed_rules(self) -> frozenset[str]:
+        return frozenset(f.rule for f in self.findings)
+
+    @property
+    def unexpected_failures(self) -> list[Finding]:
+        return [f for f in self.findings if f.rule not in self.expect_fail]
+
+    @property
+    def missing_expected_failures(self) -> frozenset[str]:
+        """Expected-fail rules that did NOT fire: the detector went blind."""
+        return frozenset(self.expect_fail) - self.failed_rules
+
+    @property
+    def ok(self) -> bool:
+        return not self.unexpected_failures and not self.missing_expected_failures
+
+    def rule_status(self, rule: str) -> str:
+        """'pass' | 'fail' | 'xfail' (expected and observed) | 'xpass'
+        (expected to fail but passed — a regression)."""
+        failed = rule in self.failed_rules
+        expected = rule in self.expect_fail
+        if failed:
+            return "xfail" if expected else "fail"
+        return "xpass" if expected else "pass"
+
+
+@dataclasses.dataclass
+class Summary:
+    """A whole registry sweep."""
+
+    reports: list[Report]
+
+    @property
+    def ok(self) -> bool:
+        return all(r.ok for r in self.reports)
+
+    def format_table(self) -> str:
+        """The CLI's human-readable sweep table."""
+        rows = [("entry point", "rules", "status", "worst finding")]
+        for r in self.reports:
+            statuses = ",".join(
+                f"{name}:{r.rule_status(name)}" for name in r.rules_run
+            )
+            if r.ok:
+                status = "OK"
+            elif r.missing_expected_failures:
+                status = "XPASS"
+            else:
+                status = "FAIL"
+            worst = r.unexpected_failures[0].message if r.unexpected_failures else (
+                f"expected-fail rule(s) passed: "
+                f"{sorted(r.missing_expected_failures)}"
+                if r.missing_expected_failures
+                else ""
+            )
+            rows.append((r.entry_point, statuses, status, worst[:60]))
+        widths = [max(len(row[i]) for row in rows) for i in range(3)]
+        lines = []
+        for i, row in enumerate(rows):
+            lines.append(
+                "  ".join(c.ljust(w) for c, w in zip(row[:3], widths))
+                + ("  " + row[3] if row[3] else "")
+            )
+            if i == 0:
+                lines.append("  ".join("-" * w for w in widths))
+        return "\n".join(lines)
+
+    def to_record(self) -> dict:
+        """JSON-ready sweep record (the BENCH_flymc.json payload)."""
+        return {
+            "ok": self.ok,
+            "entry_points": {
+                r.entry_point: {
+                    "rules": {
+                        name: r.rule_status(name) for name in r.rules_run
+                    },
+                    "findings": [
+                        {"rule": f.rule, "message": f.message}
+                        for f in r.findings
+                    ],
+                    **r.metrics,
+                }
+                for r in self.reports
+            },
+        }

@@ -1,0 +1,535 @@
+"""The rule engine: exactness & cost invariants as checkable rules.
+
+Each rule encodes one way a hot path has historically (or could) silently
+break FlyMC's *exactness at subset cost* guarantee:
+
+=====================  =====================================================
+cost-model             an O(N) primitive re-enters a fused step (length-N
+                       RNG draws, full-N cumsum re-partition, N-sized
+                       gathers/scatter writes) — the work class the fused
+                       engines exist to kill
+closure-constant       a large array (the dataset) is baked into a jit as a
+                       closure constant instead of traced as an operand —
+                       the PR 6 bitwise-divergence class: XLA rounds
+                       data-dependent reductions differently for constants
+rng-lineage            a PRNG key is reused for two draws, or a loop body
+                       draws from a key that does not vary with the
+                       iteration (the PR 3 resume-prefix replay class)
+capacity-independence  a jaxpr that must be identical across buffer
+                       capacities (the committed-chunk fold) grew a
+                       capacity-dependent shape — the PR 5 retrace-
+                       avoidance pin
+donation               a donated carry is not actually aliased to an output
+                       (shape/dtype drift turned the in-place update into a
+                       silent copy, or the value stayed live)
+=====================  =====================================================
+
+Rules are pure functions of traced jaxprs (plus lowered StableHLO for
+donation); they never execute the computation under analysis. A rule
+returns :class:`~repro.analysis.report.Finding`\\ s — empty means the
+invariant holds.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.extend.core as jex_core
+
+from repro.analysis import walker
+from repro.analysis.report import Finding, Report
+
+# Primitives that materialize fresh random bits. `threefry2x32` is the raw
+# counter cipher jax's PRNG lowers to on some paths; the in-kernel Pallas
+# cipher (repro.core.numerics.threefry2x32) is plain bit arithmetic and is
+# costed by the generic size sweep, not named here.
+RNG_PRIMS = ("threefry2x32", "random_bits", "random_gamma")
+
+# Key-consuming primitives that DRAW (vs derive): the lineage rule's sinks.
+SAMPLING_PRIMS = ("random_bits", "threefry2x32", "random_gamma")
+
+
+@dataclasses.dataclass
+class Context:
+    """What one entry point hands every rule."""
+
+    name: str
+    closed: jex_core.ClosedJaxpr
+    fn: Callable | None = None  # for rules that must re-trace / lower
+    args: tuple = ()
+
+
+class Rule:
+    """Base: ``check(ctx) -> list[Finding]``; ``name`` identifies the rule
+    in reports, budgets, and expect_fail sets."""
+
+    name: str = "rule"
+
+    def check(self, ctx: Context) -> list[Finding]:  # pragma: no cover
+        raise NotImplementedError
+
+    def _finding(self, ctx: Context, message: str, **details) -> Finding:
+        return Finding(self.name, ctx.name, message, details)
+
+
+# ---------------------------------------------------------------------------
+# cost-model
+# ---------------------------------------------------------------------------
+
+
+class CostModelRule(Rule):
+    """No O(N) primitive in a fused hot path.
+
+    ``n`` is the dataset size (the budget every class defaults to): any
+    RNG / cumsum / gather eqn producing ≥ budget elements, or any scatter
+    *writing* ≥ budget elements (scatter outputs alias the full operand, so
+    they are sized by their updates — see
+    :func:`repro.analysis.walker.eqn_work_size`), is a finding. Per-class
+    ``budgets`` override the default — e.g. an entry point whose legitimate
+    gather is O(capacity·D) can pin a tighter gather budget than N.
+    """
+
+    name = "cost-model"
+
+    #: class name -> primitive name substrings
+    CLASSES = {
+        "rng": RNG_PRIMS,
+        "cumsum": ("cumsum",),
+        "gather": ("gather",),
+        "scatter": ("scatter",),
+    }
+
+    def __init__(self, n: int, budgets: dict[str, int] | None = None):
+        self.n = int(n)
+        self.budgets = dict(budgets or {})
+
+    def check(self, ctx: Context) -> list[Finding]:
+        findings = []
+        for cls, prims in self.CLASSES.items():
+            budget = int(self.budgets.get(cls, self.n))
+            worst = walker.max_eqn_size(ctx.closed, prims)
+            if worst >= budget:
+                findings.append(self._finding(
+                    ctx,
+                    f"{cls} eqn works on {worst} elements "
+                    f"(budget {budget}, N={self.n}) — O(N) work re-entered "
+                    f"the hot path",
+                    cls=cls, worst=worst, budget=budget, n=self.n,
+                ))
+        return findings
+
+    def metrics(self, closed) -> dict:
+        """The per-class worst sizes, for the benchmark record."""
+        return {
+            f"max_{cls}_size": walker.max_eqn_size(closed, prims)
+            for cls, prims in self.CLASSES.items()
+        }
+
+
+# ---------------------------------------------------------------------------
+# closure-constant
+# ---------------------------------------------------------------------------
+
+
+class ClosureConstRule(Rule):
+    """No large closure constant in a hot-path jit.
+
+    Datasets must reach compiled code as *traced operands*: a baked-in
+    constant changes XLA's constant folding and hence the low-bit rounding
+    of data-dependent reductions (PR 6: solo vs packed trajectories diverged
+    until the driver threaded the dataset as an operand). Anything above
+    ``max_bytes`` in the jaxpr's consts — at any nesting level — is flagged.
+    Small captures (iota tables, capacity-sized masks) pass.
+    """
+
+    name = "closure-constant"
+
+    def __init__(self, max_bytes: int = 8192):
+        self.max_bytes = int(max_bytes)
+
+    def check(self, ctx: Context) -> list[Finding]:
+        findings = []
+        for path, shape, dtype, nbytes in walker.const_bytes(ctx.closed):
+            if nbytes > self.max_bytes:
+                findings.append(self._finding(
+                    ctx,
+                    f"closure constant {dtype}{list(shape)} ({nbytes} B > "
+                    f"{self.max_bytes} B) at {path} — pass it as a traced "
+                    f"operand (constants change XLA reduction rounding)",
+                    path=path, shape=shape, dtype=dtype, nbytes=nbytes,
+                ))
+        return findings
+
+
+# ---------------------------------------------------------------------------
+# rng-lineage
+# ---------------------------------------------------------------------------
+
+# Call-like primitives whose sub-jaxpr invars map 1:1 onto the eqn invars.
+_DIRECT_CALLS = {
+    "pjit", "closed_call", "core_call", "remat", "checkpoint",
+    "custom_jvp_call", "custom_vjp_call", "custom_vjp_call_jaxpr",
+    "custom_vmap_call",
+}
+
+_CONST = 0    # derived only from literals / closure constants
+_FRESH = 1    # derived from the entry point's own arguments
+_VARYING = 2  # derived from a loop-varying value (carry / scanned xs)
+
+
+class RngLineageRule(Rule):
+    """Key derivations must be single-use and iteration-dependent.
+
+    A taint walk over the jaxpr tracks, for every var, whether it derives
+    from loop-varying values (scan carries / scanned inputs), from the
+    entry point's arguments, or only from constants. Two findings:
+
+    * **reused key** — one key var feeds two or more drawing primitives
+      (``random_bits`` et al.) in the same scope. Correct code splits or
+      folds first; drawing twice replays the stream.
+    * **iteration-independent key** — inside a scan/while body, a draw
+      whose key does not derive from the iteration (a fold_in with a
+      constant counter, or a loop-invariant key drawn directly). This is
+      the PR 3 resume bug class statically: every iteration replays the
+      same randomness. Domain-separation folds (``fold_in(step_key, 3)``)
+      pass because ``step_key`` itself varies.
+
+    Conservative by construction: sub-jaxprs whose invar mapping is unknown
+    (Pallas kernels, exotic calls) mark their inputs varying, so unknown
+    structure can only suppress findings, never fabricate them.
+    """
+
+    name = "rng-lineage"
+
+    # Primitives through which a value stays THE SAME logical key. Anything
+    # else (fold_in, split, slicing a split's output, arithmetic on key
+    # data) yields a NEW key identity — so unknown derivations can never
+    # produce a false "reuse" (two fresh identities never collide), only a
+    # miss.
+    KEY_PASSTHROUGH = ("random_wrap", "random_unwrap", "copy")
+
+    def check(self, ctx: Context) -> list[Finding]:
+        findings: list[Finding] = []
+        jaxpr = ctx.closed.jaxpr
+        # draws: key identity -> (count, first scope, prim). Global across
+        # scopes because jax.random wraps every draw in its own pjit — two
+        # draws from one key land in sibling sub-jaxprs, so per-scope
+        # counting would be blind to exactly the bug this rule exists for.
+        self._fresh = 0
+        draws: dict[int, list] = {}
+        in_ids = [self._new_id() for _ in jaxpr.invars]
+        self._analyze(
+            ctx, jaxpr, [_FRESH] * len(jaxpr.invars), in_ids, "", False,
+            findings, draws,
+        )
+        for count, scope, prim in draws.values():
+            if count >= 2:
+                findings.append(self._finding(
+                    ctx,
+                    f"key reused by {count} draws (first at "
+                    f"{scope or '/'}) — split/fold_in before each draw "
+                    f"(reuse replays the stream)",
+                    scope=scope or "/", draws=count, primitive=prim,
+                ))
+        return findings
+
+    # -- taint + key-identity machinery -------------------------------------
+
+    def _new_id(self) -> int:
+        self._fresh += 1
+        return self._fresh
+
+    def _analyze(self, ctx, jaxpr, in_taint, in_ids, scope, in_loop,
+                 findings, draws):
+        taint: dict[Any, int] = {}
+        keyid: dict[Any, int] = {}
+        for var, t, i in zip(jaxpr.invars, in_taint, in_ids):
+            taint[var] = t
+            keyid[var] = i
+        for var in jaxpr.constvars:
+            taint[var] = _CONST
+            keyid[var] = self._new_id()
+
+        def t_of(atom) -> int:
+            if isinstance(atom, jex_core.Literal):
+                return _CONST
+            return taint.get(atom, _CONST)
+
+        def id_of(atom):
+            if isinstance(atom, jex_core.Literal):
+                return None
+            return keyid.get(atom)
+
+        for eqn in jaxpr.eqns:
+            name = eqn.primitive.name
+            in_ts = [t_of(a) for a in eqn.invars]
+            in_is = [id_of(a) for a in eqn.invars]
+            if name in SAMPLING_PRIMS and eqn.invars:
+                kid = in_is[0]
+                if kid is not None:
+                    rec = draws.setdefault(kid, [0, scope, name])
+                    rec[0] += 1
+                if in_loop and (in_ts[0] if in_ts else _CONST) < _VARYING:
+                    findings.append(self._finding(
+                        ctx,
+                        f"{name} at {scope or '/'} draws from a key that "
+                        f"does not vary with the loop iteration — every "
+                        f"iteration replays the same stream (fold_in the "
+                        f"iteration counter)",
+                        scope=scope or "/", primitive=name,
+                    ))
+            self._recurse(ctx, eqn, in_ts, in_is, scope, in_loop, findings,
+                          draws)
+            out_t = max(in_ts, default=_CONST)
+            passthrough = (
+                name in self.KEY_PASSTHROUGH
+                and len(eqn.invars) == 1 and len(eqn.outvars) == 1
+                and in_is[0] is not None
+            )
+            for ov in eqn.outvars:
+                taint[ov] = out_t
+                keyid[ov] = in_is[0] if passthrough else self._new_id()
+
+    def _recurse(self, ctx, eqn, in_ts, in_is, scope, in_loop, findings,
+                 draws):
+        name = eqn.primitive.name
+        params = eqn.params
+        sub_scope = f"{scope}/{name}"
+
+        def fresh(n):
+            return [self._new_id() for _ in range(n)]
+
+        if name == "scan":
+            body = params["jaxpr"].jaxpr
+            nc = params["num_consts"]
+            extra = len(body.invars) - nc
+            self._analyze(
+                ctx, body, in_ts[:nc] + [_VARYING] * extra,
+                in_is[:nc] + fresh(extra), sub_scope, True, findings, draws,
+            )
+        elif name == "while":
+            cnc, bnc = params["cond_nconsts"], params["body_nconsts"]
+            cond = params["cond_jaxpr"].jaxpr
+            body = params["body_jaxpr"].jaxpr
+            carry_n = len(body.invars) - bnc
+            self._analyze(
+                ctx, body, in_ts[cnc:cnc + bnc] + [_VARYING] * carry_n,
+                in_is[cnc:cnc + bnc] + fresh(carry_n), sub_scope, True,
+                findings, draws,
+            )
+            cond_extra = len(cond.invars) - cnc
+            self._analyze(
+                ctx, cond, in_ts[:cnc] + [_VARYING] * cond_extra,
+                in_is[:cnc] + fresh(cond_extra), f"{sub_scope}.cond", True,
+                findings, draws,
+            )
+        elif name == "cond":
+            # Branches are mutually exclusive: a draw from one key in EACH
+            # branch executes at most once, so branch draw counts merge by
+            # max (per key), then add into the enclosing scope's counts.
+            merged: dict[int, list] = {}
+            for branch in params.get("branches", ()):
+                body = branch.jaxpr
+                branch_draws: dict[int, list] = {}
+                if len(body.invars) == len(in_ts) - 1:
+                    self._analyze(
+                        ctx, body, in_ts[1:], in_is[1:], sub_scope, in_loop,
+                        findings, branch_draws,
+                    )
+                else:
+                    self._analyze(
+                        ctx, body, [_VARYING] * len(body.invars),
+                        fresh(len(body.invars)), sub_scope, in_loop,
+                        findings, branch_draws,
+                    )
+                for kid, rec in branch_draws.items():
+                    cur = merged.get(kid)
+                    if cur is None or rec[0] > cur[0]:
+                        merged[kid] = rec
+            for kid, rec in merged.items():
+                outer = draws.setdefault(kid, [0, rec[1], rec[2]])
+                outer[0] += rec[0]
+        elif name in _DIRECT_CALLS:
+            for sub in walker.eqn_subjaxprs(eqn):
+                if len(sub.invars) == len(in_ts):
+                    self._analyze(
+                        ctx, sub, list(in_ts), list(in_is), sub_scope,
+                        in_loop, findings, draws,
+                    )
+        else:
+            # Unknown structure (pallas_call kernels, …): assume varying,
+            # fresh identities — conservative, can only suppress findings.
+            for sub in walker.eqn_subjaxprs(eqn):
+                self._analyze(
+                    ctx, sub, [_VARYING] * len(sub.invars),
+                    fresh(len(sub.invars)), sub_scope, in_loop, findings,
+                    draws,
+                )
+
+
+# ---------------------------------------------------------------------------
+# capacity-independence
+# ---------------------------------------------------------------------------
+
+
+class CapacityIndependenceRule(Rule):
+    """A set of jaxpr variants that MUST be structurally identical.
+
+    The committed-chunk fold is cached capacity-independently (a
+    capacity-doubling overflow re-run retraces only the chain scan, never
+    the fold — the PR 5 pin); that only holds while the fold's jaxpr is
+    bit-identical across capacities. ``variants`` maps labels to thunks
+    producing a ClosedJaxpr; the fingerprint is the pretty-printed jaxpr
+    (stable var naming), so any shape, primitive, or structure drift shows.
+    """
+
+    name = "capacity-independence"
+
+    def __init__(self, variants: dict[str, Callable[[], Any]]):
+        if len(variants) < 2:
+            raise ValueError("need >= 2 variants to compare")
+        self.variants = dict(variants)
+
+    def check(self, ctx: Context) -> list[Finding]:
+        prints = {
+            label: str(thunk()) for label, thunk in self.variants.items()
+        }
+        labels = list(prints)
+        ref = labels[0]
+        findings = []
+        for label in labels[1:]:
+            if prints[label] != prints[ref]:
+                findings.append(self._finding(
+                    ctx,
+                    f"jaxpr differs between variants {ref!r} and {label!r} "
+                    f"— this program must be identical across capacities "
+                    f"(the fold's jit cache is keyed capacity-independently)",
+                    reference=ref, variant=label,
+                ))
+        return findings
+
+
+# ---------------------------------------------------------------------------
+# donation
+# ---------------------------------------------------------------------------
+
+
+class DonationRule(Rule):
+    """Donated inputs must actually alias outputs after lowering.
+
+    ``jit(fn, donate_argnums=...)`` is a *request*: if a donated leaf's
+    shape/dtype has no matching output (dtype promotion in the fold body,
+    a dropped carry), XLA silently copies instead — the O(num_samples)
+    in-place trace update becomes an O(num_samples) copy per chunk, and a
+    still-live donated value is read-after-donation. Checked two ways:
+    aval compatibility (every donated leaf needs an alias-compatible
+    output), and the lowered StableHLO's ``tf.aliasing_output`` arg
+    attributes (one per donated leaf).
+    """
+
+    name = "donation"
+
+    def __init__(self, donate_argnums: Sequence[int] = (0,)):
+        self.donate_argnums = tuple(donate_argnums)
+
+    def check(self, ctx: Context) -> list[Finding]:
+        if ctx.fn is None:
+            return [self._finding(
+                ctx, "donation rule needs the callable (fn=) to lower"
+            )]
+        findings = []
+        donated = []
+        for argnum in self.donate_argnums:
+            donated.extend(jax.tree.leaves(ctx.args[argnum]))
+        out_avals = {}
+        for leaf in jax.tree.leaves(
+            jax.eval_shape(ctx.fn, *ctx.args)
+        ):
+            sig = (tuple(leaf.shape), str(leaf.dtype))
+            out_avals[sig] = out_avals.get(sig, 0) + 1
+        for leaf in donated:
+            sig = (tuple(leaf.shape), str(leaf.dtype))
+            if out_avals.get(sig, 0) > 0:
+                out_avals[sig] -= 1
+            else:
+                findings.append(self._finding(
+                    ctx,
+                    f"donated leaf {sig[1]}{list(sig[0])} has no "
+                    f"alias-compatible output — the donation is a silent "
+                    f"copy (shape/dtype drift in the fold body?)",
+                    shape=sig[0], dtype=sig[1],
+                ))
+        with warnings.catch_warnings():
+            # jax warns "Some donated buffers were not usable" here; the
+            # findings below report the same fact structurally.
+            warnings.simplefilter("ignore")
+            text = (
+                jax.jit(ctx.fn, donate_argnums=self.donate_argnums)
+                .lower(*ctx.args)
+                .as_text()
+            )
+        aliased = text.count("tf.aliasing_output")
+        if aliased < len(donated):
+            findings.append(self._finding(
+                ctx,
+                f"only {aliased}/{len(donated)} donated leaves are aliased "
+                f"to outputs in the lowered module — the rest are copied "
+                f"(read-after-donation hazard)",
+                aliased=aliased, donated=len(donated),
+            ))
+        return findings
+
+
+# ---------------------------------------------------------------------------
+# check(): the library surface
+# ---------------------------------------------------------------------------
+
+
+def standard_metrics(closed) -> dict:
+    """The cost fingerprint every Report carries (and BENCH records)."""
+    consts = walker.const_bytes(closed)
+    return {
+        "eqn_count": walker.count_eqns(closed),
+        "max_rng_size": walker.max_eqn_size(closed, RNG_PRIMS),
+        "max_cumsum_size": walker.max_eqn_size(closed, ("cumsum",)),
+        "max_gather_size": walker.max_eqn_size(closed, ("gather",)),
+        "max_scatter_update_size": walker.max_eqn_size(closed, ("scatter",)),
+        "const_bytes_total": sum(c[3] for c in consts),
+        "const_bytes_max": max((c[3] for c in consts), default=0),
+    }
+
+
+def check(
+    fn: Callable,
+    *args,
+    rules: Sequence[Rule],
+    name: str = "<anonymous>",
+    expect_fail: Sequence[str] = (),
+) -> Report:
+    """Trace ``fn(*args)`` and run ``rules`` over its jaxpr.
+
+    The library API behind both the CLI sweep and the tests:
+
+        report = analysis.check(alg.step_data, key, state, data, stats,
+                                rules=[CostModelRule(n=N)], name="step")
+        assert report.ok, report.findings
+
+    ``expect_fail`` names rules this entry point is *supposed* to trip
+    (the jnp z-engine vs cost-model); ``report.ok`` then also fails if an
+    expected rule goes quiet — a blind detector is a regression too.
+    """
+    closed = walker.make_jaxpr_of(fn, *args)
+    ctx = Context(name=name, closed=closed, fn=fn, args=args)
+    findings: list[Finding] = []
+    for rule in rules:
+        findings.extend(rule.check(ctx))
+    return Report(
+        entry_point=name,
+        findings=findings,
+        rules_run=[r.name for r in rules],
+        metrics=standard_metrics(closed),
+        expect_fail=frozenset(expect_fail),
+    )

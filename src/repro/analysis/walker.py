@@ -1,0 +1,179 @@
+"""Recursive jaxpr traversal — the single inspection substrate.
+
+Every exactness/cost invariant this repo pins statically is a statement
+about a jaxpr: "no length-N RNG in the fused step", "no O(num_samples)
+buffer in a collectors-only chunk", "the dataset is an operand, not a
+constant". Those used to be checked by ad-hoc ``_walk_eqns`` copies in the
+test files; this module is the one shared walker the rule engine
+(:mod:`repro.analysis.rules`) and the tests build on.
+
+The traversal is closed under every sub-jaxpr container jax uses: scan /
+while / cond bodies (``ClosedJaxpr`` params), pjit and custom_* calls, and
+Pallas kernels — ``pallas_call`` carries its kernel as a *raw* ``Jaxpr``
+param, so the in-kernel equations (tile-shaped threefry lanes, DMA gets)
+are visible to the same sweep as the surrounding XLA program.
+"""
+
+from __future__ import annotations
+
+from collections import Counter
+from typing import Iterable, Iterator
+
+import jax
+import jax.extend.core as jex_core
+import numpy as np
+
+Jaxpr = jex_core.Jaxpr
+ClosedJaxpr = jex_core.ClosedJaxpr
+
+
+def as_jaxpr(obj) -> Jaxpr:
+    """Normalize a ClosedJaxpr | Jaxpr to the underlying Jaxpr."""
+    return obj.jaxpr if isinstance(obj, ClosedJaxpr) else obj
+
+
+def subjaxprs(value) -> Iterator[Jaxpr]:
+    """Yield every jaxpr reachable from one eqn-param value.
+
+    Handles ``ClosedJaxpr`` (scan/while/cond/pjit bodies), bare ``Jaxpr``
+    (``pallas_call``'s kernel), and list/tuple/dict containers of either
+    (``cond``'s branches, custom-call bundles).
+    """
+    if isinstance(value, ClosedJaxpr):
+        yield value.jaxpr
+    elif isinstance(value, Jaxpr):
+        yield value
+    elif isinstance(value, (list, tuple)):
+        for item in value:
+            yield from subjaxprs(item)
+    elif isinstance(value, dict):
+        for item in value.values():
+            yield from subjaxprs(item)
+
+
+def eqn_subjaxprs(eqn) -> Iterator[Jaxpr]:
+    """Every sub-jaxpr hanging off one equation's params."""
+    for value in eqn.params.values():
+        yield from subjaxprs(value)
+
+
+def walk_eqns(jaxpr) -> Iterator:
+    """Depth-first over every eqn of ``jaxpr`` and all nested sub-jaxprs."""
+    for eqn in as_jaxpr(jaxpr).eqns:
+        yield eqn
+        for sub in eqn_subjaxprs(eqn):
+            yield from walk_eqns(sub)
+
+
+def var_size(var) -> int:
+    """Element count of a jaxpr atom (1 for scalars and literals)."""
+    aval = getattr(var, "aval", None)
+    shape = getattr(aval, "shape", None)
+    return int(np.prod(shape)) if shape else 1
+
+
+def eqn_work_size(eqn) -> int:
+    """The element count that bounds one eqn's *data-dependent work*.
+
+    For most primitives that is the largest output. Scatter is the
+    exception: its output aliases the full operand (updating an (N,)
+    partition array emits an (N,)-shaped result even when only O(changed)
+    rows are written), so scatters are sized by their ``updates`` operand —
+    the values actually written — not the pass-through buffer.
+    """
+    if eqn.primitive.name.startswith("scatter"):
+        # (operand, scatter_indices, updates)
+        return var_size(eqn.invars[2]) if len(eqn.invars) >= 3 else 0
+    return max((var_size(v) for v in eqn.outvars), default=0)
+
+
+def matches(eqn, prim_names: Iterable[str]) -> bool:
+    """Substring match of the primitive name against any of ``prim_names``
+    (the historical test-helper contract: 'cumsum' matches 'cumsum',
+    'random_bits' matches 'random_bits', …)."""
+    name = eqn.primitive.name
+    return any(p in name for p in prim_names)
+
+
+def max_eqn_size(jaxpr, prim_names: Iterable[str]) -> int:
+    """Largest work size over all eqns whose primitive matches, everywhere
+    in the (recursively walked) jaxpr. 0 when nothing matches."""
+    prim_names = tuple(prim_names)
+    return max(
+        (eqn_work_size(e) for e in walk_eqns(jaxpr) if matches(e, prim_names)),
+        default=0,
+    )
+
+
+def max_dim(jaxpr) -> int:
+    """Largest single dimension appearing on any eqn input or output.
+
+    The memory detector behind "a collectors-only chunk traces no
+    O(num_samples) buffer": if no array anywhere in the program has a
+    dimension of that size, the buffer is absent, not merely dead."""
+    worst = 0
+    for eqn in walk_eqns(jaxpr):
+        for var in list(eqn.invars) + list(eqn.outvars):
+            aval = getattr(var, "aval", None)
+            shape = getattr(aval, "shape", None)
+            if shape:
+                worst = max(worst, max(shape))
+    return worst
+
+
+def count_eqns(jaxpr) -> int:
+    """Total eqn count, sub-jaxprs included."""
+    return sum(1 for _ in walk_eqns(jaxpr))
+
+
+def primitive_counts(jaxpr) -> Counter:
+    """Histogram of primitive names over the whole (recursive) jaxpr."""
+    return Counter(e.primitive.name for e in walk_eqns(jaxpr))
+
+
+def iter_consts(closed: ClosedJaxpr):
+    """Yield ``(path, const)`` for every closure constant, recursively.
+
+    Top-level consts are the classic jit-closure captures (the PR 6
+    bitwise-divergence class when a dataset lands here); nested
+    ``ClosedJaxpr`` params can carry their own. ``path`` names where the
+    const was found (e.g. ``"scan/pjit"``) for reporting.
+    """
+
+    def _walk(cj: ClosedJaxpr, path: str):
+        for const in cj.consts:
+            yield path, const
+        for eqn in cj.jaxpr.eqns:
+            for value in eqn.params.values():
+                for sub in _closed_subs(value):
+                    yield from _walk(sub, f"{path}/{eqn.primitive.name}")
+
+    def _closed_subs(value):
+        if isinstance(value, ClosedJaxpr):
+            yield value
+        elif isinstance(value, (list, tuple)):
+            for item in value:
+                yield from _closed_subs(item)
+        elif isinstance(value, dict):
+            for item in value.values():
+                yield from _closed_subs(item)
+
+    yield from _walk(closed, "")
+
+
+def const_bytes(closed: ClosedJaxpr) -> list[tuple[str, tuple, str, int]]:
+    """[(path, shape, dtype, nbytes)] for every closure constant."""
+    out = []
+    for path, const in iter_consts(closed):
+        arr = np.asarray(const) if not hasattr(const, "dtype") else const
+        shape = tuple(getattr(arr, "shape", ()) or ())
+        dtype = str(getattr(arr, "dtype", type(const).__name__))
+        nbytes = int(getattr(arr, "nbytes", 0) or 0)
+        out.append((path or "/", shape, dtype, nbytes))
+    return out
+
+
+def make_jaxpr_of(fn, *args, **kwargs) -> ClosedJaxpr:
+    """``jax.make_jaxpr`` with kwargs threaded — the one trace entry point
+    the analyzer uses, so rules never re-implement tracing policy."""
+    return jax.make_jaxpr(lambda *a: fn(*a, **kwargs))(*args)

@@ -54,7 +54,12 @@ class SamplingAlgorithm:
     dataset and its sufficient statistics passed as arguments instead of
     closed over. When present, the driver threads ``alg.data``/``alg.stats``
     through the jitted chunk as traced operands rather than baking them in
-    as compile-time constants. This is a bitwise-visible choice, not a
+    as compile-time constants. ``step_chains_data`` is the chain-batched
+    counterpart (``(keys (K,), state (K, ...), data, stats)``) for
+    algorithms whose batching is not vmap — the distributed fleet supplies
+    one that shard_maps the chain axis with the dataset replicated as an
+    operand, so even a sharded fleet's chunk jit carries no dataset
+    constant (the :mod:`repro.analysis` closure-constant rule pins this). This is a bitwise-visible choice, not a
     plumbing detail: XLA's constant folding rounds data-dependent
     reductions differently for a baked-in dataset than for the identical
     values passed as an operand (low-bit ``joint_lp``/``accept_prob``
@@ -76,6 +81,7 @@ class SamplingAlgorithm:
     step_chains: Callable[[jax.Array, Any], tuple[Any, StepStats]] | None = None
     init_chains: Callable[[jax.Array, Any], Any] | None = None
     step_data: Callable[..., tuple[Any, StepStats]] | None = None
+    step_chains_data: Callable[..., tuple[Any, StepStats]] | None = None
     data: Any = None
     stats: Any = None
 

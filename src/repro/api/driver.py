@@ -166,6 +166,15 @@ def _threads_data(alg: SamplingAlgorithm) -> bool:
     )
 
 
+def _threads_data_chains(alg: SamplingAlgorithm) -> bool:
+    """Whether a MULTI-chain chunk scan takes the dataset as an operand via
+    the algorithm's own chain-batched dispatch (``step_chains_data``, e.g.
+    the distributed fleet's shard_map with replicated data). Same exactness
+    rationale as :func:`_threads_data`; this form wins over it when both
+    are available and ``num_chains > 1``."""
+    return alg.step_chains_data is not None and alg.data is not None
+
+
 def _make_scan_fn(alg: SamplingAlgorithm, num_chains: int, cs: int):
     """One jitted chunk of the chain: cs steps, carrying the chain-stacked
     state natively when num_chains > 1 (one scan whose body is the
@@ -175,8 +184,9 @@ def _make_scan_fn(alg: SamplingAlgorithm, num_chains: int, cs: int):
     the ``step_data`` form get the dataset threaded as a trailing operand
     (see :func:`_threads_data`); the chunk signature grows accordingly."""
     multi = num_chains > 1
-    threads = _threads_data(alg)
-    if threads:
+    if multi and _threads_data_chains(alg):
+        step = alg.step_chains_data
+    elif _threads_data(alg):
         step = (
             jax.vmap(alg.step_data, in_axes=(0, 0, None, None))
             if multi else alg.step_data
@@ -508,7 +518,7 @@ def sample(
         return _cached(
             ("scan", alg.step, alg.step_chains, alg.position, num_chains,
              cs, _capacity_of(alg), kernels_common.chain_batching_enabled(),
-             alg.step_data),
+             alg.step_data, alg.step_chains_data),
             lambda: _make_scan_fn(alg, num_chains, cs),
         )
 
@@ -521,7 +531,8 @@ def sample(
     )
 
     def scan_operands(alg):
-        return (alg.data, alg.stats) if _threads_data(alg) else ()
+        threads = _threads_data(alg) or (multi and _threads_data_chains(alg))
+        return (alg.data, alg.stats) if threads else ()
 
     start = 0
     while start < num_samples:

@@ -231,6 +231,18 @@ def chain_fleet(alg, mesh):
         alg.batched_init(), mesh=mesh, in_specs=(row, row), out_specs=row,
         check_vma=False,
     )
+    # The operand-data form: chains sharded, the dataset REPLICATED as a
+    # traced operand (PS() specs) rather than closed over — the fleet's
+    # chunk jit then carries no dataset-sized constant, same exactness
+    # rationale as the driver's _threads_data path (and what lets the
+    # repro.analysis closure-constant rule pass on the fleet entry point).
+    step_chains_data = None
+    if alg.step_data is not None and alg.data is not None:
+        step_chains_data = jax.shard_map(
+            jax.vmap(alg.step_data, in_axes=(0, 0, None, None)),
+            mesh=mesh, in_specs=(row, row, PS(), PS()),
+            out_specs=(row, row), check_vma=False,
+        )
 
     grown = []  # memoized so the driver's jit cache sees a stable identity
 
@@ -244,6 +256,10 @@ def chain_fleet(alg, mesh):
         step=alg.step,
         step_chains=step_chains,
         init_chains=init_chains,
+        step_data=alg.step_data,
+        step_chains_data=step_chains_data,
+        data=alg.data,
+        stats=alg.stats,
         grow=grow if alg.grow is not None else None,
         resize=alg.resize,
         init_overflow=alg.init_overflow,

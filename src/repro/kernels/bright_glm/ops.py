@@ -43,11 +43,6 @@ from repro.kernels.bright_glm.kernel import (
 )
 from repro.kernels.bright_glm.ref import bright_glm_ref
 
-# Back-compat aliases: these lived here before kernels/common.py existed
-# (z_update/ops.py used to import them cross-package).
-_pad_to = common.pad_to
-default_interpret = common.default_interpret
-
 
 @lru_cache(maxsize=None)
 def _pallas_dispatch(family, nu, sigma, n_classes, block_rows, interpret):

@@ -15,7 +15,6 @@ partial softmaxes across context-parallel shards with two psums
 
 from __future__ import annotations
 
-import functools
 import math
 
 import jax

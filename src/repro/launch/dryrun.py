@@ -25,8 +25,6 @@ import time
 import traceback
 from pathlib import Path
 
-import jax
-
 from repro.configs import ARCH_IDS, SHAPES, get_config, shape_applicable
 from repro.launch import steps
 from repro.launch.hlo_analysis import analyze_hlo

@@ -8,7 +8,6 @@ either materialize real arrays (training) or ``.lower()`` directly
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

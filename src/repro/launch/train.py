@@ -23,7 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import Checkpointer
-from repro.configs import get_config, get_reduced
+from repro.configs import get_reduced
 from repro.distributed.par import Par
 from repro.models import transformer as T
 

@@ -12,7 +12,6 @@ bright-subset likelihood evaluations.
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.distributed.par import Par

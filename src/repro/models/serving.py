@@ -18,7 +18,6 @@ Decode keeps the training parameter layout (ZeRO-3 gathers per layer) as the
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Any
 
 import jax

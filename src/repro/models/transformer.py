@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.distributed import par as P
-from repro.distributed.par import Par, WDef, WSpec
+from repro.distributed.par import Par, WSpec
 from repro.models import layers as L
 from repro.models.config import ModelConfig, layer_kinds
 from repro.optim import adamw_init, adamw_update, warmup_cosine

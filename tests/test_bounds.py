@@ -7,7 +7,6 @@ quadratic form equaling the dense product — both are property-tested here.
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core.bounds import (

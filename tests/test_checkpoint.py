@@ -1,7 +1,5 @@
 """Checkpointing: atomicity, round-trip, chain-state resume, GC."""
 
-import json
-import shutil
 from pathlib import Path
 
 import jax

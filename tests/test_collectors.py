@@ -13,13 +13,11 @@
 """
 
 import jax
-import jax.extend.core  # noqa: F401  (jaxpr inspection helpers below)
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro import api
-from repro.api import collectors as collectors_lib
+from repro import analysis, api
 from repro.api import driver as driver_lib
 from repro.core import diagnostics
 from repro.core.flymc import StepStats
@@ -277,32 +275,10 @@ def test_collectors_bitwise_invariant_to_chunk_size(model, alg):
 # ---------------------------------------------------------------------------
 
 
-def _walk_eqns(jaxpr):
-    for eqn in jaxpr.eqns:
-        yield eqn
-        for v in eqn.params.values():
-            for sub in _subjaxprs(v):
-                yield from _walk_eqns(sub)
-
-
-def _subjaxprs(v):
-    if isinstance(v, jax.extend.core.ClosedJaxpr):
-        yield v.jaxpr
-    elif isinstance(v, jax.extend.core.Jaxpr):
-        yield v
-    elif isinstance(v, (list, tuple)):
-        for item in v:
-            yield from _subjaxprs(item)
-
-
-def _max_dim(jaxpr):
-    worst = 0
-    for eqn in _walk_eqns(jaxpr):
-        for var in list(eqn.invars) + list(eqn.outvars):
-            aval = getattr(var, "aval", None)
-            if aval is not None and getattr(aval, "shape", None):
-                worst = max(worst, max(aval.shape))
-    return worst
+# The local _walk_eqns/_subjaxprs/_max_dim copies migrated to
+# repro.analysis.walker — the same traversal the static-analysis CLI sweep
+# runs over the registered driver entry points.
+_max_dim = analysis.walker.max_dim
 
 
 def test_collectors_only_chunk_traces_no_num_samples_buffer(model, alg):

@@ -8,7 +8,6 @@ import os
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -15,7 +15,6 @@ the serving benchmark times and the example streams, shrunk to test sizes.
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -21,7 +21,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro import api
+from repro import analysis, api
+from repro.analysis import rules as analysis_rules
 from repro.core import brightness, numerics
 from repro.data import logistic_data
 from repro.models.bayes_glm import GLMModel
@@ -141,35 +142,12 @@ def test_counter_uniforms_are_per_datum_functions():
 # Cost model: no (N,) uniforms, no full-N cumsum in the fused step
 # ---------------------------------------------------------------------------
 
-_RNG_PRIMS = ("threefry2x32", "random_bits", "random_gamma")
-
-
-def _walk_eqns(jaxpr):
-    for eqn in jaxpr.eqns:
-        yield eqn
-        for v in eqn.params.values():
-            for sub in _subjaxprs(v):
-                yield from _walk_eqns(sub)
-
-
-def _subjaxprs(v):
-    if isinstance(v, jax.extend.core.ClosedJaxpr):
-        yield v.jaxpr
-    elif isinstance(v, jax.extend.core.Jaxpr):
-        yield v
-    elif isinstance(v, (list, tuple)):
-        for item in v:
-            yield from _subjaxprs(item)
-
-
-def _max_eqn_size(jaxpr, prim_names):
-    """Largest output element count over eqns whose primitive matches."""
-    worst = 0
-    for eqn in _walk_eqns(jaxpr):
-        if any(p in eqn.primitive.name for p in prim_names):
-            for var in eqn.outvars:
-                worst = max(worst, int(np.prod(var.aval.shape or (1,))))
-    return worst
+# The ad-hoc _walk_eqns/_subjaxprs/_max_eqn_size helpers that used to live
+# here are now repro.analysis.walker — the one shared jaxpr-inspection
+# substrate (the analyzer's cost-model rule runs the same sweep over the
+# registered step entry points in CI).
+_RNG_PRIMS = analysis_rules.RNG_PRIMS
+_max_eqn_size = analysis.walker.max_eqn_size
 
 
 def _step_jaxpr(z_backend, n=4096, capacity=256):
