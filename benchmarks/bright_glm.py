@@ -21,25 +21,40 @@ from __future__ import annotations
 
 import jax
 
+import jax.numpy as jnp
+
 from benchmarks._util import BENCH_PATH, best_of, merge_write, quickstart_problem
 from repro import api
+from repro.analysis.kernels import derive_traffic
 from repro.core import brightness, flymc
+from repro.kernels.bright_glm.ops import bright_glm
 from repro.kernels.common import default_interpret
 
 
-def _bytes_model(n_bright_cap: int, d: int, dp: int) -> dict:
+def _bytes_model(n: int, d: int, capacity: int) -> dict:
     """Analytic HBM traffic per θ-eval (f32), C = bright capacity.
 
-    jnp: the gather materializes a (C, D) row matrix (read + write), the
-    bound evaluation streams it again, plus θ and the per-row t/ξ/δ vectors.
-    pallas: each UNPADDED row crosses HBM→VMEM exactly once (the DMA pads
-    in VMEM), θ is read once at its lane-padded width, and only δ + the
-    scalar total come back.
+    jnp: hand model — the gather materializes a (C, D) row matrix (read +
+    write), the bound evaluation streams it again, plus θ and the per-row
+    t/ξ/δ vectors; XLA's gather pipeline has no BlockSpecs to derive a
+    model from. pallas: derived from the kernel's own BlockSpecs, grid and
+    DMAs by ``repro.analysis.kernels.derive_traffic`` — the same model the
+    ``kernel-bytes`` sweep rule pins — so this record and the static
+    analysis cannot drift apart.
     """
-    c = n_bright_cap
+    c = capacity
+    s, f32, i32 = jax.ShapeDtypeStruct, jnp.float32, jnp.int32
+    (model,) = derive_traffic(
+        lambda *a: bright_glm(*a, interpret=True),
+        s((n, d), f32), s((n,), f32), s((n,), f32),
+        s((c,), i32), s((), i32), s((d,), f32),
+    ).values()
     return {
         "jnp": 3 * c * d * 4 + d * 4 + 4 * c * 4,
-        "pallas": c * d * 4 + dp * 4 + 3 * c * 4 + 4,
+        "pallas": model["total"],
+        "pallas_terms": {
+            name: op["bytes"] for name, op in model["per_operand"].items()
+        },
     }
 
 
@@ -50,7 +65,7 @@ def bench(n=5000, d=21, capacity=1024, iters=300, q_db=0.01, reps=3):
 
     record = {"problem": {"name": "quickstart-logistic", "n": n, "d": d,
                           "capacity": capacity, "iters": iters, "q_db": q_db}}
-    bmodel = _bytes_model(capacity, d, ((d + 127) // 128) * 128)
+    bmodel = _bytes_model(n, d, capacity)
 
     for backend in ("jnp", "pallas"):
         alg = api.firefly(
@@ -84,6 +99,8 @@ def bench(n=5000, d=21, capacity=1024, iters=300, q_db=0.01, reps=3):
             "hbm_bytes_per_eval_model": bmodel[backend],
             "interpret": interpret if backend == "pallas" else False,
         }
+        if backend == "pallas":
+            record[backend]["hbm_bytes_terms"] = bmodel["pallas_terms"]
     # A compiled-vs-interpreted ratio is not a kernel-speed comparison:
     # record it only when the pallas numbers come from a real TPU compile
     # (same null-when-meaningless policy as driver_overhead's

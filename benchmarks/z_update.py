@@ -23,20 +23,31 @@ from __future__ import annotations
 
 import jax
 
+import jax.numpy as jnp
+
 from benchmarks._util import BENCH_PATH, best_of, merge_write, quickstart_problem
 from repro import api
+from repro.analysis.kernels import derive_traffic
 from repro.core import brightness, flymc
 from repro.kernels.common import default_interpret
+from repro.kernels.z_update.ops import z_candidates
 
 
-def _bytes_model(n: int, capacity: int) -> dict:
+def _bytes_model(n: int, capacity: int, q_db: float) -> dict:
     """Analytic HBM traffic per z-phase (4-byte lanes), by term.
 
-    jnp: every term is length-N — three uniform arrays (write + read), two
-    (N,) boolean scatter round-trips for z, and the from_z rebuild (read z,
-    two cumsums r+w, write tab, scatter arr). fused: the partition array
-    streams once through the kernel (+ one pad/reshape round-trip feeding
-    it), everything else is O(C) buffers and O(changed) scatters.
+    jnp: hand model — every term is length-N: three uniform arrays (write +
+    read), two (N,) boolean scatter round-trips for z, and the from_z
+    rebuild (read z, two cumsums r+w, write tab, scatter arr); an XLA
+    pipeline with no BlockSpecs to derive from. fused: the in-kernel terms
+    (``kernel_*`` — the padded partition-array stream, the candidate
+    writeback, the count scalar) are derived from the kernel's own
+    BlockSpecs and grid by ``repro.analysis.kernels.derive_traffic``, the
+    same model the ``kernel-bytes`` sweep rule pins; only the XLA glue
+    around the kernel stays hand-modeled: the pad/reshape round-trip
+    feeding it, the O(C) counter-uniform/bright buffers outside the
+    derived candidate writeback, and the O(changed) ``apply_flips``
+    scatters.
     """
     c = capacity
     jnp_terms = {
@@ -45,10 +56,18 @@ def _bytes_model(n: int, capacity: int) -> dict:
         "from_z_rebuild": 8 * 4 * n,  # z + 2 cumsums (r+w) + tab + arr
         "candidate_buffers_O(C)": 6 * 4 * c,
     }
+    s, i32 = jax.ShapeDtypeStruct, jnp.int32
+    (model,) = derive_traffic(
+        lambda arr, num, kw: z_candidates(
+            arr, num, kw, q_db=q_db, cand_capacity=c, interpret=True
+        ),
+        s((n,), i32), s((), i32), s((2,), i32),
+    ).values()
     fused_terms = {
-        "arr_stream_in_kernel": 4 * n,
+        **{f"kernel_{name}": op["bytes"]
+           for name, op in model["per_operand"].items()},
         "arr_pad_reshape": 2 * 4 * n,
-        "bright+cand_buffers_O(C)": 10 * 4 * c,
+        "bright_buffers_O(C)": 9 * 4 * c,
         "apply_flips_O(changed)": 8 * 4 * c,
     }
     return {
@@ -86,7 +105,7 @@ def bench(n=5000, d=21, capacity=1024, iters=300, q_db=0.01, reps=3):
 
     record = {"problem": {"name": "quickstart-logistic", "n": n, "d": d,
                           "capacity": capacity, "iters": iters, "q_db": q_db}}
-    bmodel = _bytes_model(n, capacity)
+    bmodel = _bytes_model(n, capacity, q_db)
 
     for zb in ("jnp", "fused"):
         alg = api.firefly(

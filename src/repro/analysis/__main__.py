@@ -4,7 +4,10 @@ Prints the per-entry-point rule table and exits nonzero on any regression:
 an unexpected finding, OR an expected-fail rule that went quiet (the jnp
 engine passing cost-model would mean the detector is blind). ``--json``
 emits the same record ``benchmarks/run.py`` stores under
-``static_analysis`` in ``BENCH_flymc.json``.
+``static_analysis`` in ``BENCH_flymc.json``; ``--annotations`` emits one
+GitHub ``::error`` workflow command per regression (on stderr, so it
+composes with ``--json`` redirection) — the CI static-analysis lane uses
+both to surface per-rule findings directly on the PR.
 """
 
 from __future__ import annotations
@@ -14,6 +17,33 @@ import json
 import sys
 
 from repro.analysis import registry
+
+
+def annotation_lines(summary) -> list[str]:
+    """One GitHub ``::error`` workflow command per regression.
+
+    Workflow-command payloads are single-line; GitHub's escaping for the
+    message body is %0A/%0D for newlines and %25 for literal percents.
+    """
+
+    def esc(s: str) -> str:
+        return (s.replace("%", "%25").replace("\r", "%0D")
+                 .replace("\n", "%0A"))
+
+    lines = []
+    for report in summary.reports:
+        for f in report.unexpected_failures:
+            lines.append(
+                f"::error title={esc(f'[{f.rule}] {report.entry_point}')}"
+                f"::{esc(f.message)}"
+            )
+        for rule in sorted(report.missing_expected_failures):
+            lines.append(
+                f"::error title={esc(f'[{rule}] {report.entry_point}')}"
+                f"::expected-fail rule passed — the detector went blind "
+                f"(xpass fails the sweep)"
+            )
+    return lines
 
 
 def main(argv=None) -> int:
@@ -29,6 +59,9 @@ def main(argv=None) -> int:
                         help="list registered entry points and exit")
     parser.add_argument("--json", action="store_true",
                         help="emit the sweep record as JSON")
+    parser.add_argument("--annotations", action="store_true",
+                        help="emit GitHub ::error workflow commands "
+                             "(stderr) for every regression")
     args = parser.parse_args(argv)
 
     if args.list:
@@ -42,6 +75,9 @@ def main(argv=None) -> int:
             f"unknown entry points {unknown}; see --list"
         )
     summary = registry.run_registry(args.names or None)
+    if args.annotations:
+        for line in annotation_lines(summary):
+            print(line, file=sys.stderr)
     if args.json:
         print(json.dumps(summary.to_record(), indent=2, sort_keys=True))
     else:

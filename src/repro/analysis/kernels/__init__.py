@@ -1,0 +1,41 @@
+"""Kernel-level static verification for the repo's Pallas kernels.
+
+Four analyses over every reachable ``pallas_call`` (grid + BlockSpecs +
+operand provenance + the inner kernel jaxpr):
+
+* :mod:`.intervals` — interval-domain bounds proof for dynamic ref
+  indices and DMAs (``kernel-bounds``),
+* :mod:`.race` — revisited-block accumulator writes vs grid semantics
+  (``kernel-race``),
+* :mod:`.taint` — ``pad_to`` padding lanes must be masked before any
+  reduction consumes them (``kernel-padding``),
+* :mod:`.bytes_model` — the BlockSpec-derived HBM traffic model the
+  benchmarks record instead of hand-written byte formulas
+  (``kernel-bytes``).
+
+See :mod:`repro.kernels.common` for the sequential-grid-accumulator
+contract these rules enforce.
+"""
+
+from repro.analysis.kernels.bytes_model import derive, derive_traffic
+from repro.analysis.kernels.extract import KernelCall, Operand, find_kernel_calls
+from repro.analysis.kernels.rules import (
+    BytesModelRule,
+    GridRaceRule,
+    KernelBoundsRule,
+    PaddingTaintRule,
+    kernel_rules,
+)
+
+__all__ = [
+    "BytesModelRule",
+    "GridRaceRule",
+    "KernelBoundsRule",
+    "KernelCall",
+    "Operand",
+    "PaddingTaintRule",
+    "derive",
+    "derive_traffic",
+    "find_kernel_calls",
+    "kernel_rules",
+]

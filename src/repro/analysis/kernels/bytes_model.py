@@ -1,0 +1,330 @@
+"""Derive a per-kernel HBM traffic model from BlockSpecs × grid × dtype.
+
+The hand-written ``_bytes_model`` functions the benchmarks used to carry
+restated, by hand, what the BlockSpecs already say: which blocks move per
+grid step. This module derives that model from the traced ``pallas_call``
+itself, so benchmarks, roofline numbers, and the static verifier share
+one source of truth.
+
+For a **blocked** operand (a real BlockSpec), the pipeline fetches a
+block whenever the block index changes between consecutive grid steps
+(row-major order, last axis fastest — TPU's sequential schedule); an
+index map that ignores the innermost axes therefore keeps its block
+resident and costs nothing on revisits. We enumerate the grid (capped;
+beyond the cap, the dependence-derived product bound is used and noted),
+evaluate the index-map jaxpr on concrete integers, and count changes.
+
+For a ``memory_space=ANY`` operand the data plane is explicit
+``dma_start`` eqns in the kernel body: each copy's element count is the
+product of its NDIndexer result shape, counted once per grid step per
+(possibly ``pl.when``-guarded) eqn — an upper bound for conditional
+DMAs, which is the right sign for a traffic model.
+
+Scalar-prefetch operands are SMEM-resident and reported separately,
+excluded from the headline total (matching the deleted hand models'
+convention). Scratch is VMEM and costs nothing.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax.extend.core as jex_core
+
+MAX_ENUM_STEPS = 1_000_000
+
+
+def _eval_index_map(index_map, grid_idx: tuple, n_grid: int):
+    """Evaluate an index-map jaxpr on concrete grid indices.
+
+    Scalar-prefetch ref operands (if the map reads them) make the map
+    non-evaluable — return None and let the caller fall back.
+    """
+    jaxpr = index_map.jaxpr if hasattr(index_map, "jaxpr") else index_map
+    consts = getattr(index_map, "consts", [])
+    env: dict = {}
+    for cv, cval in zip(jaxpr.constvars, consts):
+        try:
+            env[cv] = int(np.asarray(cval))
+        except Exception:
+            return None
+    invars = list(jaxpr.invars)
+    for v, idx in zip(invars[:n_grid], grid_idx):
+        env[v] = int(idx)
+
+    def val(atom):
+        if isinstance(atom, jex_core.Literal):
+            return int(np.asarray(atom.val))
+        if atom not in env:
+            raise KeyError(atom)
+        return env[atom]
+
+    try:
+        for eqn in jaxpr.eqns:
+            name = eqn.primitive.name
+            if name == "add":
+                env[eqn.outvars[0]] = val(eqn.invars[0]) + val(eqn.invars[1])
+            elif name == "sub":
+                env[eqn.outvars[0]] = val(eqn.invars[0]) - val(eqn.invars[1])
+            elif name == "mul":
+                env[eqn.outvars[0]] = val(eqn.invars[0]) * val(eqn.invars[1])
+            elif name in ("div", "floor_divide"):
+                env[eqn.outvars[0]] = val(eqn.invars[0]) // val(
+                    eqn.invars[1])
+            elif name == "rem":
+                env[eqn.outvars[0]] = val(eqn.invars[0]) % val(eqn.invars[1])
+            elif name in ("convert_element_type", "copy", "squeeze",
+                          "reshape", "broadcast_in_dim"):
+                env[eqn.outvars[0]] = val(eqn.invars[0])
+            elif name == "max":
+                env[eqn.outvars[0]] = max(val(eqn.invars[0]),
+                                          val(eqn.invars[1]))
+            elif name == "min":
+                env[eqn.outvars[0]] = min(val(eqn.invars[0]),
+                                          val(eqn.invars[1]))
+            elif name == "neg":
+                env[eqn.outvars[0]] = -val(eqn.invars[0])
+            else:
+                return None
+        return tuple(val(ov) for ov in jaxpr.outvars)
+    except KeyError:
+        return None
+
+
+def _grid_steps(grid):
+    """Row-major enumeration (last axis fastest), matching TPU order."""
+    if not grid:
+        yield ()
+        return
+    idx = [0] * len(grid)
+    total = 1
+    for g in grid:
+        total *= int(g)
+    for _ in range(total):
+        yield tuple(idx)
+        for ax in range(len(grid) - 1, -1, -1):
+            idx[ax] += 1
+            if idx[ax] < grid[ax]:
+                break
+            idx[ax] = 0
+
+
+def _dep_axes(index_map, n_grid):
+    from repro.analysis.kernels.race import _index_map_deps
+
+    dep, dynamic = _index_map_deps(index_map, n_grid)
+    return dep, dynamic
+
+
+def _blocked_operand_bytes(op, grid) -> dict:
+    block_elems = 1
+    for b in (op.block_shape or ()):
+        block_elems *= int(b)
+    block_bytes = block_elems * op.itemsize
+    total_steps = 1
+    for g in grid:
+        total_steps *= int(g)
+
+    note = None
+    if total_steps <= MAX_ENUM_STEPS:
+        fetches = 0
+        prev = None
+        exact = True
+        for step in _grid_steps(grid):
+            bi = _eval_index_map(op.index_map, step, len(grid))
+            if bi is None:
+                exact = False
+                break
+            if bi != prev:
+                fetches += 1
+                prev = bi
+        if not exact:
+            fetches = None
+    else:
+        fetches = None
+        note = f"grid has {total_steps} steps; used dependence bound"
+
+    if fetches is None:
+        dep, dynamic = _dep_axes(op.index_map, len(grid))
+        fetches = 1
+        for ax in sorted(dep):
+            fetches *= int(grid[ax])
+        if dynamic:
+            note = "index map reads scalar-prefetch data; bound assumes " \
+                   "one fetch per dependent-axis step"
+    return {
+        "bytes": fetches * block_bytes,
+        "fetches": fetches,
+        "block_bytes": block_bytes,
+        "note": note,
+    }
+
+
+def _indexer_elems(indexer) -> int:
+    elems = 1
+    for idx in getattr(indexer, "indices", ()):
+        if hasattr(idx, "size"):
+            elems *= int(idx.size)
+        elif isinstance(idx, (int, np.integer)):
+            pass
+        else:
+            shape = tuple(getattr(getattr(idx, "aval", None), "shape",
+                                  ()) or ())
+            for s in shape:
+                elems *= int(s)
+    return elems
+
+
+def _dma_bytes_per_step(call) -> dict:
+    """Per-grid-step DMA traffic for each ANY operand, by origin."""
+    import jax.tree_util as jtu
+
+    any_ops = {op.index: op for op in call.operands if op.is_any}
+    if not any_ops:
+        return {}
+    invar_to_op = {}
+    for op in call.operands:
+        invar_to_op[call.jaxpr.invars[op.index]] = op
+    per_op: dict = {op.origin: 0 for op in any_ops.values()}
+
+    def aval_of(atom):
+        return getattr(atom, "aval", None)
+
+    def is_ref(atom):
+        aval = aval_of(atom)
+        return aval is not None and "Ref" in type(aval).__name__
+
+    def walk_indexers(value, out):
+        if hasattr(value, "indices") and hasattr(value, "shape"):
+            out.append(value)
+        elif isinstance(value, (list, tuple)):
+            for item in value:
+                walk_indexers(item, out)
+
+    def visit(jaxpr, alias):
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "dma_start":
+                try:
+                    structure = jtu.tree_unflatten(
+                        eqn.params.get("tree"), list(eqn.invars))
+                except Exception:
+                    continue
+                items = list(structure) if isinstance(
+                    structure, (tuple, list)) else [structure]
+                cur = None
+                for item in items:
+                    if is_ref(item) and not isinstance(item,
+                                                       (tuple, list)):
+                        cur = alias.get(item, item)
+                    elif cur is not None and cur in invar_to_op and \
+                            invar_to_op[cur].is_any:
+                        op = invar_to_op[cur]
+                        idxrs: list = []
+                        walk_indexers(item, idxrs)
+                        elems = 1
+                        shape = op.ref_shape
+                        if idxrs:
+                            for idxr in idxrs:
+                                elems = _indexer_elems(idxr)
+                                # trailing unindexed dims
+                                n_idx = len(getattr(idxr, "indices", ()))
+                                for s in shape[n_idx:]:
+                                    elems *= int(s)
+                                shape = ()
+                        else:
+                            for s in shape:
+                                elems *= int(s)
+                        per_op[op.origin] += elems * op.itemsize
+            else:
+                for value in eqn.params.values():
+                    subs = []
+                    if isinstance(value, jex_core.ClosedJaxpr):
+                        subs = [value.jaxpr]
+                    elif isinstance(value, jex_core.Jaxpr):
+                        subs = [value]
+                    elif isinstance(value, (tuple, list)):
+                        for v in value:
+                            if isinstance(v, jex_core.ClosedJaxpr):
+                                subs.append(v.jaxpr)
+                    for sub in subs:
+                        sub_alias = dict(alias)
+                        if len(sub.invars) == len(eqn.invars):
+                            for outer, inner in zip(eqn.invars,
+                                                    sub.invars):
+                                if not isinstance(outer,
+                                                  jex_core.Literal):
+                                    sub_alias[inner] = alias.get(outer,
+                                                                 outer)
+                        visit(sub, sub_alias)
+
+    visit(call.jaxpr, {})
+    return per_op
+
+
+def derive(call) -> dict:
+    """The full derived traffic model for one KernelCall."""
+    grid = call.grid
+    total_steps = 1
+    for g in grid:
+        total_steps *= int(g)
+    per_operand: dict = {}
+    total = 0
+
+    dma_per_step = _dma_bytes_per_step(call)
+    for op in call.inputs + call.outputs:
+        if op.is_any:
+            per_step = dma_per_step.get(op.origin, 0)
+            entry = {
+                "kind": "dma",
+                "bytes": per_step * total_steps,
+                "per_step": per_step,
+                "note": "explicit dma_start traffic "
+                        "(pl.when-guarded copies counted — upper bound)"
+                        if per_step else "ANY operand with no dma_start",
+            }
+        else:
+            entry = _blocked_operand_bytes(op, grid)
+            entry["kind"] = "read" if op.kind == "input" else "write"
+        key = op.origin
+        if key in per_operand:
+            key = f"{op.origin}#{op.index}"
+        per_operand[key] = entry
+        total += entry["bytes"]
+
+    prefetch_bytes = 0
+    for op in call.prefetch:
+        n = 1
+        for s in (op.array_shape or op.ref_shape):
+            n *= int(s)
+        prefetch_bytes += n * op.itemsize
+
+    return {
+        "name": call.name,
+        "grid": tuple(grid),
+        "steps": total_steps,
+        "total": int(total),
+        "per_operand": per_operand,
+        "scalar_prefetch_bytes": int(prefetch_bytes),
+    }
+
+
+def derive_traffic(fn, *args, **kwargs) -> dict:
+    """Trace ``fn`` and derive the traffic model of every kernel in it.
+
+    Returns ``{kernel_name: model}`` (names deduped with ``#i``). This is
+    the helper the benchmarks use instead of hand-written byte formulas.
+    """
+    import jax
+
+    from repro.analysis.kernels.extract import find_kernel_calls
+
+    closed = jax.make_jaxpr(lambda *a: fn(*a, **kwargs))(*args)
+    out: dict = {}
+    for call in find_kernel_calls(closed):
+        key = call.name
+        i = 1
+        while key in out:
+            key = f"{call.name}#{i}"
+            i += 1
+        out[key] = derive(call)
+    return out

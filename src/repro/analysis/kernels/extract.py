@@ -1,0 +1,476 @@
+"""Extract ``pallas_call`` sites, with outer-jaxpr provenance, for analysis.
+
+:func:`find_kernel_calls` walks a traced (Closed)jaxpr — descending into
+``pjit``/``custom_vjp``/``scan``/``cond`` the same way
+:mod:`repro.analysis.walker` does — while running a light forward dataflow
+over the *outer* program. Two facts are tracked per outer value:
+
+* an interval (see :mod:`.intervals`) — this is how
+  ``repro.kernels.common.clamp_index``'s ``clamp`` eqn turns an arbitrary
+  int32 index buffer into ``[0, N-1]`` *before* it becomes a
+  scalar-prefetch operand, which is what makes the kernel-side DMA bounds
+  provable;
+* a padding taint (see :mod:`.taint`) — ``jnp.pad`` / ``pad_to`` with a
+  zero or sentinel fill marks the padded axes, and the taint follows the
+  value through reshapes/concats into the kernel operand.
+
+At each ``pallas_call`` eqn the grid, BlockSpec index maps, block shapes,
+array shapes and the kernel's own jaxpr are packaged into a
+:class:`KernelCall` whose operands line up 1:1 with the kernel jaxpr's
+invars (scalar-prefetch refs, then inputs, then outputs, then scratch).
+The four kernel analyses (bounds, race, taint, bytes) all consume this
+one structure.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.extend.core as jex_core
+import numpy as np
+
+from repro.analysis.kernels.intervals import (
+    Interval,
+    dtype_interval,
+    literal_interval,
+)
+from repro.analysis.kernels.taint import (
+    DIRTY,
+    SENTINEL,
+    ZERO,
+    TFact,
+    _join_kind,
+    join as taint_join,
+    remap_axes,
+    reshape_remap,
+)
+
+_DIRECT_CALLS = {
+    "pjit", "closed_call", "core_call", "remat", "checkpoint",
+    "custom_jvp_call", "custom_vjp_call", "custom_vjp_call_jaxpr",
+    "custom_vmap_call",
+}
+
+
+@dataclasses.dataclass
+class VarFact:
+    """Outer-scope knowledge about one traced value."""
+
+    interval: Interval | None = None
+    taint: TFact | None = None
+
+    @staticmethod
+    def unknown(atom=None) -> "VarFact":
+        dtype = getattr(getattr(atom, "aval", None), "dtype", None)
+        iv = dtype_interval(dtype) if dtype is not None else None
+        return VarFact(interval=iv, taint=TFact.clean())
+
+
+@dataclasses.dataclass
+class Operand:
+    """One kernel-jaxpr invar: its ref, block geometry, and provenance."""
+
+    index: int           # position among the kernel jaxpr's invars
+    kind: str            # scalar_prefetch | input | output | scratch
+    io_index: int        # position within its kind
+    origin: str          # BlockMapping.origin or synthesized label
+    ref_shape: tuple     # the kernel-side ref aval shape
+    block_shape: tuple | None
+    array_shape: tuple | None
+    dtype: Any
+    itemsize: int
+    index_map: Any       # ClosedJaxpr or None
+    is_any: bool         # memory_space=ANY (manual DMA) operand
+    interval: Interval | None
+    taint: TFact | None
+
+
+@dataclasses.dataclass
+class KernelCall:
+    """One pallas_call: kernel jaxpr + grid + aligned operands."""
+
+    name: str
+    jaxpr: Any           # the raw kernel Jaxpr
+    grid: tuple
+    operands: list       # aligned with jaxpr.invars
+    num_scalar_prefetch: int
+    num_inputs: int
+    num_outputs: int
+    dimension_semantics: tuple | None
+    path: tuple
+
+    @property
+    def prefetch(self):
+        return [op for op in self.operands if op.kind == "scalar_prefetch"]
+
+    @property
+    def inputs(self):
+        return [op for op in self.operands if op.kind == "input"]
+
+    @property
+    def outputs(self):
+        return [op for op in self.operands if op.kind == "output"]
+
+    @property
+    def scratch(self):
+        return [op for op in self.operands if op.kind == "scratch"]
+
+
+def _aval_of(atom):
+    return getattr(atom, "aval", None)
+
+
+def _shape(atom) -> tuple:
+    return tuple(getattr(_aval_of(atom), "shape", ()) or ())
+
+
+def find_kernel_calls(closed) -> list:
+    """All pallas_call sites reachable from a ClosedJaxpr, with facts."""
+    jaxpr = closed.jaxpr if hasattr(closed, "jaxpr") else closed
+    consts = getattr(closed, "consts", [])
+    calls: list[KernelCall] = []
+    const_facts = {}
+    for cv, cval in zip(jaxpr.constvars, consts):
+        fact = VarFact.unknown(cv)
+        try:
+            arr = np.asarray(cval)
+            if arr.size and (np.issubdtype(arr.dtype, np.number)
+                             or arr.dtype == np.bool_):
+                fact.interval = Interval(float(arr.min()), float(arr.max()))
+        except Exception:
+            pass
+        const_facts[cv] = fact
+    in_facts = [VarFact.unknown(v) for v in jaxpr.invars]
+    _eval_jaxpr(jaxpr, in_facts, const_facts, (), calls)
+    return calls
+
+
+def _fact_of(atom, env) -> VarFact:
+    if isinstance(atom, jex_core.Literal):
+        return VarFact(interval=literal_interval(atom.val),
+                       taint=TFact.clean())
+    f = env.get(atom)
+    return f if f is not None else VarFact.unknown(atom)
+
+
+def _eval_jaxpr(jaxpr, in_facts, const_facts, path, calls):
+    env: dict[Any, VarFact] = dict(const_facts)
+    for v, f in zip(jaxpr.invars, in_facts):
+        env[v] = f if f is not None else VarFact.unknown(v)
+    for eqn in jaxpr.eqns:
+        _eval_eqn(eqn, env, path, calls)
+    return [_fact_of(ov, env) for ov in jaxpr.outvars]
+
+
+def _eval_eqn(eqn, env, path, calls):
+    name = eqn.primitive.name
+    params = eqn.params
+    fact = lambda i: _fact_of(eqn.invars[i], env)
+
+    def out(f: VarFact, i=0):
+        env[eqn.outvars[i]] = f
+
+    if name == "pallas_call":
+        calls.append(_extract_call(eqn, env, path))
+        for ov in eqn.outvars:
+            env[ov] = VarFact.unknown(ov)
+        return
+
+    if name in _DIRECT_CALLS:
+        for value in params.values():
+            sub = None
+            if isinstance(value, jex_core.ClosedJaxpr):
+                sub = value
+            elif isinstance(value, jex_core.Jaxpr):
+                sub = jex_core.ClosedJaxpr(value, ())
+            if sub is not None and len(sub.jaxpr.invars) == len(eqn.invars):
+                sub_consts = {
+                    cv: VarFact.unknown(cv)
+                    for cv in sub.jaxpr.constvars
+                }
+                outs = _eval_jaxpr(
+                    sub.jaxpr,
+                    [_fact_of(a, env) for a in eqn.invars],
+                    sub_consts, path + (name,), calls,
+                )
+                for ov, f in zip(eqn.outvars, outs):
+                    env[ov] = f
+                return
+        for ov in eqn.outvars:
+            env[ov] = VarFact.unknown(ov)
+        return
+
+    if name in ("scan", "while", "cond"):
+        # Still descend to find nested pallas_calls, but with unknown
+        # facts (loop-carried provenance is PR-future work).
+        for value in params.values():
+            subs = []
+            if isinstance(value, jex_core.ClosedJaxpr):
+                subs = [value]
+            elif isinstance(value, (tuple, list)):
+                subs = [v for v in value
+                        if isinstance(v, jex_core.ClosedJaxpr)]
+            for sub in subs:
+                _eval_jaxpr(
+                    sub.jaxpr,
+                    [VarFact.unknown(v) for v in sub.jaxpr.invars],
+                    {cv: VarFact.unknown(cv)
+                     for cv in sub.jaxpr.constvars},
+                    path + (name,), calls,
+                )
+        for ov in eqn.outvars:
+            env[ov] = VarFact.unknown(ov)
+        return
+
+    # -- outer transfer functions (the ones provenance depends on) -----------
+    if name == "clamp":  # clamp(lo, x, hi) — the clamp_index signature
+        lo, x, hi = fact(0), fact(1), fact(2)
+        iv = None
+        if x.interval is not None and lo.interval is not None and \
+                hi.interval is not None:
+            iv = x.interval.max_(lo.interval).min_(hi.interval)
+        # values are clamped, but padded *slots* are still padding
+        out(VarFact(interval=iv, taint=(x.taint or TFact.clean()).copy()))
+    elif name == "iota":
+        dim = int(params.get("dimension", 0))
+        shape = params.get("shape") or _shape(eqn.outvars[0])
+        f = TFact.clean()
+        f.pos_axes = {dim}
+        out(VarFact(interval=Interval(0, float(max(int(shape[dim]) - 1,
+                                                   0))), taint=f))
+    elif name == "pad":
+        x = fact(0)
+        padval = eqn.invars[1]
+        pv = None
+        if isinstance(padval, jex_core.Literal):
+            arr = np.asarray(padval.val)
+            if arr.size == 1:
+                pv = float(arr.reshape(-1)[0])
+        else:
+            # jnp.pad routes the fill through a scalar Var; a point
+            # interval recovers the constant (0.0 for pad_to).
+            pf = fact(1)
+            if pf.interval is not None and pf.interval.lo == pf.interval.hi:
+                pv = float(pf.interval.lo)
+        t = (x.taint or TFact.clean()).copy()
+        for ax, (lo_p, hi_p, interior) in enumerate(
+            params.get("padding_config", ())
+        ):
+            if lo_p > 0 or hi_p > 0 or interior > 0:
+                kind = (ZERO, 0.0) if pv == 0.0 else (
+                    (SENTINEL, pv) if pv is not None else (DIRTY, None)
+                )
+                t.taint[ax] = _join_kind(t.taint.get(ax), kind)
+        iv = None
+        if x.interval is not None:
+            iv = x.interval if pv is None else x.interval.join(
+                Interval(pv, pv))
+        out(VarFact(interval=iv, taint=t))
+    elif name in ("reshape", "squeeze", "expand_dims"):
+        x = fact(0)
+        t = remap_axes(x.taint or TFact.clean(),
+                       reshape_remap(_shape(eqn.invars[0]),
+                                     _shape(eqn.outvars[0])))
+        out(VarFact(interval=x.interval, taint=t))
+    elif name == "broadcast_in_dim":
+        x = fact(0)
+        dims = params.get("broadcast_dimensions", ())
+        t = remap_axes(x.taint or TFact.clean(),
+                       {i: (int(d),) for i, d in enumerate(dims)})
+        out(VarFact(interval=x.interval, taint=t))
+    elif name == "transpose":
+        x = fact(0)
+        perm = params.get("permutation", ())
+        t = remap_axes(x.taint or TFact.clean(),
+                       {int(old): (new,) for new, old in enumerate(perm)})
+        out(VarFact(interval=x.interval, taint=t))
+    elif name == "concatenate":
+        iv = fact(0).interval
+        t = (fact(0).taint or TFact.clean()).copy()
+        for i in range(1, len(eqn.invars)):
+            fi = fact(i)
+            if iv is not None and fi.interval is not None:
+                iv = iv.join(fi.interval)
+            else:
+                iv = None
+            t = taint_join(t, fi.taint or TFact.clean())
+        out(VarFact(interval=iv, taint=t))
+    elif name == "convert_element_type":
+        x = fact(0)
+        tgt = dtype_interval(params.get("new_dtype", np.float32))
+        iv = x.interval.meet(tgt) if x.interval is not None and \
+            not x.interval.empty else tgt
+        out(VarFact(interval=iv, taint=(x.taint or TFact.clean()).copy()))
+    elif name in ("add", "sub", "mul", "max", "min"):
+        a, b = fact(0), fact(1)
+        iv = None
+        if a.interval is not None and b.interval is not None:
+            op = {"add": Interval.add, "sub": Interval.sub,
+                  "mul": Interval.mul, "max": Interval.max_,
+                  "min": Interval.min_}[name]
+            iv = op(a.interval, b.interval)
+        ta, tb = a.taint or TFact.clean(), b.taint or TFact.clean()
+        t = TFact.clean()
+        for ax in set(ta.taint) | set(tb.taint):
+            ka, kb = ta.taint.get(ax), tb.taint.get(ax)
+            if name == "mul" and ((ka and ka[0] == ZERO)
+                                  or (kb and kb[0] == ZERO)):
+                t.taint[ax] = (ZERO, 0.0)
+            elif ka and kb and ka[0] == ZERO and kb[0] == ZERO and \
+                    name in ("add", "sub", "max", "min"):
+                t.taint[ax] = (ZERO, 0.0)
+            else:
+                t.taint[ax] = (DIRTY, None)
+        out(VarFact(interval=iv, taint=t))
+    elif name in ("gather", "take"):
+        # data gathered through indices: tainted indices poison the
+        # batch axes of the output
+        idx_fact = fact(1) if len(eqn.invars) > 1 else VarFact.unknown()
+        t = TFact.clean()
+        if idx_fact.taint is not None and not idx_fact.taint.is_clean:
+            t.taint["*"] = (DIRTY, None)
+        data = fact(0)
+        out(VarFact(interval=data.interval, taint=t))
+    elif name in ("slice", "dynamic_slice", "rev", "stop_gradient",
+                  "copy", "reduce_precision", "device_put"):
+        x = fact(0)
+        out(VarFact(interval=x.interval,
+                    taint=(x.taint or TFact.clean()).copy()))
+    else:
+        for i, ov in enumerate(eqn.outvars):
+            # join same-rank operand taints (conservative default)
+            t = TFact.clean()
+            rank = len(_shape(ov))
+            for j in range(len(eqn.invars)):
+                fj = _fact_of(eqn.invars[j], env)
+                if fj.taint is not None and not fj.taint.is_clean:
+                    if len(_shape(eqn.invars[j])) == rank:
+                        t = taint_join(t, fj.taint)
+                    else:
+                        t.taint["*"] = _join_kind(t.taint.get("*"),
+                                                  (DIRTY, None))
+            env[ov] = VarFact(
+                interval=dtype_interval(getattr(_aval_of(ov), "dtype",
+                                                np.float32)),
+                taint=t,
+            )
+
+
+def _extract_call(eqn, env, path) -> KernelCall:
+    params = eqn.params
+    gm = params["grid_mapping"]
+    grid = tuple(int(g) for g in gm.grid)
+    kernel_jaxpr = params["jaxpr"]
+    if hasattr(kernel_jaxpr, "jaxpr"):  # ClosedJaxpr in some versions
+        kernel_jaxpr = kernel_jaxpr.jaxpr
+    nsp = int(getattr(gm, "num_index_operands", 0))
+    n_in = int(getattr(gm, "num_inputs", 0))
+    n_out = int(getattr(gm, "num_outputs", 0))
+    n_scratch = int(getattr(gm, "num_scratch_operands", 0))
+    block_mappings = list(getattr(gm, "block_mappings", ()))
+
+    nsi = params.get("name_and_src_info")
+    name = getattr(nsi, "name", None) or str(nsi or "pallas_call")
+
+    dim_sem = None
+    cp = params.get("compiler_params")
+    if cp is not None:
+        mosaic = cp.get("mosaic", cp) if isinstance(cp, dict) else cp
+        ds = getattr(mosaic, "dimension_semantics", None)
+        if ds is None and isinstance(mosaic, dict):
+            ds = mosaic.get("dimension_semantics")
+        if ds is not None:
+            dim_sem = tuple(str(s) for s in ds)
+
+    # eqn.invars = [index (scalar-prefetch) operands..., inputs...];
+    # outputs/scratch have no outer operands.
+    outer_args = list(eqn.invars)
+    invars = list(kernel_jaxpr.invars)
+    operands: list[Operand] = []
+
+    def ref_shape_of(invar):
+        return tuple(getattr(_aval_of(invar), "shape", ()) or ())
+
+    k = 0
+    for i in range(nsp):
+        invar = invars[k]
+        outer = outer_args[i] if i < len(outer_args) else None
+        f = _fact_of(outer, env) if outer is not None else \
+            VarFact.unknown(invar)
+        aval = _aval_of(outer) if outer is not None else _aval_of(invar)
+        dtype = getattr(aval, "dtype", np.int32)
+        operands.append(Operand(
+            index=k, kind="scalar_prefetch", io_index=i,
+            origin=f"scalar_prefetch[{i}]",
+            ref_shape=ref_shape_of(invar),
+            block_shape=None,
+            array_shape=tuple(getattr(aval, "shape", ()) or ()),
+            dtype=dtype, itemsize=np.dtype(dtype).itemsize,
+            index_map=None, is_any=False,
+            interval=f.interval or dtype_interval(dtype),
+            taint=f.taint or TFact.clean(),
+        ))
+        k += 1
+
+    for i in range(n_in + n_out):
+        invar = invars[k]
+        bm = block_mappings[i] if i < len(block_mappings) else None
+        kind = "input" if i < n_in else "output"
+        io_index = i if i < n_in else i - n_in
+        outer = None
+        if kind == "input" and nsp + i < len(outer_args):
+            outer = outer_args[nsp + i]
+        f = _fact_of(outer, env) if outer is not None else VarFact(
+            interval=None, taint=TFact.clean())
+        asd = getattr(bm, "array_shape_dtype", None)
+        dtype = getattr(asd, "dtype", None)
+        if dtype is None:
+            dtype = getattr(_aval_of(invar), "dtype", np.float32)
+        block_shape = None
+        if bm is not None:
+            block_shape = tuple(
+                1 if b is None or not isinstance(b, (int, np.integer))
+                else int(b)
+                for b in getattr(bm, "block_shape", ())
+            )
+        is_any = "any" in str(
+            getattr(bm, "transformed_block_aval", "")
+        ).lower()
+        origin = getattr(bm, "origin", None) or f"{kind}[{io_index}]"
+        # interval/taint describe the *block contents* the kernel sees.
+        interval = f.interval
+        taint = f.taint or TFact.clean()
+        if is_any:
+            # ANY refs keep the full array shape; facts carry over as-is.
+            pass
+        operands.append(Operand(
+            index=k, kind=kind, io_index=io_index, origin=str(origin),
+            ref_shape=ref_shape_of(invar), block_shape=block_shape,
+            array_shape=tuple(getattr(asd, "shape", ()) or ()) or None,
+            dtype=dtype, itemsize=np.dtype(dtype).itemsize,
+            index_map=getattr(bm, "index_map_jaxpr", None),
+            is_any=is_any,
+            interval=interval if kind == "input" else None,
+            taint=taint if kind == "input" else TFact.clean(),
+        ))
+        k += 1
+
+    for i in range(n_scratch):
+        invar = invars[k]
+        dtype = getattr(_aval_of(invar), "dtype", np.float32)
+        operands.append(Operand(
+            index=k, kind="scratch", io_index=i, origin=f"scratch[{i}]",
+            ref_shape=ref_shape_of(invar), block_shape=None,
+            array_shape=None, dtype=dtype,
+            itemsize=np.dtype(dtype).itemsize if dtype is not None else 4,
+            index_map=None, is_any=False,
+            interval=None, taint=TFact.clean(),
+        ))
+        k += 1
+
+    return KernelCall(
+        name=name, jaxpr=kernel_jaxpr, grid=grid, operands=operands,
+        num_scalar_prefetch=nsp, num_inputs=n_in, num_outputs=n_out,
+        dimension_semantics=dim_sem, path=path,
+    )

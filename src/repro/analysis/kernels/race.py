@@ -1,0 +1,189 @@
+"""Grid-race classification of Pallas output-ref writes.
+
+TPU grids are sequential by default, so the repo's kernels freely use the
+revisited-block accumulator idiom: an output BlockSpec whose index map
+ignores a grid axis maps *every* step along that axis to the same block,
+and the kernel does ``ref[...] += part`` across the revisits (bright's
+``total``, z-update's ``cand``/``count``, fused-ce's ``lse``/``tgt``, the
+flash-decode ``o/m/l`` triple, the scan kernels' final states). That
+idiom is only exact under sequential grid semantics — under
+``dimension_semantics=('parallel', ...)`` (or a future GPU lowering) the
+same BlockSpec is a write-write race.
+
+This analysis makes the convention checkable (the contract itself is
+documented in :mod:`repro.kernels.common`):
+
+* each output's index map is classified by which grid axes its block
+  index actually depends on (transitive use of the grid-index invars of
+  ``index_map_jaxpr``);
+* a *revisited* axis — ``grid[axis] > 1`` and not in the dependence set —
+  makes the write non-injective in that axis;
+* a revisited axis explicitly marked ``parallel`` is a race: finding,
+  always;
+* a revisited axis under sequential/default semantics must be *declared*
+  (the ``accumulators`` pin, keyed by output index since kernel function
+  names are not unique) — an undeclared accumulator-style write is a
+  finding, so new kernels opt into the contract consciously rather than
+  by accident;
+* an index map that depends on a scalar-prefetch value is dynamic: its
+  injectivity cannot be established statically, which is likewise a
+  finding unless declared.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.extend.core as jex_core
+
+_DIRECT_CALLS = {
+    "pjit", "closed_call", "core_call", "remat", "checkpoint",
+    "custom_jvp_call", "custom_vjp_call", "custom_vmap_call",
+}
+
+
+@dataclasses.dataclass
+class OutputClass:
+    """How one output's block index relates to the grid."""
+
+    io_index: int
+    origin: str
+    dep_axes: tuple       # grid axes the index map depends on
+    revisited: tuple      # grid axes with extent > 1 not in dep_axes
+    dynamic: bool         # depends on scalar-prefetch contents
+
+
+@dataclasses.dataclass
+class RaceFinding:
+    io_index: int
+    origin: str
+    axis: int | None
+    kind: str  # parallel-race | undeclared-accumulator | dynamic-index-map
+
+    def message(self) -> str:
+        if self.kind == "parallel-race":
+            return (
+                f"output[{self.io_index}] ({self.origin}) is revisited "
+                f"along grid axis {self.axis} which is marked 'parallel' "
+                "— accumulator writes would race"
+            )
+        if self.kind == "dynamic-index-map":
+            return (
+                f"output[{self.io_index}] ({self.origin}) has an index "
+                "map depending on scalar-prefetch data — injectivity "
+                "cannot be established statically"
+            )
+        return (
+            f"output[{self.io_index}] ({self.origin}) is revisited along "
+            f"grid axis {self.axis} (accumulator-style write) but is not "
+            "declared a sequential accumulator — see the sequential-grid "
+            "contract in repro.kernels.common"
+        )
+
+
+def _index_map_deps(index_map, n_grid: int) -> tuple[set, bool]:
+    """(grid axes the outputs depend on, depends-on-prefetch?)."""
+    if index_map is None:
+        return set(), False
+    jaxpr = index_map.jaxpr if hasattr(index_map, "jaxpr") else index_map
+    invars = list(jaxpr.invars)
+    grid_vars = {v: i for i, v in enumerate(invars[:n_grid])}
+    prefetch_vars = set(invars[n_grid:])
+    # Transitive dependence: var -> (grid axes, prefetch?)
+    deps: dict = {v: ({i}, False) for v, i in grid_vars.items()}
+    for v in prefetch_vars:
+        deps[v] = (set(), True)
+
+    def dep_of(atom):
+        if isinstance(atom, jex_core.Literal):
+            return set(), False
+        return deps.get(atom, (set(), False))
+
+    def walk(j):
+        for eqn in j.eqns:
+            axes: set = set()
+            pref = False
+            for a in eqn.invars:
+                d, p = dep_of(a)
+                axes |= d
+                pref = pref or p
+            for sub in _sub_jaxprs(eqn):
+                walk(sub)
+            for ov in eqn.outvars:
+                deps[ov] = (axes, pref)
+
+    walk(jaxpr)
+    out_axes: set = set()
+    out_pref = False
+    for ov in jaxpr.outvars:
+        d, p = dep_of(ov)
+        out_axes |= d
+        out_pref = out_pref or p
+    return out_axes, out_pref
+
+
+def _sub_jaxprs(eqn):
+    for value in eqn.params.values():
+        if isinstance(value, jex_core.ClosedJaxpr):
+            yield value.jaxpr
+        elif isinstance(value, jex_core.Jaxpr):
+            yield value
+        elif isinstance(value, (tuple, list)):
+            for v in value:
+                if isinstance(v, jex_core.ClosedJaxpr):
+                    yield v.jaxpr
+                elif isinstance(v, jex_core.Jaxpr):
+                    yield v
+
+
+def classify_outputs(call) -> list[OutputClass]:
+    """Dependence/revisit classification of every output of a call."""
+    out = []
+    for op in call.outputs:
+        dep, dynamic = _index_map_deps(op.index_map, len(call.grid))
+        revisited = tuple(
+            ax for ax, extent in enumerate(call.grid)
+            if extent > 1 and ax not in dep
+        )
+        out.append(OutputClass(
+            io_index=op.io_index, origin=op.origin,
+            dep_axes=tuple(sorted(dep)), revisited=revisited,
+            dynamic=dynamic,
+        ))
+    return out
+
+
+def check_races(call, accumulators: dict | None = None
+                ) -> tuple[list[RaceFinding], list[OutputClass]]:
+    """Race findings for one call, given declared sequential accumulators.
+
+    ``accumulators`` maps output io_index -> tuple of grid axes that
+    output is *allowed* to revisit under sequential semantics.
+    """
+    accumulators = accumulators or {}
+    sem = call.dimension_semantics
+    findings: list[RaceFinding] = []
+    classes = classify_outputs(call)
+    for oc in classes:
+        declared = set(accumulators.get(oc.io_index, ()))
+        if oc.dynamic and oc.io_index not in accumulators:
+            findings.append(RaceFinding(
+                io_index=oc.io_index, origin=oc.origin, axis=None,
+                kind="dynamic-index-map",
+            ))
+        for ax in oc.revisited:
+            marked_parallel = (
+                sem is not None and ax < len(sem)
+                and "parallel" in sem[ax]
+            )
+            if marked_parallel:
+                findings.append(RaceFinding(
+                    io_index=oc.io_index, origin=oc.origin, axis=ax,
+                    kind="parallel-race",
+                ))
+            elif ax not in declared:
+                findings.append(RaceFinding(
+                    io_index=oc.io_index, origin=oc.origin, axis=ax,
+                    kind="undeclared-accumulator",
+                ))
+    return findings, classes

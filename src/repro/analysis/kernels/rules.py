@@ -1,0 +1,229 @@
+"""The four kernel-level rules, packaged for the `repro.analysis` engine.
+
+These plug into the same ``check()`` / registry / sweep machinery as the
+jaxpr-generic rules: each extracts every ``pallas_call`` from the entry
+point's jaxpr (with outer provenance — see :mod:`.extract`) and runs one
+analysis over it.
+
+=================  ========================================================
+kernel-bounds      interval abstract interpretation proves every dynamic
+                   ref index and DMA in bounds (:mod:`.intervals`)
+kernel-race        revisited-block output writes must be declared
+                   sequential accumulators; parallel-axis revisits are
+                   races (:mod:`.race`)
+kernel-padding     reductions must mask `pad_to` padding lanes first
+                   (:mod:`.taint`)
+kernel-bytes       the BlockSpec-derived HBM traffic model; optional
+                   expected totals pin it, and the derived model is
+                   surfaced into Report.metrics for BENCH
+                   (:mod:`.bytes_model`)
+=================  ========================================================
+
+All four default ``require=True``: an entry point registered with kernel
+rules that traces to *zero* pallas_calls is itself a finding — a sweep
+that silently stops seeing kernels is a blind sweep.
+"""
+
+from __future__ import annotations
+
+from repro.analysis.kernels import bytes_model, extract, intervals, race, taint
+from repro.analysis.report import Finding
+from repro.analysis.rules import Context, Rule
+
+
+class _KernelRule(Rule):
+    """Shared pallas_call extraction + the require-kernels honesty guard."""
+
+    def __init__(self, require: bool = True):
+        self.require = require
+
+    def _calls(self, ctx: Context) -> list:
+        cache = getattr(ctx, "_kernel_calls", None)
+        if cache is None:
+            cache = extract.find_kernel_calls(ctx.closed)
+            try:
+                ctx._kernel_calls = cache
+            except Exception:
+                pass
+        return cache
+
+    def _require_finding(self, ctx: Context) -> list[Finding]:
+        if self.require:
+            return [self._finding(
+                ctx,
+                "no pallas_call reachable from this entry point — kernel "
+                "rules were requested but there is nothing to verify "
+                "(wrong backend selected, or the kernel was traced away)",
+            )]
+        return []
+
+
+class KernelBoundsRule(_KernelRule):
+    """Every dynamic ref index / DMA provably in bounds (interval domain)."""
+
+    name = "kernel-bounds"
+
+    def check(self, ctx: Context) -> list[Finding]:
+        calls = self._calls(ctx)
+        if not calls:
+            return self._require_finding(ctx)
+        findings = []
+        for call in calls:
+            for f in intervals.check_bounds(call):
+                findings.append(self._finding(
+                    ctx, f"[{call.name}] {f.message()}",
+                    kernel=call.name, ref=f.ref, dim=f.dim,
+                    index=str(f.index), proven_bad=f.proven_bad,
+                ))
+        return findings
+
+
+class GridRaceRule(_KernelRule):
+    """Revisited-block output writes follow the sequential-grid contract.
+
+    ``accumulators`` maps output io_index -> grid axes that output may
+    revisit as a sequential accumulator (keyed by index, not kernel name —
+    the inner functions are all literally named ``kernel``). With several
+    pallas_calls under one entry point, ``per_kernel`` keys declarations
+    by kernel name instead.
+    """
+
+    name = "kernel-race"
+
+    def __init__(self, accumulators: dict | None = None,
+                 per_kernel: dict | None = None, require: bool = True):
+        super().__init__(require=require)
+        self.accumulators = dict(accumulators or {})
+        self.per_kernel = dict(per_kernel or {})
+
+    def check(self, ctx: Context) -> list[Finding]:
+        calls = self._calls(ctx)
+        if not calls:
+            return self._require_finding(ctx)
+        findings = []
+        for call in calls:
+            declared = self.per_kernel.get(call.name, self.accumulators)
+            fs, _classes = race.check_races(call, declared)
+            for f in fs:
+                findings.append(self._finding(
+                    ctx, f"[{call.name}] {f.message()}",
+                    kernel=call.name, output=f.io_index, origin=f.origin,
+                    axis=f.axis, kind=f.kind,
+                ))
+        return findings
+
+    def classes(self, ctx: Context) -> dict:
+        """The raw output classification, for pinning tests."""
+        return {
+            call.name: race.classify_outputs(call)
+            for call in self._calls(ctx)
+        }
+
+
+class PaddingTaintRule(_KernelRule):
+    """Reductions over pad_to padding must be masked first."""
+
+    name = "kernel-padding"
+
+    def check(self, ctx: Context) -> list[Finding]:
+        calls = self._calls(ctx)
+        if not calls:
+            return self._require_finding(ctx)
+        findings = []
+        for call in calls:
+            for f in taint.check_taint(call):
+                findings.append(self._finding(
+                    ctx, f"[{call.name}] {f.message()}",
+                    kernel=call.name, reduction=f.eqn, kind=f.kind,
+                    axes=list(f.axes),
+                ))
+        return findings
+
+
+class BytesModelRule(_KernelRule):
+    """Derive the HBM traffic model; pin expected totals; export metrics.
+
+    ``expected`` maps kernel name -> expected total bytes; a mismatch is a
+    finding (the BlockSpec changed without the benchmark model following,
+    or vice versa). The derived models land in ``Report.metrics`` under
+    ``kernel_bytes`` via the engine's ``report_metrics`` hook, so
+    ``benchmarks/static_analysis.py`` records them in BENCH_flymc.json.
+    """
+
+    name = "kernel-bytes"
+
+    def __init__(self, expected: dict | None = None, require: bool = True):
+        super().__init__(require=require)
+        self.expected = dict(expected or {})
+
+    def _models(self, ctx: Context) -> dict:
+        models: dict = {}
+        for call in self._calls(ctx):
+            key = call.name
+            i = 1
+            while key in models:
+                key = f"{call.name}#{i}"
+                i += 1
+            models[key] = bytes_model.derive(call)
+        return models
+
+    def check(self, ctx: Context) -> list[Finding]:
+        calls = self._calls(ctx)
+        if not calls:
+            return self._require_finding(ctx)
+        findings = []
+        models = self._models(ctx)
+        for name, model in models.items():
+            for origin, entry in model["per_operand"].items():
+                if entry.get("note") and "no dma_start" in entry["note"]:
+                    findings.append(self._finding(
+                        ctx,
+                        f"[{name}] operand {origin} is memory_space=ANY "
+                        "but the kernel issues no dma_start for it — "
+                        "traffic is not derivable",
+                        kernel=name, operand=origin,
+                    ))
+            exp = self.expected.get(name)
+            if exp is not None and int(exp) != int(model["total"]):
+                findings.append(self._finding(
+                    ctx,
+                    f"[{name}] derived HBM bytes {model['total']} != "
+                    f"expected {exp} — BlockSpecs and the recorded traffic "
+                    "model have diverged",
+                    kernel=name, derived=int(model["total"]),
+                    expected=int(exp),
+                ))
+        return findings
+
+    def report_metrics(self, ctx: Context) -> dict:
+        models = self._models(ctx)
+        return {
+            "kernel_bytes": {
+                name: {
+                    "total": m["total"],
+                    "steps": m["steps"],
+                    "grid": list(m["grid"]),
+                    "scalar_prefetch_bytes": m["scalar_prefetch_bytes"],
+                    "per_operand": {
+                        origin: {
+                            "bytes": e["bytes"],
+                            "kind": e["kind"],
+                        }
+                        for origin, e in m["per_operand"].items()
+                    },
+                }
+                for name, m in models.items()
+            }
+        } if models else {}
+
+
+def kernel_rules(accumulators: dict | None = None,
+                 expected_bytes: dict | None = None,
+                 per_kernel: dict | None = None) -> list[Rule]:
+    """The standard four-rule kit a kernel entry point registers with."""
+    return [
+        KernelBoundsRule(),
+        GridRaceRule(accumulators=accumulators, per_kernel=per_kernel),
+        PaddingTaintRule(),
+        BytesModelRule(expected=expected_bytes),
+    ]

@@ -1,0 +1,906 @@
+"""Padding-taint analysis for Pallas kernel jaxprs.
+
+The PR 2 bug class: a kernel block is larger than the logical data (rows
+padded to a sublane multiple, lanes padded to 128, positions padded with a
+sentinel), and a reduction sums/maxes the padding lanes *without masking
+them first*. Zero-padding survives ``sum`` and ``dot`` but corrupts
+``max``; sentinel padding corrupts everything; and zero-padding stops
+being zero the moment a non-multiplicative op touches it (``exp(0) = 1``).
+
+This module tracks, per value and per axis, where padding could be hiding:
+
+* ``('zero', 0.0)`` — lanes known to hold the pad value 0 (from
+  ``jnp.pad`` / ``repro.kernels.common.pad_to`` with zero fill),
+* ``('sentinel', c)`` — lanes holding a known constant sentinel (the
+  decode ring's ``pos = -1``, the z-update's ``arr = n`` fill),
+* ``('dirty', None)`` — lanes holding arbitrary junk (sentinels after
+  arithmetic, zero-pad after a non-linear op, data gathered through
+  out-of-range-but-clamped indices).
+
+Absence of an axis entry means the axis is fully valid. The special axis
+key ``'*'`` taints the whole value (used when a dynamic scalar index
+could select a padded lane, collapsing axis structure).
+
+Masks are recognized structurally: a comparison between an iota-derived
+position vector (or a sentinel-tainted value) and a threshold yields a
+per-axis *pad-lane truth value* (do padded lanes make this predicate
+``False``/``True``?); ``jnp.where(pred, x, fallback)`` with a known
+pad-lane branch whose fallback is untainted clears the taint. This is how
+``jnp.where(row_id < n_bright, ..., 0.0)`` in the bright kernel and
+``jnp.where((posv >= 0) & (posv <= t), s, NEG)`` in decode attention are
+proven to scrub their padding before the reduction.
+
+Findings fire only at reductions (``reduce_sum``/``max``/``min``,
+``dot_general`` contractions, ``cum*`` feeding them is tracked but not a
+finding site): a *store* of tainted lanes to an output ref is the
+caller's documented slice-off-the-padding contract, exercised by the
+parity tests, not a kernel bug.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.extend.core as jex_core
+import numpy as np
+
+ZERO = "zero"
+SENTINEL = "sentinel"
+DIRTY = "dirty"
+
+_CMP_OPS = {"lt", "le", "gt", "ge", "eq", "ne"}
+
+# Unary float ops that do NOT map 0 → 0 (zero-pad stops being zero).
+_NONZERO_PRESERVING = {
+    "exp", "exp2", "cos", "cosh", "log", "log1p", "logistic", "rsqrt",
+    "erfc", "digamma", "lgamma",
+}
+# Unary ops that map 0 → 0, so zero-pad survives.
+_ZERO_PRESERVING = {
+    "neg", "abs", "sign", "sin", "sinh", "tan", "tanh", "sqrt", "square",
+    "expm1", "erf", "floor", "ceil", "round", "real", "imag",
+    "stop_gradient", "reduce_precision", "copy", "integer_pow",
+}
+_SHAPE_PASSTHROUGH = {"copy", "stop_gradient", "reduce_precision",
+                      "convert_element_type", "device_put"}
+
+
+@dataclasses.dataclass
+class TFact:
+    """Taint of one value: per-axis pad kinds + mask-recognition metadata."""
+
+    taint: dict  # axis (int or '*') -> (kind, value)
+    pos_axes: set  # axes whose values are iota-derived positions
+    padbool: dict  # axis -> bool: predicate value on padded lanes
+
+    @staticmethod
+    def clean() -> "TFact":
+        return TFact({}, set(), {})
+
+    def copy(self) -> "TFact":
+        return TFact(dict(self.taint), set(self.pos_axes), dict(self.padbool))
+
+    @property
+    def is_clean(self) -> bool:
+        return not self.taint
+
+    def worst(self):
+        """The most severe kind present (dirty > sentinel > zero)."""
+        kinds = {k for k, _ in self.taint.values()}
+        for k in (DIRTY, SENTINEL, ZERO):
+            if k in kinds:
+                return k
+        return None
+
+
+def _join_kind(a, b):
+    """Join two (kind, value) taints on the same axis."""
+    if a is None:
+        return b
+    if b is None:
+        return a
+    if a == b:
+        return a
+    if a[0] == ZERO and b[0] == ZERO:
+        return (ZERO, 0.0)
+    return (DIRTY, None)
+
+
+def join(a: TFact, b: TFact) -> TFact:
+    taint = {}
+    for ax in set(a.taint) | set(b.taint):
+        taint[ax] = _join_kind(a.taint.get(ax), b.taint.get(ax))
+    padbool = {
+        ax: a.padbool[ax]
+        for ax in set(a.padbool) & set(b.padbool)
+        if a.padbool[ax] == b.padbool[ax]
+    }
+    return TFact(taint, a.pos_axes & b.pos_axes, padbool)
+
+
+def _aval_of(atom):
+    return getattr(atom, "aval", None)
+
+
+def _shape(atom) -> tuple:
+    return tuple(getattr(_aval_of(atom), "shape", ()) or ())
+
+
+def _is_ref(atom) -> bool:
+    aval = _aval_of(atom)
+    return aval is not None and "Ref" in type(aval).__name__
+
+
+def remap_axes(fact: TFact, mapping: dict) -> TFact:
+    """Rebuild a fact with axes renumbered; unmapped axes drop to '*' only
+    if tainted with something non-zero (zero pad in a vanished axis is
+    harmless), else drop."""
+    out = TFact.clean()
+    for ax, kind in fact.taint.items():
+        if ax == "*":
+            out.taint["*"] = _join_kind(out.taint.get("*"), kind)
+        elif ax in mapping:
+            for new_ax in mapping[ax]:
+                out.taint[new_ax] = _join_kind(out.taint.get(new_ax), kind)
+        elif kind[0] != ZERO:
+            out.taint["*"] = _join_kind(out.taint.get("*"), (DIRTY, None))
+    out.pos_axes = {
+        na for ax in fact.pos_axes if ax in mapping
+        for na in mapping[ax] if len(mapping[ax]) == 1
+    }
+    out.padbool = {
+        mapping[ax][0]: v for ax, v in fact.padbool.items()
+        if ax in mapping and len(mapping[ax]) == 1
+    }
+    return out
+
+
+def broadcast_remap(in_shape, out_shape, bcast_dims) -> dict:
+    return {i: (int(d),) for i, d in enumerate(bcast_dims)}
+
+
+def reshape_remap(in_shape, out_shape) -> dict:
+    """Axis mapping for a reshape via prefix-product factorization: an
+    input axis maps to the output axes its extent factors into; a merged
+    or ambiguous factorization maps the axis to all covering out axes."""
+    in_shape = [int(s) for s in in_shape]
+    out_shape = [int(s) for s in out_shape]
+    mapping: dict = {}
+    # Greedy segment matching: walk both shapes, matching equal products.
+    i = j = 0
+    while i < len(in_shape) and j < len(out_shape):
+        in_seg, out_seg = [i], [j]
+        pi, pj = in_shape[i], out_shape[j]
+        i += 1
+        j += 1
+        while pi != pj:
+            if pi < pj and i < len(in_shape):
+                pi *= in_shape[i]
+                in_seg.append(i)
+                i += 1
+            elif pj < pi and j < len(out_shape):
+                pj *= out_shape[j]
+                out_seg.append(j)
+                j += 1
+            else:
+                break
+        for ax in in_seg:
+            mapping[ax] = tuple(out_seg)
+    # trailing unit axes
+    while i < len(in_shape):
+        mapping[i] = ()
+        i += 1
+    return mapping
+
+
+@dataclasses.dataclass
+class TaintFinding:
+    """One reduction consuming unmasked padding."""
+
+    ref: str
+    eqn: str
+    kind: str
+    axes: tuple
+
+    def message(self) -> str:
+        where = f"axes {tuple(self.axes)}" if self.axes else "operand"
+        return (
+            f"{self.eqn} reduces over {self.kind}-padded {where} "
+            f"({self.ref}) without masking the padding lanes first"
+        )
+
+
+class TaintInterpreter:
+    """Run the padding-taint analysis over one extracted KernelCall."""
+
+    MAX_PASSES = 3
+
+    def __init__(self, call):
+        self.call = call
+        self.findings: list[TaintFinding] = []
+        self._seen: set = set()
+        self.collect = False
+
+    def run(self) -> list[TaintFinding]:
+        jaxpr = self.call.jaxpr
+        carry: dict | None = None
+        for pass_i in range(self.MAX_PASSES):
+            self.collect = pass_i == self.MAX_PASSES - 1
+            refs: dict[Any, TFact] = {}
+            alias: dict[Any, Any] = {}
+            env: dict[Any, TFact] = {}
+            for invar, op in zip(jaxpr.invars, self.call.operands):
+                fact = (op.taint or TFact.clean()).copy()
+                if _is_ref(invar):
+                    if carry is not None and invar in carry:
+                        fact = join(fact, carry[invar])
+                    refs[invar] = fact
+                else:
+                    env[invar] = fact
+            self._refs, self._alias = refs, alias
+            self._eval_eqns(jaxpr.eqns, env)
+            new_carry = {v: f for v, f in refs.items()}
+            if carry is not None and all(
+                v in carry and carry[v].taint == f.taint
+                for v, f in new_carry.items()
+            ):
+                if not self.collect:
+                    self.collect = True
+                    # converged: rerun once to collect findings
+                    refs2 = {}
+                    env2 = {}
+                    for invar, op in zip(jaxpr.invars, self.call.operands):
+                        fact = (op.taint or TFact.clean()).copy()
+                        if _is_ref(invar):
+                            refs2[invar] = join(fact, new_carry.get(
+                                invar, TFact.clean()))
+                        else:
+                            env2[invar] = fact
+                    self._refs, self._alias = refs2, {}
+                    self._eval_eqns(jaxpr.eqns, env2)
+                return self.findings
+            carry = new_carry
+        return self.findings
+
+    # -- plumbing ------------------------------------------------------------
+
+    def _canon(self, var):
+        while var in self._alias:
+            var = self._alias[var]
+        return var
+
+    def _fact(self, atom, env) -> TFact:
+        if isinstance(atom, jex_core.Literal):
+            return TFact.clean()
+        return env.get(atom, TFact.clean())
+
+    def _ref_fact(self, var) -> TFact:
+        return self._refs.setdefault(self._canon(var), TFact.clean())
+
+    def _ref_name(self, var) -> str:
+        var = self._canon(var)
+        for invar, op in zip(self.call.jaxpr.invars, self.call.operands):
+            if invar is var:
+                return op.origin
+        return "<local>"
+
+    def _emit(self, eqn_name, label, kind, axes):
+        if not self.collect:
+            return
+        key = (eqn_name, label, kind, tuple(sorted(axes)))
+        if key in self._seen:
+            return
+        self._seen.add(key)
+        self.findings.append(TaintFinding(
+            ref=label, eqn=eqn_name, kind=kind, axes=key[3]
+        ))
+
+    # -- the interpreter -----------------------------------------------------
+
+    def _eval_eqns(self, eqns, env):
+        for eqn in eqns:
+            self._eval_eqn(eqn, env)
+
+    def _eval_eqn(self, eqn, env):
+        name = eqn.primitive.name
+        params = eqn.params
+        fact = lambda i: self._fact(eqn.invars[i], env)
+
+        def out(f: TFact, i=0):
+            env[eqn.outvars[i]] = f
+
+        if name == "iota":
+            f = TFact.clean()
+            f.pos_axes = {int(params.get("dimension", 0))}
+            out(f)
+        elif name in _SHAPE_PASSTHROUGH:
+            out(fact(0).copy())
+        elif name == "broadcast_in_dim":
+            in_shape = _shape(eqn.invars[0])
+            out_shape = params.get("shape", _shape(eqn.outvars[0]))
+            dims = params.get("broadcast_dimensions", ())
+            out(remap_axes(fact(0), broadcast_remap(in_shape, out_shape,
+                                                    dims)))
+        elif name in ("reshape", "squeeze", "expand_dims"):
+            out(remap_axes(fact(0), reshape_remap(_shape(eqn.invars[0]),
+                                                  _shape(eqn.outvars[0]))))
+        elif name == "transpose":
+            perm = params.get("permutation", ())
+            mapping = {int(old): (new,) for new, old in enumerate(perm)}
+            out(remap_axes(fact(0), mapping))
+        elif name in ("slice", "rev", "dynamic_slice"):
+            # Conservative: padding may or may not survive a static slice;
+            # keep the taint (sound — can only over-report).
+            out(fact(0).copy())
+        elif name == "concatenate":
+            acc = fact(0)
+            for i in range(1, len(eqn.invars)):
+                acc = join(acc, fact(i))
+            out(acc)
+        elif name == "pad":
+            f = fact(0).copy()
+            padval = eqn.invars[1]
+            if isinstance(padval, jex_core.Literal):
+                v = float(np.asarray(padval.val).reshape(-1)[0])
+            else:
+                v = None
+            for ax, (lo, hi, interior) in enumerate(
+                params.get("padding_config", ())
+            ):
+                if hi > 0 or lo > 0 or interior > 0:
+                    kind = (ZERO, 0.0) if v == 0.0 else (
+                        (SENTINEL, v) if v is not None else (DIRTY, None)
+                    )
+                    f.taint[ax] = _join_kind(f.taint.get(ax), kind)
+            out(f)
+        elif name in _CMP_OPS:
+            out(self._compare(eqn, env))
+        elif name == "and":
+            a, b = fact(0), fact(1)
+            f = self._binary_arith(eqn, env, name)
+            f.padbool = {}
+            for ax in set(a.padbool) | set(b.padbool):
+                va, vb = a.padbool.get(ax), b.padbool.get(ax)
+                if va is False or vb is False:
+                    f.padbool[ax] = False
+                elif va is True and vb is True:
+                    f.padbool[ax] = True
+            out(f)
+        elif name == "or":
+            a, b = fact(0), fact(1)
+            f = self._binary_arith(eqn, env, name)
+            f.padbool = {}
+            for ax in set(a.padbool) | set(b.padbool):
+                va, vb = a.padbool.get(ax), b.padbool.get(ax)
+                if va is True or vb is True:
+                    f.padbool[ax] = True
+                elif va is False and vb is False:
+                    f.padbool[ax] = False
+            out(f)
+        elif name == "not":
+            a = fact(0)
+            f = a.copy()
+            f.padbool = {ax: not v for ax, v in a.padbool.items()}
+            out(f)
+        elif name == "select_n":
+            out(self._select(eqn, env))
+        elif name in ("add", "sub", "mul", "max", "min", "div", "rem",
+                      "pow", "atan2", "nextafter", "xor",
+                      "shift_left", "shift_right_logical",
+                      "shift_right_arithmetic"):
+            out(self._binary_arith(eqn, env, name))
+        elif name in _ZERO_PRESERVING:
+            out(fact(0).copy())
+        elif name in _NONZERO_PRESERVING:
+            f = fact(0).copy()
+            for ax, kind in list(f.taint.items()):
+                f.taint[ax] = (DIRTY, None)
+            out(f)
+        elif name in ("reduce_sum", "reduce_max", "reduce_min",
+                      "reduce_and", "reduce_or", "argmax", "argmin"):
+            self._reduction(eqn, env, name)
+        elif name in ("cumsum", "cumprod", "cummax", "cummin",
+                      "cumlogsumexp"):
+            f = fact(0).copy()
+            axis = int(params.get("axis", 0))
+            k = f.taint.get(axis)
+            if k is not None and not (
+                k[0] == ZERO and name in ("cumsum", "cummax", "cummin")
+            ):
+                f.taint[axis] = (DIRTY, None)
+            out(f)
+        elif name == "dot_general":
+            self._dot_general(eqn, env)
+        elif name == "get":
+            self._eval_get(eqn, env)
+        elif name == "swap":
+            self._eval_swap(eqn, env)
+        elif name == "addupdate":
+            self._eval_swap(eqn, env)
+        elif name == "dma_start":
+            self._eval_dma(eqn, env)
+        elif name in ("dma_wait", "semaphore_signal", "semaphore_wait",
+                      "program_id", "num_programs"):
+            for ov in eqn.outvars:
+                env[ov] = TFact.clean()
+        elif name == "cond":
+            self._eval_cond(eqn, env)
+        elif name == "while":
+            self._eval_while(eqn, env)
+        elif name == "scan":
+            self._eval_scan(eqn, env)
+        elif name in ("pjit", "closed_call", "core_call", "remat",
+                      "checkpoint", "custom_jvp_call", "custom_vjp_call",
+                      "custom_vmap_call"):
+            self._eval_call(eqn, env)
+        else:
+            # Unknown op: join all operand taints if ranks line up, else
+            # collapse to whole-value taint of the worst operand kind.
+            out_rank = len(_shape(eqn.outvars[0])) if eqn.outvars else 0
+            acc = TFact.clean()
+            collapsed = False
+            for i in range(len(eqn.invars)):
+                f = fact(i)
+                if f.is_clean:
+                    continue
+                if len(_shape(eqn.invars[i])) == out_rank:
+                    acc = join(acc, f)
+                else:
+                    collapsed = True
+            if collapsed and acc.worst() is None:
+                acc.taint["*"] = (DIRTY, None)
+            for ov in eqn.outvars:
+                env[ov] = acc.copy()
+
+    # -- op families ---------------------------------------------------------
+
+    def _binary_arith(self, eqn, env, name) -> TFact:
+        a = self._fact(eqn.invars[0], env)
+        b = self._fact(eqn.invars[1], env)
+        f = TFact.clean()
+        for ax in set(a.taint) | set(b.taint):
+            ka, kb = a.taint.get(ax), b.taint.get(ax)
+            if name == "mul":
+                # zero wins: anything times zero-pad lanes is still zero
+                if (ka and ka[0] == ZERO) or (kb and kb[0] == ZERO):
+                    f.taint[ax] = (ZERO, 0.0)
+                else:
+                    f.taint[ax] = (DIRTY, None)
+            else:
+                if ka and kb and ka[0] == ZERO and kb[0] == ZERO and \
+                        name in ("add", "sub", "max", "min"):
+                    f.taint[ax] = (ZERO, 0.0)
+                else:
+                    # clean + pad, sentinel + anything, etc: lanes diverge
+                    f.taint[ax] = (DIRTY, None)
+        # position lineage survives affine ops with untainted other side
+        if name in ("add", "sub", "mul"):
+            if a.pos_axes and b.is_clean:
+                f.pos_axes |= a.pos_axes
+            if b.pos_axes and a.is_clean and name != "sub":
+                f.pos_axes |= b.pos_axes
+        return f
+
+    def _compare(self, eqn, env) -> TFact:
+        name = eqn.primitive.name
+        a = self._fact(eqn.invars[0], env)
+        b = self._fact(eqn.invars[1], env)
+        f = TFact.clean()
+        for ax in set(a.taint) | set(b.taint):
+            f.taint[ax] = (DIRTY, None)  # bool lanes differ on padding
+
+        def lit_value(atom):
+            if isinstance(atom, jex_core.Literal):
+                arr = np.asarray(atom.val)
+                if arr.size == 1:
+                    return float(arr.reshape(-1)[0])
+            return None
+
+        # Sentinel vs known literal: evaluate the predicate on pad lanes.
+        for lhs, rhs, swap in ((a, b, False), (b, a, True)):
+            other_atom = eqn.invars[0 if swap else 1]
+            lit = lit_value(other_atom)
+            for ax, kind in lhs.taint.items():
+                if ax == "*":
+                    continue
+                if kind[0] == SENTINEL and lit is not None:
+                    c = kind[1]
+                    op = name
+                    if swap:
+                        op = {"lt": "gt", "le": "ge", "gt": "lt",
+                              "ge": "le"}.get(op, op)
+                    val = {
+                        "lt": c < lit, "le": c <= lit, "gt": c > lit,
+                        "ge": c >= lit, "eq": c == lit, "ne": c != lit,
+                    }[op]
+                    f.padbool[ax] = bool(val)
+        # Positions (iota-derived) vs an untainted bound: the canonical
+        # row_id < n_valid mask. Heuristic (documented): we verify a mask
+        # EXISTS, not that its bound is correct — that is the parity
+        # tests' job.
+        for lhs, other, swap in ((a, b, False), (b, a, True)):
+            if other.worst() in (DIRTY, SENTINEL):
+                continue
+            op = name
+            if swap:
+                op = {"lt": "gt", "le": "ge", "gt": "lt", "ge": "le"}.get(
+                    op, op)
+            for ax in lhs.pos_axes:
+                if ax in f.padbool:
+                    continue
+                if op in ("lt", "le", "eq"):
+                    f.padbool[ax] = False
+                elif op in ("gt", "ge"):
+                    f.padbool[ax] = True
+        return f
+
+    def _select(self, eqn, env) -> TFact:
+        # select_n(pred, case_false, case_true): jnp.where(p, x, y) lowers
+        # with cases (y, x).
+        pred = self._fact(eqn.invars[0], env)
+        cases = [self._fact(v, env) for v in eqn.invars[1:]]
+        if len(cases) == 2 and pred.padbool:
+            f = TFact.clean()
+            false_c, true_c = cases
+            axes = (set(false_c.taint) | set(true_c.taint)
+                    | set(pred.taint))
+            for ax in axes:
+                pb = pred.padbool.get(ax)
+                if pb is not None:
+                    taken = true_c if pb else false_c
+                    k = taken.taint.get(ax)
+                    if k is None:
+                        continue  # pad lanes take an untainted branch
+                    f.taint[ax] = k
+                else:
+                    f.taint[ax] = _join_kind(
+                        _join_kind(false_c.taint.get(ax),
+                                   true_c.taint.get(ax)),
+                        (DIRTY, None) if ax in pred.taint else None,
+                    )
+            return f
+        acc = pred.copy()
+        acc.padbool = {}
+        acc.pos_axes = set()
+        for c in cases:
+            acc = join(acc, c)
+        return acc
+
+    def _reduction(self, eqn, env, name):
+        f = self._fact(eqn.invars[0], env)
+        axes = tuple(int(a) for a in eqn.params.get("axes", ()))
+        bad_axes = []
+        bad_kind = None
+        for ax in axes:
+            k = f.taint.get(ax)
+            if k is None:
+                continue
+            if name in ("reduce_sum",) and k[0] == ZERO:
+                continue  # summing zeros is exact
+            bad_axes.append(ax)
+            bad_kind = k[0] if bad_kind is None else DIRTY \
+                if bad_kind != k[0] else bad_kind
+        star = f.taint.get("*")
+        if star is not None and not (name == "reduce_sum"
+                                     and star[0] == ZERO):
+            bad_axes = bad_axes or ["*"]
+            bad_kind = bad_kind or star[0]
+        if bad_axes:
+            self._emit(name, self._taint_source(eqn.invars[0]), bad_kind,
+                       [a for a in bad_axes if a != "*"])
+        # result: non-reduced axes keep their taint
+        keep = {ax: k for ax, k in f.taint.items()
+                if ax not in axes and ax != "*"}
+        rank = len(_shape(eqn.invars[0]))
+        remaining = [ax for ax in range(rank) if ax not in axes]
+        mapping = {old: (new,) for new, old in enumerate(remaining)}
+        outf = remap_axes(TFact(keep, f.pos_axes - set(axes), {}), mapping)
+        if star is not None:
+            outf.taint["*"] = star
+        for ov in eqn.outvars:
+            env[ov] = outf.copy()
+
+    def _taint_source(self, atom) -> str:
+        return "value"
+
+    def _dot_general(self, eqn, env):
+        a = self._fact(eqn.invars[0], env)
+        b = self._fact(eqn.invars[1], env)
+        dnums = eqn.params.get("dimension_numbers")
+        try:
+            (lc, rc), (lb, rb) = dnums
+        except Exception:
+            lc = rc = lb = rb = ()
+        for la, ra in zip(lc, rc):
+            ka, kb = a.taint.get(int(la)), b.taint.get(int(ra))
+            if ka is None and kb is None:
+                continue
+            # one side zero-padded, other side anything → products vanish
+            if (ka and ka[0] == ZERO) or (kb and kb[0] == ZERO):
+                continue
+            kind = (ka or kb)[0]
+            self._emit("dot_general", "contraction", kind,
+                       [int(la)])
+        star = a.taint.get("*") or b.taint.get("*")
+        if star is not None and star[0] != ZERO:
+            self._emit("dot_general", "contraction", star[0], [])
+        # output taint: batch axes, then lhs free, then rhs free
+        la_rank = len(_shape(eqn.invars[0]))
+        rb_rank = len(_shape(eqn.invars[1]))
+        l_free = [ax for ax in range(la_rank)
+                  if ax not in lc and ax not in lb]
+        r_free = [ax for ax in range(rb_rank)
+                  if ax not in rc and ax not in rb]
+        out = TFact.clean()
+        pos = 0
+        for la, _ in zip(lb, rb):
+            k = _join_kind(a.taint.get(int(la)), None)
+            if k:
+                out.taint[pos] = k
+            pos += 1
+        for ax in l_free:
+            k = a.taint.get(ax)
+            if k:
+                out.taint[pos] = (ZERO, 0.0) if k[0] == ZERO else (
+                    DIRTY, None)
+            pos += 1
+        for ax in r_free:
+            k = b.taint.get(ax)
+            if k:
+                out.taint[pos] = (ZERO, 0.0) if k[0] == ZERO else (
+                    DIRTY, None)
+            pos += 1
+        env[eqn.outvars[0]] = out
+
+    # -- refs ----------------------------------------------------------------
+
+    def _indexers_of(self, tree, flat):
+        try:
+            import jax.tree_util as jtu
+
+            transforms = jtu.tree_unflatten(tree, list(flat))
+        except Exception:
+            return []
+        out = []
+
+        def walk(obj):
+            if hasattr(obj, "indices") and hasattr(obj, "shape"):
+                out.append(obj)
+            elif isinstance(obj, (list, tuple)):
+                for item in obj:
+                    walk(item)
+
+        walk(transforms)
+        return out
+
+    def _index_taint(self, ref_fact: TFact, indexers, env,
+                     ref_shape) -> TFact:
+        """Map a ref's content taint through NDIndexers to the loaded
+        value's taint."""
+        f = ref_fact.copy()
+        f.padbool = {}
+        for indexer in indexers:
+            indices = getattr(indexer, "indices", ())
+            out = TFact.clean()
+            out_ax = 0
+            star = f.taint.get("*")
+            for dim_i, idx in enumerate(indices):
+                k = f.taint.get(dim_i)
+                if hasattr(idx, "size"):  # pl.Slice keeps the axis
+                    if k is not None:
+                        out.taint[out_ax] = k
+                    if dim_i in f.pos_axes:
+                        out.pos_axes.add(out_ax)
+                    out_ax += 1
+                elif isinstance(idx, (int, np.integer)):
+                    pass  # static scalar drops the axis; taint vanishes
+                         # only if the index provably hits valid lanes —
+                         # conservatively keep as whole-value taint below
+                else:
+                    idx_shape = _shape(idx)
+                    idx_fact = self._fact(idx, env)
+                    tainted_index = not idx_fact.is_clean
+                    for _ in idx_shape:
+                        if k is not None or tainted_index:
+                            out.taint[out_ax] = (DIRTY, None) \
+                                if tainted_index else k
+                        out_ax += 1
+                    if not idx_shape and (k is not None or tainted_index):
+                        # dynamic scalar over a tainted axis: any lane
+                        # could be padding → whole-value taint
+                        out.taint["*"] = _join_kind(
+                            out.taint.get("*"),
+                            (DIRTY, None) if tainted_index else k,
+                        )
+            # trailing unindexed axes
+            n_idx = len(indices)
+            rank = len(ref_shape)
+            for dim_i in range(n_idx, rank):
+                k = f.taint.get(dim_i)
+                if k is not None:
+                    out.taint[out_ax] = k
+                if dim_i in f.pos_axes:
+                    out.pos_axes.add(out_ax)
+                out_ax += 1
+            if star is not None:
+                out.taint["*"] = _join_kind(out.taint.get("*"), star)
+            f = out
+        return f
+
+    def _eval_get(self, eqn, env):
+        ref = eqn.invars[0]
+        rf = self._ref_fact(ref)
+        idxrs = self._indexers_of(eqn.params.get("tree"), eqn.invars[1:])
+        env[eqn.outvars[0]] = self._index_taint(rf, idxrs, env, _shape(ref))
+
+    def _eval_swap(self, eqn, env):
+        ref, val = eqn.invars[0], eqn.invars[1]
+        vf = self._fact(val, env)
+        rf = self._ref_fact(ref)
+        # Stores join into ref content at whole-ref granularity; axis ids
+        # only survive full-shape stores (the common o_ref[...] = x case).
+        ref_rank = len(_shape(ref))
+        if len(_shape(val)) == ref_rank:
+            self._refs[self._canon(ref)] = join(rf, vf)
+        elif not vf.is_clean:
+            nrf = rf.copy()
+            nrf.taint["*"] = _join_kind(nrf.taint.get("*"), (DIRTY, None)
+                                        if vf.worst() == DIRTY
+                                        else (vf.worst(), None))
+            self._refs[self._canon(ref)] = nrf
+        for ov in eqn.outvars:
+            env[ov] = self._ref_fact(ref).copy()
+
+    def _eval_dma(self, eqn, env):
+        """A DMA lands remote data into a local ref. If the *source index*
+        is tainted (clamped padding indices re-fetching real rows, as in
+        bright's row gather), the landed rows are valid data in the wrong
+        lanes: DIRTY on the dst axes selected per-row."""
+        try:
+            import jax.tree_util as jtu
+
+            structure = jtu.tree_unflatten(eqn.params.get("tree"),
+                                           list(eqn.invars))
+        except Exception:
+            return
+        items = list(structure) if isinstance(structure, (tuple, list)) \
+            else [structure]
+        refs_seen = []
+        cur_ref = None
+        tainted_idx = False
+        for item in items:
+            if _is_ref(item) and not isinstance(item, (tuple, list)):
+                cur_ref = item
+                refs_seen.append(item)
+            elif cur_ref is not None:
+                for idxr in self._walk_indexers(item):
+                    for idx in getattr(idxr, "indices", ()):
+                        if not isinstance(idx, (int, np.integer)) and \
+                                not hasattr(idx, "size"):
+                            if not self._fact(idx, env).is_clean:
+                                tainted_idx = True
+        dst = None
+        for r in refs_seen[1:]:
+            if "Semaphore" not in str(_aval_of(r)):
+                dst = r
+                break
+        if dst is not None:
+            src = refs_seen[0]
+            landed = self._ref_fact(src).copy() if src in self._refs \
+                else TFact.clean()
+            landed.padbool = {}
+            if tainted_idx:
+                landed.taint["*"] = _join_kind(landed.taint.get("*"),
+                                               (DIRTY, None))
+            self._refs[self._canon(dst)] = join(self._ref_fact(dst),
+                                                landed)
+
+    @staticmethod
+    def _walk_indexers(value):
+        out = []
+
+        def walk(obj):
+            if hasattr(obj, "indices") and hasattr(obj, "shape"):
+                out.append(obj)
+            elif isinstance(obj, (list, tuple)):
+                for item in obj:
+                    walk(item)
+
+        walk(value)
+        return out
+
+    # -- control flow --------------------------------------------------------
+
+    def _eval_cond(self, eqn, env):
+        branches = eqn.params.get("branches", ())
+        operands = list(eqn.invars[1:])
+        joined = None
+        for closed in branches:
+            body = closed.jaxpr
+            if len(body.invars) != len(operands):
+                continue
+            inner_env = {}
+            for outer, inner in zip(operands, body.invars):
+                inner_env[inner] = self._fact(outer, env).copy()
+                if not isinstance(outer, jex_core.Literal) and \
+                        _is_ref(outer):
+                    self._alias[inner] = self._canon(outer)
+            self._eval_eqns(body.eqns, inner_env)
+            outs = [self._fact(ov, inner_env) for ov in body.outvars]
+            joined = outs if joined is None else [
+                join(a, b) for a, b in zip(joined, outs)
+            ]
+        for i, ov in enumerate(eqn.outvars):
+            env[ov] = joined[i] if joined and i < len(joined) \
+                else TFact.clean()
+
+    def _eval_while(self, eqn, env):
+        params = eqn.params
+        cnc = params.get("cond_nconsts", 0)
+        bnc = params.get("body_nconsts", 0)
+        body = params["body_jaxpr"].jaxpr
+        body_consts = eqn.invars[cnc:cnc + bnc]
+        init = eqn.invars[cnc + bnc:]
+        carry = [self._fact(a, env) for a in init]
+        for _ in range(3):
+            body_env = {}
+            for outer, inner in zip(body_consts, body.invars[:bnc]):
+                body_env[inner] = self._fact(outer, env).copy()
+                if not isinstance(outer, jex_core.Literal) and \
+                        _is_ref(outer):
+                    self._alias[inner] = self._canon(outer)
+            for cf, inner in zip(carry, body.invars[bnc:]):
+                body_env[inner] = cf.copy()
+            self._eval_eqns(body.eqns, body_env)
+            outs = [self._fact(ov, body_env) for ov in body.outvars]
+            new = [join(a, b) for a, b in zip(carry, outs)]
+            if all(a.taint == b.taint for a, b in zip(carry, new)):
+                break
+            carry = new
+        for ov, cf in zip(eqn.outvars, carry):
+            env[ov] = cf
+
+    def _eval_scan(self, eqn, env):
+        params = eqn.params
+        body = params["jaxpr"].jaxpr
+        nc = params.get("num_consts", 0)
+        body_env = {}
+        for outer, inner in zip(eqn.invars[:nc], body.invars[:nc]):
+            body_env[inner] = self._fact(outer, env).copy()
+            if not isinstance(outer, jex_core.Literal) and _is_ref(outer):
+                self._alias[inner] = self._canon(outer)
+        for inner in body.invars[nc:]:
+            body_env[inner] = TFact.clean()
+        for _ in range(2):
+            self._eval_eqns(body.eqns, dict(body_env))
+        for ov in eqn.outvars:
+            env[ov] = TFact.clean()
+
+    def _eval_call(self, eqn, env):
+        for value in eqn.params.values():
+            subs = []
+            if isinstance(value, jex_core.ClosedJaxpr):
+                subs = [value.jaxpr]
+            elif isinstance(value, jex_core.Jaxpr):
+                subs = [value]
+            for sub in subs:
+                if len(sub.invars) != len(eqn.invars):
+                    continue
+                inner_env = {}
+                for outer, inner in zip(eqn.invars, sub.invars):
+                    inner_env[inner] = self._fact(outer, env).copy()
+                    if not isinstance(outer, jex_core.Literal) and \
+                            _is_ref(outer):
+                        self._alias[inner] = self._canon(outer)
+                self._eval_eqns(sub.eqns, inner_env)
+                for ov, sub_ov in zip(eqn.outvars, sub.outvars):
+                    env[ov] = self._fact(sub_ov, inner_env)
+                return
+        for ov in eqn.outvars:
+            env[ov] = TFact.clean()
+
+
+def check_taint(call) -> list[TaintFinding]:
+    """All padding-taint findings for one extracted KernelCall."""
+    return TaintInterpreter(call).run()

@@ -30,6 +30,7 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.kernels import kernel_rules
 from repro.analysis.report import Report, Summary
 from repro.analysis.rules import (
     CapacityIndependenceRule,
@@ -263,4 +264,197 @@ def _dist_chain_fleet() -> Report:
     return check(
         fleet.step_chains_data, keys, states, fleet.data, fleet.stats,
         rules=_step_rules(), name="dist.chain_fleet",
+    )
+
+# ---------------------------------------------------------------------------
+# kernel entry points: the four kernel-level analyses (bounds, race,
+# padding-taint, bytes model) over every pallas_call in src/repro/kernels/.
+# Each entry declares its sequential accumulators BY OUTPUT INDEX (inner
+# kernel functions are all literally named `kernel`, so names can't key
+# them) — see the sequential-grid contract in repro.kernels.common. The
+# FlyMC kernels additionally pin the derived HBM byte totals the
+# benchmarks record, so a BlockSpec change that silently alters traffic
+# fails the sweep until the model is consciously re-pinned.
+# ---------------------------------------------------------------------------
+
+_KD = 4        # chains in the chain-batched variants
+_DP = 128      # bright's lane-padded feature width
+
+
+def _s(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _bright_fn(family, **kw):
+    from repro.kernels.bright_glm.ops import bright_glm
+
+    def fn(x, t, xi, idx, nb, theta):
+        return bright_glm(x, t, xi, idx, nb, theta, family=family,
+                          interpret=True, **kw)
+
+    return fn
+
+
+def _bright_args(family):
+    x = _s((N, D))
+    idx = _s((CAPACITY,), jnp.int32)
+    nb = _s((), jnp.int32)
+    if family == "softmax":
+        k = 3
+        return (x, _s((N,), jnp.int32), _s((N, k)), idx, nb, _s((k, D)))
+    return (x, _s((N,)), _s((N,)), idx, nb, _s((D,)))
+
+
+# bright's single-chain traffic: the (deleted) hand model's exact terms —
+# row DMA C·D·4, lane-padded theta block, t/xi streams + delta out (3·C·4),
+# and the 4-byte running total.
+_BRIGHT_BYTES = CAPACITY * D * 4 + _DP * 4 + 3 * CAPACITY * 4 + 4
+
+
+@entry_point("kernel.bright_glm.logistic")
+def _kernel_bright_logistic() -> Report:
+    return check(
+        _bright_fn("logistic"), *_bright_args("logistic"),
+        rules=kernel_rules(accumulators={1: (1,)},
+                           expected_bytes={"kernel": _BRIGHT_BYTES}),
+        name="kernel.bright_glm.logistic",
+    )
+
+
+@entry_point("kernel.bright_glm.student_t")
+def _kernel_bright_student_t() -> Report:
+    return check(
+        _bright_fn("student_t"), *_bright_args("student_t"),
+        rules=kernel_rules(accumulators={1: (1,)},
+                           expected_bytes={"kernel": _BRIGHT_BYTES}),
+        name="kernel.bright_glm.student_t",
+    )
+
+
+@entry_point("kernel.bright_glm.softmax")
+def _kernel_bright_softmax() -> Report:
+    return check(
+        _bright_fn("softmax"), *_bright_args("softmax"),
+        rules=kernel_rules(accumulators={1: (1,)}),
+        name="kernel.bright_glm.softmax",
+    )
+
+
+@entry_point("kernel.bright_glm.chains")
+def _kernel_bright_chains() -> Report:
+    """The chain-batched megakernel (custom_vmap → chain-grid launch):
+    grid leads with the chain axis; per-chain totals still accumulate
+    along the row axis only, and traffic is exactly K× the single-chain
+    model."""
+    fn = jax.vmap(_bright_fn("logistic"),
+                  in_axes=(None, None, None, 0, 0, 0))
+    x, t, xi, idx, nb, theta = _bright_args("logistic")
+    args = (x, t, xi, _s((_KD, CAPACITY), jnp.int32), _s((_KD,), jnp.int32),
+            _s((_KD, D)))
+    return check(
+        fn, *args,
+        rules=kernel_rules(accumulators={1: (1,)},
+                           expected_bytes={"kernel": _KD * _BRIGHT_BYTES}),
+        name="kernel.bright_glm.chains",
+    )
+
+
+# z-update shapes: large enough that the row-block grid axis really
+# revisits the candidate accumulators (4096 ids = 4 blocks of 8×128).
+_ZN = 4096
+
+
+def _z_fn():
+    from repro.kernels.z_update.ops import z_candidates
+
+    def fn(arr, num, kw):
+        return z_candidates(arr, num, kw, q_db=0.01,
+                            cand_capacity=CAPACITY, interpret=True)
+
+    return fn
+
+
+# arr streams once (4·N after exact tiling), the compacted candidate
+# buffer writes back C_pad·4, plus the 4-byte count the hand model omitted.
+_Z_BYTES = _ZN * 4 + CAPACITY * 4 + 4
+
+
+@entry_point("kernel.z_update")
+def _kernel_z_update() -> Report:
+    return check(
+        _z_fn(), _s((_ZN,), jnp.int32), _s((), jnp.int32),
+        _s((2,), jnp.int32),
+        rules=kernel_rules(accumulators={0: (1,), 1: (1,)},
+                           expected_bytes={"kernel": _Z_BYTES}),
+        name="kernel.z_update",
+    )
+
+
+@entry_point("kernel.z_update.chains")
+def _kernel_z_chains() -> Report:
+    return check(
+        jax.vmap(_z_fn()), _s((_KD, _ZN), jnp.int32), _s((_KD,), jnp.int32),
+        _s((_KD, 2), jnp.int32),
+        rules=kernel_rules(accumulators={0: (1,), 1: (1,)},
+                           expected_bytes={"kernel": _KD * _Z_BYTES}),
+        name="kernel.z_update.chains",
+    )
+
+
+@entry_point("kernel.decode_attention")
+def _kernel_decode_attention() -> Report:
+    """w=192 forces ring padding (pad_w=64 with pos = -1 sentinel): the
+    taint analysis must see the in-kernel validity mask scrub it."""
+    from repro.kernels.decode_attention.ops import decode_attention
+
+    b, h, hk, d, w = 2, 4, 2, 128, 192
+    fn = lambda q, k, v, pos, t: decode_attention(
+        q, k, v, pos, t, interpret=True)
+    return check(
+        fn, _s((b, h, d)), _s((b, w, hk, d)), _s((b, w, hk, d)),
+        _s((w,), jnp.int32), _s((), jnp.int32),
+        rules=kernel_rules(accumulators={0: (2,), 1: (2,), 2: (2,)}),
+        name="kernel.decode_attention",
+    )
+
+
+@entry_point("kernel.fused_ce")
+def _kernel_fused_ce() -> Report:
+    """T=10 with block_t=8 forces row padding (tp=16): the zero-padded
+    rows must stay out of every vocab-axis reduction."""
+    from repro.kernels.fused_ce.ops import fused_ce
+
+    fn = lambda x, w, labels: fused_ce(x, w, labels, interpret=True)
+    return check(
+        fn, _s((10, 128)), _s((128, 1024)), _s((10,), jnp.int32),
+        rules=kernel_rules(accumulators={0: (1,), 1: (1,)}),
+        name="kernel.fused_ce",
+    )
+
+
+@entry_point("kernel.rglru_scan")
+def _kernel_rglru_scan() -> Report:
+    """100 channels pad to the 128-lane block; the final-state output
+    revisits the sequence-chunk axis (axis 2) as its accumulator."""
+    from repro.kernels.rglru_scan.ops import rglru_scan
+
+    fn = lambda a, bx: rglru_scan(a, bx, interpret=True)
+    return check(
+        fn, _s((1, 256, 100)), _s((1, 256, 100)),
+        rules=kernel_rules(accumulators={1: (2,)}),
+        name="kernel.rglru_scan",
+    )
+
+
+@entry_point("kernel.rwkv6_scan")
+def _kernel_rwkv6_scan() -> Report:
+    from repro.kernels.rwkv6_scan.ops import rwkv6_scan
+
+    fn = lambda r, k, v, lw, u: rwkv6_scan(r, k, v, lw, u, chunk=64,
+                                           interpret=True)
+    s4 = _s((1, 2, 128, 128))
+    return check(
+        fn, s4, s4, s4, s4, _s((2, 128)),
+        rules=kernel_rules(accumulators={1: (2,)}),
+        name="kernel.rwkv6_scan",
     )

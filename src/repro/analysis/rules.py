@@ -524,12 +524,18 @@ def check(
     closed = walker.make_jaxpr_of(fn, *args)
     ctx = Context(name=name, closed=closed, fn=fn, args=args)
     findings: list[Finding] = []
+    metrics = standard_metrics(closed)
     for rule in rules:
         findings.extend(rule.check(ctx))
+        # Rules may surface derived quantities (the kernel bytes model)
+        # into the report's metrics, which BENCH records per entry point.
+        report_metrics = getattr(rule, "report_metrics", None)
+        if report_metrics is not None:
+            metrics.update(report_metrics(ctx))
     return Report(
         entry_point=name,
         findings=findings,
         rules_run=[r.name for r in rules],
-        metrics=standard_metrics(closed),
+        metrics=metrics,
         expect_fail=frozenset(expect_fail),
     )

@@ -24,6 +24,29 @@ measures against, and what the batched-vs-vmap parity tests pin the
 megakernels to, bitwise. The flag is read at trace time; callers that
 toggle it must not reuse traces across values (the driver's jit cache
 keys on it).
+
+The sequential-grid-accumulator contract
+----------------------------------------
+Every kernel in this repo may use the *revisited-block accumulator*
+idiom: an output BlockSpec whose index map ignores one grid axis, so all
+steps along that axis address the same block and the kernel accumulates
+into it (``pl.when(i == 0)`` init, ``ref[...] += part`` after —
+bright's running total, z-update's candidate buffer and count, fused-ce's
+``lse``/``tgt``, flash-decode's ``o/m/l``, the scan kernels' final
+states). The idiom is exact only because TPU grids execute
+**sequentially** (row-major, last axis fastest); under
+``dimension_semantics=('parallel', ...)`` — or any future lowering with
+parallel grid axes — the same BlockSpec is a write-write race.
+
+Kernels therefore must (a) never mark a revisited output axis
+``parallel``, and (b) *declare* each accumulator output when registering
+with the analysis sweep (``repro.analysis.kernels.GridRaceRule``,
+``accumulators={output_index: (revisited_axes...)}``) — the
+``kernel-race`` rule flags undeclared accumulator-style writes and any
+parallel-axis revisit, so the contract is checked on every commit rather
+than remembered. Scratch initialization follows the same sequencing
+assumption: a ``pl.when(first_step)`` init is ordered before every later
+read only because the grid is sequential.
 """
 
 from __future__ import annotations

@@ -7,6 +7,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import common
 from repro.kernels.decode_attention.kernel import decode_attention_pallas
 
 
@@ -19,15 +20,17 @@ def decode_attention(
     t: jax.Array,  # ()
     window: int | None = None,
     block_k: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
     """Returns (out (B, H, D), m (B, Hk, G), l (B, Hk, G)) — local softmax
     stats exposed for cross-shard (context-parallel) merging."""
+    if interpret is None:
+        interpret = common.default_interpret()
     b, h, d = q.shape
     w, hk = k.shape[1], k.shape[2]
     g = h // hk
     bk = min(block_k, w)
-    pad_w = (bk - w % bk) % bk
+    pad_w = common.pad_to(w, bk) - w
     if pad_w:
         k = jnp.pad(k, ((0, 0), (0, pad_w), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pad_w), (0, 0), (0, 0)))

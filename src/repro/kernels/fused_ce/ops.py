@@ -7,6 +7,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import common
 from repro.kernels.fused_ce.kernel import fused_ce_pallas
 
 
@@ -17,14 +18,16 @@ def fused_ce(
     labels: jax.Array,  # (T,)
     block_t: int = 8,
     block_v: int = 512,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
     """Per-token NLL (T,) without materializing (T, V) logits in HBM."""
+    if interpret is None:
+        interpret = common.default_interpret()
     t, d = x.shape
     v = w.shape[1]
-    tp = ((t + block_t - 1) // block_t) * block_t
+    tp = common.pad_to(t, block_t)
     bv = min(block_v, v)
-    vp = ((v + bv - 1) // bv) * bv
+    vp = common.pad_to(v, bv)
     xp = jnp.pad(x, ((0, tp - t), (0, 0)))
     # pad vocab with -inf-producing zero columns? zero columns would join the
     # logsumexp; instead pad W with a very negative bias via zero weights and

@@ -7,6 +7,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import common
 from repro.kernels.rglru_scan.kernel import rglru_pallas
 
 
@@ -16,14 +17,16 @@ def rglru_scan(
     bx: jax.Array,  # (B, S, C)
     chunk: int = 128,
     block_c: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
     """Returns (h (B, S, C), h_final (B, C))."""
+    if interpret is None:
+        interpret = common.default_interpret()
     b, s, ch = log_a.shape
     c = min(chunk, s)
     assert s % c == 0
     n = s // c
-    chp = ((ch + block_c - 1) // block_c) * block_c
+    chp = common.pad_to(ch, block_c)
     pad = chp - ch
 
     def prep(t):

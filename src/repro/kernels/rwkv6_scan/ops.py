@@ -7,6 +7,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import common
 from repro.kernels.rwkv6_scan.kernel import rwkv6_pallas
 
 
@@ -18,9 +19,11 @@ def rwkv6_scan(
     logw: jax.Array,  # ≤ 0 per-step log decay
     u: jax.Array,  # (H, D)
     chunk: int = 64,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
     """Returns (y (B, H, S, D), final state (B, H, D, D))."""
+    if interpret is None:
+        interpret = common.default_interpret()
     b, h, s, d = r.shape
     c = min(chunk, s)
     assert s % c == 0, (s, c)
