@@ -6,7 +6,9 @@ RNG/cumsum/gather/scatter sizes, closure-constant bytes, and each rule's
 pass/xfail status. A cost-discipline regression (an O(N) primitive
 sneaking back into a fused step, a dataset baked in as a const) then shows
 up in the perf trajectory next to the timing numbers it would eventually
-poison.
+poison. The sharded entry points additionally record their collective
+census (kind@axis -> per-step count) and the derived per-device wire-bytes
+model, so communication regressions land in the same trajectory.
 
     PYTHONPATH=src python -m benchmarks.static_analysis
 """
@@ -25,7 +27,10 @@ def main(quick: bool = False) -> dict:
     summary = registry.run_registry()
     record = {
         "problem": {"n": registry.N, "d": registry.D,
-                    "capacity": registry.CAPACITY},
+                    "capacity": registry.CAPACITY,
+                    # the forced mesh the sharded entry points trace under
+                    # (AbstractMesh: axis names + sizes, no devices)
+                    "data_shards": registry._DATA_SHARDS},
         **summary.to_record(),
     }
     merge_write({"static_analysis": record})

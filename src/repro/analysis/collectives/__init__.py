@@ -1,0 +1,66 @@
+"""Collective-level static verification of every sharded program.
+
+FlyMC's locality claims are exactly what make it shardable for tall data:
+brightness is per-datum so z-updates need ZERO collectives, and the
+θ-update reduces to ONE scalar psum per proposal. This package turns those
+claims (previously docstring-only) into checkable invariants over the
+``shard_map`` regions of a traced program:
+
+====================    ===================================================
+collective-budget       per-step census of collectives (kind × mesh axis ×
+                        count, scan bodies trip-multiplied) pinned against
+                        a declared budget; collectives inside loop bodies
+                        and non-scalar reductions are findings
+                        (:mod:`.census`, :class:`.rules.CollectiveBudgetRule`)
+replication-consistency device-variance dataflow proving every output
+                        declared replicated (``out_specs=P()``) derives
+                        only from replicated inputs and collective results
+                        — the ``check_rep=False`` foot-gun where shard 0's
+                        value silently overwrites every other shard's
+                        (:mod:`.replication`)
+comm-bytes              derived per-device wire-bytes model from the body
+                        avals (all-reduce 2·in, all-gather out−in, …),
+                        exported into Report.metrics for BENCH and
+                        cross-validated against the post-compile HLO
+                        accounting in :mod:`repro.launch.hlo_analysis`
+                        (:mod:`.wire_bytes`)
+shard-shape             divisibility / zero-local-shard soundness of every
+                        sharded axis vs the mesh axis sizes, plus optional
+                        pinned local shapes (:mod:`.shapes`)
+====================    ===================================================
+
+Everything is derived from jaxprs traced from ShapeDtypeStructs — under a
+:class:`jax.sharding.AbstractMesh` no physical devices are needed, so the
+registry sweep verifies 8-way-sharded programs on a 1-device CI host.
+"""
+
+from repro.analysis.collectives.census import CollectiveSite, census
+from repro.analysis.collectives.extract import (
+    ShardedRegion,
+    find_sharded_regions,
+)
+from repro.analysis.collectives.replication import output_variance
+from repro.analysis.collectives.rules import (
+    CollectiveBudgetRule,
+    CommBytesRule,
+    ReplicationRule,
+    ShardShapeRule,
+    collective_rules,
+)
+from repro.analysis.collectives.shapes import check_shapes
+from repro.analysis.collectives.wire_bytes import wire_model
+
+__all__ = [
+    "CollectiveSite",
+    "census",
+    "ShardedRegion",
+    "find_sharded_regions",
+    "output_variance",
+    "CollectiveBudgetRule",
+    "CommBytesRule",
+    "ReplicationRule",
+    "ShardShapeRule",
+    "collective_rules",
+    "check_shapes",
+    "wire_model",
+]

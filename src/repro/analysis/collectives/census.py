@@ -1,0 +1,136 @@
+"""Collective census: every cross-device primitive in a shard_map body.
+
+Walks a region's per-shard jaxpr and records one :class:`CollectiveSite`
+per collective equation — kind, mesh axes, scope path, per-shard operand /
+result bytes — descending into scan / while / cond bodies. A site inside a
+``lax.scan`` carries the product of enclosing trip counts
+(``trip_multiplier``): one psum in a length-C z-candidate scan is C
+collectives per step, which is precisely the regression the per-step
+budget exists to catch. ``while`` bodies have no static trip count, so
+their sites are flagged ``unbounded`` instead (counted once; the budget
+and wire rules each surface the flag).
+
+``cond`` branches are all walked (a site notes ``conditional=True`` via
+its scope); exact budgets therefore treat branch collectives as if every
+branch ran — conservative for programs that keep collectives out of
+branches entirely, which is the only shape this repo ships.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.analysis import walker
+
+# primitive name -> canonical collective kind (the wire-model vocabulary)
+KINDS = {
+    "psum": "psum",
+    "pmax": "pmax",
+    "pmin": "pmin",
+    "all_gather": "all_gather",
+    "all_to_all": "all_to_all",
+    "ppermute": "ppermute",
+    "pbroadcast": "pbroadcast",
+    "psum_scatter": "psum_scatter",
+    "reduce_scatter": "psum_scatter",
+    "axis_index": "axis_index",
+}
+
+
+def axes_of(eqn) -> tuple[str, ...]:
+    """The mesh axes a collective eqn operates over (named axes only)."""
+    ax = eqn.params.get("axes", eqn.params.get("axis_name"))
+    if ax is None:
+        return ()
+    if not isinstance(ax, (tuple, list)):
+        ax = (ax,)
+    return tuple(a for a in ax if isinstance(a, str))
+
+
+def _aval_bytes(var) -> int:
+    aval = getattr(var, "aval", None)
+    if aval is None or not hasattr(aval, "dtype"):
+        return 0
+    size = 1
+    for d in getattr(aval, "shape", ()) or ():
+        size *= int(d)
+    return size * aval.dtype.itemsize
+
+
+def _is_scalar(var) -> bool:
+    aval = getattr(var, "aval", None)
+    return not tuple(getattr(aval, "shape", ()) or ())
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveSite:
+    """One collective equation inside a shard_map body."""
+
+    kind: str                   # canonical kind (KINDS value)
+    axes: tuple[str, ...]       # mesh axes reduced / indexed over
+    scope: str                  # path inside the body ("" = top level)
+    trip_multiplier: int        # product of enclosing scan lengths
+    unbounded: bool             # inside a while body (no static trip count)
+    in_loop: bool               # inside any scan/while body
+    shard_bytes_in: int         # per-shard operand bytes
+    shard_bytes_out: int        # per-shard result bytes
+    scalar: bool                # all operands are scalars
+
+    @property
+    def key(self) -> str:
+        """Budget key: ``kind@axis1,axis2`` (the kind × mesh-axis census)."""
+        return f"{self.kind}@{','.join(self.axes)}"
+
+
+def census(region) -> list[CollectiveSite]:
+    """Every collective site in ``region``'s body, recursively."""
+    sites: list[CollectiveSite] = []
+
+    def _walk(jaxpr, scope: str, mult: int, unbounded: bool, in_loop: bool):
+        for eqn in walker.as_jaxpr(jaxpr).eqns:
+            name = eqn.primitive.name
+            kind = KINDS.get(name)
+            if kind is not None:
+                sites.append(CollectiveSite(
+                    kind=kind,
+                    axes=axes_of(eqn),
+                    scope=scope,
+                    trip_multiplier=mult,
+                    unbounded=unbounded,
+                    in_loop=in_loop,
+                    shard_bytes_in=sum(
+                        _aval_bytes(v) for v in eqn.invars
+                    ),
+                    shard_bytes_out=sum(
+                        _aval_bytes(v) for v in eqn.outvars
+                    ),
+                    scalar=all(_is_scalar(v) for v in eqn.invars),
+                ))
+                continue
+            sub_scope = f"{scope}/{name}"
+            if name == "scan":
+                trip = int(eqn.params.get("length", 1))
+                _walk(eqn.params["jaxpr"], sub_scope, mult * trip,
+                      unbounded, True)
+            elif name == "while":
+                _walk(eqn.params["body_jaxpr"], sub_scope, mult, True, True)
+                _walk(eqn.params["cond_jaxpr"], f"{sub_scope}.cond", mult,
+                      True, True)
+            else:
+                for sub in walker.eqn_subjaxprs(eqn):
+                    _walk(sub, sub_scope, mult, unbounded, in_loop)
+
+    _walk(region.jaxpr, "", 1, False, False)
+    return sites
+
+
+def census_counts(sites) -> dict[str, int]:
+    """Trip-multiplied counts per ``kind@axes`` key (the budget's shape).
+
+    Unbounded (while-body) sites count once here; the budget rule flags
+    them separately since no static count exists.
+    """
+    counts: dict[str, int] = {}
+    for s in sites:
+        counts[s.key] = counts.get(s.key, 0) + s.trip_multiplier
+    return counts

@@ -1,0 +1,96 @@
+"""Find every ``shard_map`` region reachable from a traced program.
+
+``jax.shard_map`` appears in a jaxpr as one ``shard_map`` equation whose
+params carry everything the collective analyses need:
+
+* ``jaxpr``      — the per-shard body as a *raw* ``Jaxpr`` (avals are the
+  PER-SHARD shapes, which is exactly what the wire-bytes model wants);
+* ``mesh``       — a ``Mesh`` or ``AbstractMesh``; only the axis-name →
+  size mapping is used, so tracing needs no physical devices;
+* ``in_names`` / ``out_names`` — one ``{dim: (axis, ...)}`` dict per flat
+  operand/result ( ``{}`` ⇒ replicated), the flat form of
+  in_specs/out_specs;
+* ``check_rep``  — whether jax itself verifies replication (this repo's
+  call sites all pass ``check_vma=False`` for trace speed, which is why
+  :mod:`.replication` exists).
+
+The walk descends through pjit / scan / while / cond / custom-call bodies
+(the dist driver jits a scan OVER the shard-mapped step, so regions are
+usually nested), recording an origin path for reporting. Tests construct
+:class:`ShardedRegion` directly for shapes shard_map itself would reject at
+trace time (e.g. indivisible axes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+from repro.analysis import walker
+
+
+@dataclasses.dataclass
+class ShardedRegion:
+    """One shard_map call site, normalized for the collective analyses."""
+
+    origin: str                       # eqn path, e.g. "/pjit/shard_map"
+    mesh_axes: dict[str, int]         # axis name -> size
+    in_names: tuple[dict, ...]        # per flat operand: {dim: (axis, ...)}
+    out_names: tuple[dict, ...]
+    jaxpr: Any                        # per-shard body (raw Jaxpr)
+    check_rep: bool = False
+    global_in_avals: tuple = ()       # outer (global-shape) operand avals
+    global_out_avals: tuple = ()
+
+    @property
+    def mesh_size(self) -> int:
+        size = 1
+        for n in self.mesh_axes.values():
+            size *= int(n)
+        return size
+
+    def axis_size(self, axes) -> int:
+        """Product of the named axis sizes (the shard count along them)."""
+        size = 1
+        for a in axes:
+            size *= int(self.mesh_axes.get(a, 1))
+        return size
+
+
+def _names_axes(names: dict) -> frozenset:
+    """Every mesh axis a {dim: (axes,)} entry shards over."""
+    out: set = set()
+    for axes in names.values():
+        out.update(axes)
+    return frozenset(out)
+
+
+def find_sharded_regions(closed) -> list[ShardedRegion]:
+    """Every shard_map region reachable from ``closed``, outermost first."""
+    regions: list[ShardedRegion] = []
+
+    def _walk(jaxpr, path: str):
+        for eqn in walker.as_jaxpr(jaxpr).eqns:
+            sub_path = f"{path}/{eqn.primitive.name}"
+            if eqn.primitive.name == "shard_map":
+                mesh = eqn.params["mesh"]
+                regions.append(ShardedRegion(
+                    origin=sub_path,
+                    mesh_axes={str(k): int(v)
+                               for k, v in dict(mesh.shape).items()},
+                    in_names=tuple(eqn.params["in_names"]),
+                    out_names=tuple(eqn.params["out_names"]),
+                    jaxpr=eqn.params["jaxpr"],
+                    check_rep=bool(eqn.params.get("check_rep", False)),
+                    global_in_avals=tuple(
+                        getattr(v, "aval", None) for v in eqn.invars
+                    ),
+                    global_out_avals=tuple(
+                        getattr(v, "aval", None) for v in eqn.outvars
+                    ),
+                ))
+            for sub in walker.eqn_subjaxprs(eqn):
+                _walk(sub, sub_path)
+
+    _walk(walker.as_jaxpr(closed), "")
+    return regions

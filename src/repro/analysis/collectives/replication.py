@@ -1,0 +1,196 @@
+"""Device-variance dataflow: is each shard_map output really replicated?
+
+With ``check_rep=False`` (every call site in this repo — jax's own checker
+is skipped for trace speed), an output declared replicated
+(``out_specs=P()``) is NOT verified: jax simply takes **shard 0's value**
+and silently installs it on every device. If the value actually varied
+across shards, every other shard's contribution is dropped — the bug class
+that let ``BrightState.num`` (a per-shard bright count) be declared
+replicated and collapse to shard 0's count each step.
+
+This module proves replication instead of trusting it. For every variable
+in the body we track the set of mesh axes the value may VARY over:
+
+* a sharded input varies over the axes in its ``in_names`` entry; a
+  replicated input over none;
+* ``psum`` / ``pmax`` / ``pmin`` / ``all_gather`` / ``pbroadcast`` over
+  axes A produce the same value on every shard along A — variance minus A;
+* ``axis_index`` / ``psum_scatter`` / ``all_to_all`` / ``ppermute``
+  introduce per-shard values — variance plus A;
+* everything else joins its inputs' variance (including through pjit /
+  custom_* calls); unknown sub-jaxprs (Pallas kernels) conservatively
+  join ALL inputs into every output;
+* scan / while bodies run to a fixpoint over the carry (≤ |axes| + 1
+  rounds since variance sets only grow); a while whose *predicate* varies
+  makes every carry varying (shards would run different trip counts);
+  cond joins all branches plus the predicate's variance.
+
+An output whose inferred variance escapes the axes its ``out_names`` entry
+declares is a violation: the program would silently keep only shard 0's
+value there.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.extend.core as jex_core
+
+from repro.analysis import walker
+from repro.analysis.collectives.census import KINDS, axes_of
+from repro.analysis.collectives.extract import _names_axes
+from repro.analysis.rules import _DIRECT_CALLS
+
+# kinds that make their output invariant along their axes vs kinds that
+# introduce per-shard variance (see module doc)
+_CLEARS = {"psum", "pmax", "pmin", "all_gather", "pbroadcast"}
+_ADDS = {"axis_index", "psum_scatter", "all_to_all", "ppermute"}
+
+_EMPTY: frozenset = frozenset()
+
+
+@dataclasses.dataclass(frozen=True)
+class RepViolation:
+    """One output declared replicated along axes it actually varies over."""
+
+    out_index: int
+    leaked_axes: tuple[str, ...]   # varying axes NOT declared in out_names
+    declared_axes: tuple[str, ...]
+    aval: str
+
+    def message(self) -> str:
+        declared = (f"sharded over {list(self.declared_axes)}"
+                    if self.declared_axes else "replicated (out_specs=P())")
+        return (
+            f"output {self.out_index} ({self.aval}) is declared {declared} "
+            f"but varies over mesh axes {list(self.leaked_axes)} — with "
+            f"check_rep=False shard 0's value silently overwrites every "
+            f"other shard's (psum/pmax it, or shard the output)"
+        )
+
+
+def _transfer(jaxpr, in_sets):
+    """Variance sets for ``jaxpr``'s outputs given its inputs' sets."""
+    env: dict = {}
+    for v, s in zip(jaxpr.invars, in_sets):
+        env[v] = s
+    for v in jaxpr.constvars:
+        env[v] = _EMPTY
+
+    def get(atom):
+        if isinstance(atom, jex_core.Literal):
+            return _EMPTY
+        return env.get(atom, _EMPTY)
+
+    for eqn in jaxpr.eqns:
+        ins = [get(a) for a in eqn.invars]
+        join = frozenset().union(*ins) if ins else _EMPTY
+        name = eqn.primitive.name
+        kind = KINDS.get(name)
+        if kind in _CLEARS:
+            out = join - frozenset(axes_of(eqn))
+            outs = [out] * len(eqn.outvars)
+        elif kind in _ADDS:
+            out = join | frozenset(axes_of(eqn))
+            outs = [out] * len(eqn.outvars)
+        elif name == "scan":
+            outs = _scan(eqn, ins)
+        elif name == "while":
+            outs = _while(eqn, ins)
+        elif name == "cond":
+            outs = _cond(eqn, ins)
+        elif name in _DIRECT_CALLS:
+            outs = None
+            for sub in walker.eqn_subjaxprs(eqn):
+                if len(sub.invars) == len(ins):
+                    outs = _transfer(sub, ins)
+                    break
+            if outs is None:
+                outs = [join] * len(eqn.outvars)
+        else:
+            # Unknown structure (pallas_call kernels, …): every output may
+            # depend on every input — join, never drop, so unknown code can
+            # only ADD variance (sound for this rule's direction).
+            outs = [join] * len(eqn.outvars)
+        for v, s in zip(eqn.outvars, outs):
+            env[v] = s
+    return [get(v) for v in jaxpr.outvars]
+
+
+def _scan(eqn, ins):
+    p = eqn.params
+    body = walker.as_jaxpr(p["jaxpr"])
+    nc, ncar = int(p["num_consts"]), int(p["num_carry"])
+    consts, carry = ins[:nc], list(ins[nc:nc + ncar])
+    xs = ins[nc + ncar:]  # per-iteration slice varies like the stack
+    outs = carry + [_EMPTY] * (len(eqn.outvars) - ncar)
+    for _ in range(64):  # variance sets only grow: terminates fast
+        outs = _transfer(body, consts + carry + xs)
+        new = [c | o for c, o in zip(carry, outs[:ncar])]
+        if new == carry:
+            break
+        carry = new
+    return carry + outs[ncar:]
+
+
+def _while(eqn, ins):
+    p = eqn.params
+    cond = walker.as_jaxpr(p["cond_jaxpr"])
+    body = walker.as_jaxpr(p["body_jaxpr"])
+    cnc, bnc = int(p["cond_nconsts"]), int(p["body_nconsts"])
+    cconsts, bconsts = ins[:cnc], ins[cnc:cnc + bnc]
+    carry = list(ins[cnc + bnc:])
+    for _ in range(64):
+        # a varying predicate means shards run different trip counts, so
+        # every carry leaves the loop varying — join it in
+        pred = _transfer(cond, cconsts + carry)
+        pred = pred[0] if pred else _EMPTY
+        outs = _transfer(body, bconsts + carry)
+        new = [c | o | pred for c, o in zip(carry, outs)]
+        if new == carry:
+            break
+        carry = new
+    return carry
+
+
+def _cond(eqn, ins):
+    pred, ops = ins[0], ins[1:]
+    n_out = len(eqn.outvars)
+    outs = [pred] * n_out
+    for branch in eqn.params.get("branches", ()):
+        body = walker.as_jaxpr(branch)
+        if len(body.invars) == len(ops):
+            br = _transfer(body, list(ops))
+        else:
+            join = frozenset().union(*ins) if ins else _EMPTY
+            br = [join] * n_out
+        outs = [o | b for o, b in zip(outs, br)]
+    return outs
+
+
+def output_variance(region) -> list[frozenset]:
+    """The inferred varying-axes set for each of ``region``'s outputs."""
+    in_sets = [frozenset(_names_axes(names)) for names in region.in_names]
+    return _transfer(walker.as_jaxpr(region.jaxpr), in_sets)
+
+
+def check_replication(region) -> list[RepViolation]:
+    """Violations: outputs whose variance escapes their declared axes."""
+    mesh_axes = frozenset(region.mesh_axes)
+    violations = []
+    for i, (names, varies) in enumerate(
+        zip(region.out_names, output_variance(region))
+    ):
+        declared = _names_axes(names)
+        leaked = (varies & mesh_axes) - declared
+        if leaked:
+            outvars = walker.as_jaxpr(region.jaxpr).outvars
+            aval = str(getattr(outvars[i], "aval", "?")) \
+                if i < len(outvars) else "?"
+            violations.append(RepViolation(
+                out_index=i,
+                leaked_axes=tuple(sorted(leaked)),
+                declared_axes=tuple(sorted(declared)),
+                aval=aval,
+            ))
+    return violations

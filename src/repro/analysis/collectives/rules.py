@@ -1,0 +1,275 @@
+"""The four collective-level rules, packaged for the analysis engine.
+
+Same plug-in surface as the jaxpr-generic and kernel rules: each extracts
+every shard_map region from the entry point's jaxpr (cached on the
+Context) and runs one analysis. All default ``require=True`` — an entry
+point registered with collective rules that traces to *zero* shard_map
+regions is itself a finding (a sweep that stops seeing the sharded program
+is a blind sweep).
+
+=======================  =================================================
+collective-budget        trip-multiplied census counts must EQUAL the
+                         declared ``kind@axes`` budget (missing collectives
+                         are a stale pin, extra ones are the regression);
+                         collectives inside scan/while bodies and
+                         non-scalar reductions are findings by default
+replication-consistency  every output's inferred device-variance must stay
+                         inside its declared out_names axes
+comm-bytes               the derived per-device wire-bytes model; optional
+                         pinned total, exported into Report.metrics (and
+                         thence BENCH_flymc.json)
+shard-shape              divisibility / zero-local / pinned local shapes
+=======================  =================================================
+"""
+
+from __future__ import annotations
+
+from repro.analysis.collectives import extract, replication, shapes
+from repro.analysis.collectives import wire_bytes as wire_mod
+from repro.analysis.collectives.census import census as _census
+from repro.analysis.collectives.census import census_counts
+from repro.analysis.report import Finding
+from repro.analysis.rules import Context, Rule
+
+
+class _ShardedRule(Rule):
+    """Shared region extraction + the require-regions honesty guard."""
+
+    def __init__(self, require: bool = True):
+        self.require = require
+
+    def _regions(self, ctx: Context) -> list:
+        cache = getattr(ctx, "_sharded_regions", None)
+        if cache is None:
+            cache = extract.find_sharded_regions(ctx.closed)
+            try:
+                ctx._sharded_regions = cache
+            except Exception:
+                pass
+        return cache
+
+    def _sites(self, ctx: Context) -> list:
+        cache = getattr(ctx, "_collective_sites", None)
+        if cache is None:
+            cache = [s for r in self._regions(ctx)
+                     for s in _census(r)]
+            try:
+                ctx._collective_sites = cache
+            except Exception:
+                pass
+        return cache
+
+    def _require_finding(self, ctx: Context) -> list[Finding]:
+        if self.require:
+            return [self._finding(
+                ctx,
+                "no shard_map region reachable from this entry point — "
+                "collective rules were requested but there is no sharded "
+                "program to verify (mesh dropped, or shard_map traced away)",
+            )]
+        return []
+
+
+class CollectiveBudgetRule(_ShardedRule):
+    """Exact per-step collective counts against a declared budget.
+
+    ``budget`` maps ``"kind@axis1,axis2"`` (see
+    :attr:`~repro.analysis.collectives.census.CollectiveSite.key`) to the
+    exact trip-multiplied count per step. The comparison is two-sided:
+    collectives above budget are the classic regression (an O(C) psum
+    sneaking into the z-phase), collectives below budget mean the pin went
+    stale and must be consciously re-derived.
+
+    ``scalar_kinds`` reductions must operate on scalars — FlyMC's θ-psum
+    reduces the shard-local log-pseudo-likelihood SUM, never an array
+    (reducing an array is the accidental O(C·wire) variant). Collectives
+    inside scan bodies (``forbid_in_loops``) and while bodies are findings:
+    the z-update loop must be collective-free for the paper's zero-
+    communication z-phase claim to hold at pod scale.
+    """
+
+    name = "collective-budget"
+
+    def __init__(
+        self,
+        budget: dict[str, int],
+        scalar_kinds: tuple[str, ...] = ("psum", "pmax", "pmin"),
+        forbid_in_loops: bool = True,
+        require: bool = True,
+    ):
+        super().__init__(require=require)
+        self.budget = dict(budget)
+        self.scalar_kinds = tuple(scalar_kinds)
+        self.forbid_in_loops = forbid_in_loops
+
+    def check(self, ctx: Context) -> list[Finding]:
+        if not self._regions(ctx):
+            return self._require_finding(ctx)
+        findings = []
+        sites = self._sites(ctx)
+        counts = census_counts(sites)
+        for key in sorted(set(counts) | set(self.budget)):
+            found, declared = counts.get(key, 0), self.budget.get(key, 0)
+            if found > declared:
+                findings.append(self._finding(
+                    ctx,
+                    f"{key}: {found} collectives per step exceed the "
+                    f"declared budget of {declared} — every extra "
+                    f"collective multiplies by iterations × devices",
+                    key=key, found=found, budget=declared,
+                ))
+            elif found < declared:
+                findings.append(self._finding(
+                    ctx,
+                    f"{key}: {found} collectives per step, budget declares "
+                    f"{declared} — the pin is stale, re-derive the budget",
+                    key=key, found=found, budget=declared,
+                ))
+        for s in sites:
+            if s.unbounded:
+                findings.append(self._finding(
+                    ctx,
+                    f"{s.key} inside a while body at {s.scope or '/'} — "
+                    f"no static trip count bounds this collective",
+                    key=s.key, scope=s.scope or "/",
+                ))
+            elif self.forbid_in_loops and s.in_loop:
+                findings.append(self._finding(
+                    ctx,
+                    f"{s.key} inside a scan body at {s.scope or '/'} "
+                    f"(×{s.trip_multiplier} per step) — the z-phase must "
+                    f"stay collective-free (brightness is per-datum)",
+                    key=s.key, scope=s.scope or "/",
+                    multiplier=s.trip_multiplier,
+                ))
+            if s.kind in self.scalar_kinds and not s.scalar:
+                findings.append(self._finding(
+                    ctx,
+                    f"{s.key} at {s.scope or '/'} reduces a non-scalar "
+                    f"({s.shard_bytes_in} B per shard) — the θ-update "
+                    f"psums ONE scalar log-likelihood sum per proposal",
+                    key=s.key, scope=s.scope or "/",
+                    bytes_in=s.shard_bytes_in,
+                ))
+        return findings
+
+    def report_metrics(self, ctx: Context) -> dict:
+        sites = self._sites(ctx)
+        if not self._regions(ctx):
+            return {}
+        return {
+            "collective_census": census_counts(sites),
+            "shard_map_regions": len(self._regions(ctx)),
+        }
+
+
+class ReplicationRule(_ShardedRule):
+    """Outputs declared replicated must be provably replicated."""
+
+    name = "replication-consistency"
+
+    def check(self, ctx: Context) -> list[Finding]:
+        regions = self._regions(ctx)
+        if not regions:
+            return self._require_finding(ctx)
+        findings = []
+        for region in regions:
+            for v in replication.check_replication(region):
+                findings.append(self._finding(
+                    ctx, f"[{region.origin}] {v.message()}",
+                    origin=region.origin, out_index=v.out_index,
+                    leaked_axes=list(v.leaked_axes),
+                    declared_axes=list(v.declared_axes),
+                ))
+        return findings
+
+
+class CommBytesRule(_ShardedRule):
+    """Derive the per-device wire-bytes model; pin it; export metrics.
+
+    ``expected_total`` pins the per-step total (exact — the model is
+    integer arithmetic over avals); a mismatch means the program's
+    collective traffic changed without the pin following, or vice versa.
+    The derived model lands in ``Report.metrics`` under
+    ``collective_wire_bytes`` so BENCH_flymc.json records it, and the
+    cross-validation test holds it equal to the compiled program's
+    HLO-parsed wire bytes.
+    """
+
+    name = "comm-bytes"
+
+    def __init__(self, expected_total: int | None = None,
+                 require: bool = True):
+        super().__init__(require=require)
+        self.expected_total = expected_total
+
+    def check(self, ctx: Context) -> list[Finding]:
+        if not self._regions(ctx):
+            return self._require_finding(ctx)
+        findings = []
+        model = wire_mod.wire_model(self._sites(ctx))
+        if model["unbounded_sites"]:
+            findings.append(self._finding(
+                ctx,
+                f"{model['unbounded_sites']} collective site(s) inside "
+                f"while bodies — the wire-bytes total is a lower bound, "
+                f"not a model",
+                unbounded_sites=model["unbounded_sites"],
+            ))
+        if (self.expected_total is not None
+                and int(model["total"]) != int(self.expected_total)):
+            findings.append(self._finding(
+                ctx,
+                f"derived per-device wire bytes {model['total']} != pinned "
+                f"{self.expected_total} — the collective traffic and the "
+                f"recorded model have diverged",
+                derived=int(model["total"]),
+                expected=int(self.expected_total),
+            ))
+        return findings
+
+    def report_metrics(self, ctx: Context) -> dict:
+        if not self._regions(ctx):
+            return {}
+        return {"collective_wire_bytes": wire_mod.wire_model(
+            self._sites(ctx))}
+
+
+class ShardShapeRule(_ShardedRule):
+    """Every sharded axis divides cleanly; optional pinned local shapes."""
+
+    name = "shard-shape"
+
+    def __init__(self, pin_locals: dict[int, dict[int, int]] | None = None,
+                 require: bool = True):
+        super().__init__(require=require)
+        self.pin_locals = dict(pin_locals or {})
+
+    def check(self, ctx: Context) -> list[Finding]:
+        regions = self._regions(ctx)
+        if not regions:
+            return self._require_finding(ctx)
+        findings = []
+        for region in regions:
+            for issue in shapes.check_shapes(region, self.pin_locals):
+                findings.append(self._finding(
+                    ctx, f"[{region.origin}] {issue.message()}",
+                    origin=region.origin, kind=issue.kind,
+                    where=issue.where, index=issue.index, dim=issue.dim,
+                ))
+        return findings
+
+
+def collective_rules(
+    budget: dict[str, int],
+    expected_wire_bytes: int | None = None,
+    pin_locals: dict[int, dict[int, int]] | None = None,
+    forbid_in_loops: bool = True,
+) -> list[Rule]:
+    """The standard four-rule kit a sharded entry point registers with."""
+    return [
+        CollectiveBudgetRule(budget, forbid_in_loops=forbid_in_loops),
+        ReplicationRule(),
+        CommBytesRule(expected_total=expected_wire_bytes),
+        ShardShapeRule(pin_locals=pin_locals),
+    ]

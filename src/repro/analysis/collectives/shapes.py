@@ -1,0 +1,95 @@
+"""Shard-shape soundness: sharded axes must divide cleanly over the mesh.
+
+``shard_map`` itself rejects indivisible axes at trace time, so for traced
+regions these checks guard REGISTRY drift (an entry point re-pinned to a
+new N or mesh without re-deriving the local shapes) and the synthetic /
+NamedSharding-constructed regions tests build directly — where uneven
+shards would mean silent truncation or padding, not an error.
+
+Three findings per sharded dimension:
+
+* **indivisible** — global size % (product of mesh axis sizes) ≠ 0;
+* **zero-local**  — the local shard would be empty (more shards than rows);
+* **local-pin**   — an optionally pinned expected local size (e.g. the
+  per-shard row count a capacity must stay below) no longer matches.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.analysis.collectives.extract import ShardedRegion
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeIssue:
+    """One unsound sharded dimension."""
+
+    kind: str          # "indivisible" | "zero-local" | "local-pin"
+    where: str         # "in" | "out"
+    index: int         # flat operand/result index
+    dim: int
+    global_size: int
+    shards: int        # product of the sharding axes' sizes
+    expected_local: int | None = None
+
+    def message(self) -> str:
+        if self.kind == "indivisible":
+            return (
+                f"{self.where}[{self.index}] dim {self.dim}: global size "
+                f"{self.global_size} is not divisible by {self.shards} "
+                f"shards — uneven shards truncate or pad silently"
+            )
+        if self.kind == "zero-local":
+            return (
+                f"{self.where}[{self.index}] dim {self.dim}: {self.shards} "
+                f"shards of a size-{self.global_size} axis leave empty "
+                f"local shards"
+            )
+        return (
+            f"{self.where}[{self.index}] dim {self.dim}: local shard size "
+            f"{self.global_size // max(self.shards, 1)} != pinned "
+            f"{self.expected_local} — re-derive the per-shard geometry "
+            f"(capacities are sized against it)"
+        )
+
+
+def _check_side(region, avals, names_tuple, where, pin_locals, issues):
+    pins = pin_locals if where == "in" else {}
+    for i, (aval, names) in enumerate(zip(avals, names_tuple)):
+        shape = tuple(getattr(aval, "shape", ()) or ())
+        for dim, axes in sorted(names.items()):
+            if dim >= len(shape):
+                continue
+            shards = region.axis_size(axes)
+            size = int(shape[dim])
+            if size % shards != 0:
+                issues.append(ShapeIssue("indivisible", where, i, dim,
+                                         size, shards))
+                continue
+            if size // shards == 0:
+                issues.append(ShapeIssue("zero-local", where, i, dim,
+                                         size, shards))
+                continue
+            pinned = pins.get(i, {}).get(dim)
+            if pinned is not None and size // shards != int(pinned):
+                issues.append(ShapeIssue("local-pin", where, i, dim, size,
+                                         shards, expected_local=int(pinned)))
+
+
+def check_shapes(
+    region: ShardedRegion,
+    pin_locals: dict[int, dict[int, int]] | None = None,
+) -> list[ShapeIssue]:
+    """Shape issues for one region.
+
+    ``pin_locals`` maps flat INPUT index -> {dim: expected local size}; a
+    drifted pin is a finding (the registry's way of asserting per-shard
+    geometry like "each shard owns N/8 rows ≥ capacity").
+    """
+    issues: list[ShapeIssue] = []
+    _check_side(region, region.global_in_avals, region.in_names, "in",
+                dict(pin_locals or {}), issues)
+    _check_side(region, region.global_out_avals, region.out_names, "out",
+                {}, issues)
+    return issues

@@ -1,0 +1,64 @@
+"""Derived per-device collective wire bytes for a shard_map region.
+
+The model is computed from the census sites' per-shard avals, using the
+same per-collective formulas :func:`repro.launch.hlo_analysis` applies to
+the *compiled* program's HLO text — the two are cross-validated by test
+(``tests/test_collective_analysis.py``), so the static model and the
+post-compile accounting cannot drift apart:
+
+==================  ==================================================
+psum / pmax / pmin  ring all-reduce: 2 · in_bytes
+all_gather          out_bytes − in_bytes  (each device receives the
+                    other shards' contributions)
+psum_scatter        in_bytes − out_bytes  (reduce-scatter)
+all_to_all          in_bytes
+ppermute            in_bytes  (collective-permute)
+pbroadcast          in_bytes
+axis_index          0  (lowered to partition-id: no wire traffic)
+==================  ==================================================
+
+Scan sites are trip-multiplied; while-body sites have no static trip
+count, so they are EXCLUDED from the total and surfaced under
+``unbounded_sites`` — a nonzero count means the total is a lower bound
+and the comm-bytes rule reports it.
+"""
+
+from __future__ import annotations
+
+
+def site_wire_bytes(site) -> int:
+    """Per-device wire bytes for one collective site (single execution)."""
+    if site.kind == "axis_index":
+        return 0
+    if site.kind == "all_gather":
+        return max(site.shard_bytes_out - site.shard_bytes_in, 0)
+    if site.kind == "psum_scatter":
+        return max(site.shard_bytes_in - site.shard_bytes_out, 0)
+    if site.kind in ("psum", "pmax", "pmin"):
+        return 2 * site.shard_bytes_in
+    return site.shard_bytes_in  # all_to_all, ppermute, pbroadcast
+
+
+def wire_model(sites) -> dict:
+    """The per-step wire-bytes model over a list of census sites."""
+    per_kind: dict[str, int] = {}
+    per_axis: dict[str, int] = {}
+    total = 0
+    unbounded = 0
+    for s in sites:
+        b = site_wire_bytes(s)
+        if s.unbounded:
+            unbounded += 1
+            continue
+        b *= s.trip_multiplier
+        total += b
+        per_kind[s.kind] = per_kind.get(s.kind, 0) + b
+        axis_key = ",".join(s.axes) or "<none>"
+        per_axis[axis_key] = per_axis.get(axis_key, 0) + b
+    return {
+        "total": total,
+        "per_kind": per_kind,
+        "per_axis": per_axis,
+        "sites": len(sites),
+        "unbounded_sites": unbounded,
+    }

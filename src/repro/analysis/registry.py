@@ -30,6 +30,11 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.collectives import (
+    CommBytesRule,
+    ReplicationRule,
+    collective_rules,
+)
 from repro.analysis.kernels import kernel_rules
 from repro.analysis.report import Report, Summary
 from repro.analysis.rules import (
@@ -246,24 +251,275 @@ def _serve_run_chunk() -> Report:
     )
 
 
-@entry_point("dist.chain_fleet")
-def _dist_chain_fleet() -> Report:
-    """The chain fleet's sharded step in its operand-data form: even across
-    a mesh, the dataset must be a (replicated) traced operand, not a
-    closure constant baked into every device's executable."""
-    from repro.distributed.flymc_dist import chain_fleet
+# ---------------------------------------------------------------------------
+# sharded entry points: every shard_map program, traced under an
+# AbstractMesh (axis names + sizes, NO physical devices — the sweep
+# verifies 8-way-sharded programs on a 1-device CI host). Each runs the
+# four collective analyses (budget census, replication-consistency,
+# comm-bytes, shard-shape) with its declared per-step budget; the dist
+# step additionally pins the derived per-device wire bytes, which the
+# test suite cross-validates against the compiled program's HLO.
+# ---------------------------------------------------------------------------
 
-    mesh = jax.make_mesh((jax.device_count(),), ("chains",))
-    fleet = chain_fleet(_alg(), mesh)
-    k = jax.device_count()
+_DATA_SHARDS = 8
+
+
+def _dist_mesh():
+    return jax.sharding.AbstractMesh((("data", _DATA_SHARDS),))
+
+
+def _fleet_mesh():
+    return jax.sharding.AbstractMesh((("chains", _DATA_SHARDS),))
+
+
+def _fleet_keys_states(fleet, k):
     keys = jax.eval_shape(lambda: jax.random.split(jax.random.key(0), k))
     states = jax.tree.map(
         lambda l: jax.ShapeDtypeStruct((k,) + l.shape, l.dtype),
         _state_struct(fleet),
     )
+    return keys, states
+
+
+def _fleet():
+    if "fleet" not in _CACHE:
+        from repro.distributed.flymc_dist import chain_fleet
+
+        _CACHE["fleet"] = chain_fleet(_alg(), _fleet_mesh())
+    return _CACHE["fleet"]
+
+
+def _dist_step_fixture():
+    """(step_fn, data/stats/state structs) for the data-sharded chain."""
+    if "dist_step" not in _CACHE:
+        from repro.distributed.flymc_dist import make_dist_flymc
+        from repro.models.bayes_glm import GLMModel
+
+        model = GLMModel.logistic(_data(), prior_scale=2.0, xi=1.5)
+        _, init_fn, step_fn, _ = make_dist_flymc(
+            model.bound, model.log_prior, _dist_mesh(), N,
+            kernel="rwmh", capacity=CAPACITY, cand_capacity=CAPACITY,
+            q_db=0.01,
+        )
+        data_s = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), _data()
+        )
+        stats_s = jax.eval_shape(model.bound.suffstats, data_s)
+        theta_s = jax.ShapeDtypeStruct((D,), jnp.float32)
+        state_s, _ = jax.eval_shape(
+            init_fn, data_s, stats_s, theta_s, _key_struct()
+        )
+        _CACHE["dist_step"] = (step_fn, data_s, stats_s, state_s)
+    return _CACHE["dist_step"]
+
+
+# The dist step's collective contract (see flymc_dist module docstring):
+# 4 scalar psums (θ-proposal, post-z refresh, n_bright, lik_queries) +
+# 1 scalar pmax (overflow) + 1 axis_index (z-key fold, zero wire) — and
+# NOTHING in the z-phase. Wire: 5 scalar ring all-reduces × 2·4 B = 40 B
+# per device per step, cross-validated against compiled HLO by test.
+DIST_STEP_BUDGET = {"psum@data": 4, "pmax@data": 1, "axis_index@data": 1}
+DIST_STEP_WIRE_BYTES = 40
+
+
+@entry_point("dist.step")
+def _dist_step() -> Report:
+    """The data-sharded FlyMC step: one scalar psum per θ-proposal, a
+    collective-free z-phase, and every replicated output proven so."""
+    step_fn, data_s, stats_s, state_s = _dist_step_fixture()
+    rules = _step_rules() + collective_rules(
+        DIST_STEP_BUDGET,
+        expected_wire_bytes=DIST_STEP_WIRE_BYTES,
+        # flat operand 0 is data.x: each of the 8 shards owns N/8 rows
+        # (which the per-shard capacity is sized against)
+        pin_locals={0: {0: N // _DATA_SHARDS}},
+    )
+    return check(
+        step_fn, data_s, stats_s, state_s, rules=rules, name="dist.step",
+    )
+
+
+@entry_point("dist.step.zphase_psum")
+def _dist_step_zphase_psum() -> Report:
+    """Known-bad twin: a naive data-parallel z-phase that psums every
+    candidate decision — the budget census must see the scan-body psum
+    trip-multiplied (×n_local per step), or the detector is blind."""
+    mesh = _dist_mesh()
+    from jax.sharding import PartitionSpec as P
+
+    def naive(x):
+        def body(xs):
+            theta_term = jax.lax.psum(jnp.sum(xs), "data")
+
+            def zstep(carry, xi):
+                # one collective PER DATUM: the O(N) communication the
+                # paper's per-datum brightness exists to avoid
+                return carry + jax.lax.psum(xi, "data"), xi
+
+            z_term, _ = jax.lax.scan(zstep, 0.0, xs)
+            return theta_term + z_term
+
+        return jax.shard_map(
+            body, mesh=mesh, in_specs=(P("data"),), out_specs=P(),
+            check_vma=False,
+        )(x)
+
+    return check(
+        naive, jax.ShapeDtypeStruct((N,), jnp.float32),
+        rules=collective_rules({"psum@data": 1}),
+        name="dist.step.zphase_psum",
+        expect_fail=("collective-budget",),
+    )
+
+
+@entry_point("dist.step.wire_drift")
+def _dist_step_wire_drift() -> Report:
+    """Known-bad twin: the REAL dist step against a drifted wire-bytes pin
+    — proves the comm-bytes model actually constrains the program."""
+    step_fn, data_s, stats_s, state_s = _dist_step_fixture()
+    return check(
+        step_fn, data_s, stats_s, state_s,
+        rules=[CommBytesRule(expected_total=DIST_STEP_WIRE_BYTES + 8)],
+        name="dist.step.wire_drift",
+        expect_fail=("comm-bytes",),
+    )
+
+
+@entry_point("dist.fleet.rep_leak")
+def _dist_fleet_rep_leak() -> Report:
+    """Known-bad twin: a shard-varying value escaping as replicated — the
+    check_vma=False foot-gun (shard 0's value silently wins). This is the
+    bug class the replication rule caught in the real state pspecs (the
+    per-shard bright count was declared PS() before this analysis landed)."""
+    mesh = _dist_mesh()
+    from jax.sharding import PartitionSpec as P
+
+    def leak(x):
+        # per-shard mean returned with out_specs=P(): NOT replicated
+        return jax.shard_map(
+            lambda xs: jnp.mean(xs), mesh=mesh, in_specs=(P("data"),),
+            out_specs=P(), check_vma=False,
+        )(x)
+
+    return check(
+        leak, jax.ShapeDtypeStruct((N,), jnp.float32),
+        rules=[ReplicationRule()],
+        name="dist.fleet.rep_leak",
+        expect_fail=("replication-consistency",),
+    )
+
+
+@entry_point("dist.chain_fleet")
+def _dist_chain_fleet() -> Report:
+    """The chain fleet's sharded step in its operand-data form: even across
+    a mesh, the dataset must be a (replicated) traced operand, not a
+    closure constant baked into every device's executable — and chains are
+    independent, so the budget is ZERO cross-chain collectives."""
+    fleet = _fleet()
+    keys, states = _fleet_keys_states(fleet, _DATA_SHARDS)
+    rules = _step_rules() + collective_rules({}, expected_wire_bytes=0)
     return check(
         fleet.step_chains_data, keys, states, fleet.data, fleet.stats,
-        rules=_step_rules(), name="dist.chain_fleet",
+        rules=rules, name="dist.chain_fleet",
+    )
+
+
+@entry_point("dist.chain_fleet.closure")
+def _dist_chain_fleet_closure() -> Report:
+    """The fleet's closure-data form (step_chains): the other operand form
+    the driver can dispatch. Same zero-collective budget; the closure-
+    constant rule is deliberately absent here — baking data is this form's
+    known trade-off, and dist.chain_fleet pins the operand form instead."""
+    fleet = _fleet()
+    keys, states = _fleet_keys_states(fleet, _DATA_SHARDS)
+    return check(
+        fleet.step_chains, keys, states,
+        rules=collective_rules({}, expected_wire_bytes=0),
+        name="dist.chain_fleet.closure",
+    )
+
+
+@entry_point("dist.collector_fold")
+def _dist_collector_fold() -> Report:
+    """The committed-chunk collector fold shard_mapped with every spec
+    replicated. The dist driver runs collector updates on the replicated
+    (θ, psum'd StepStats) outputs, so the fold must be mesh-safe: zero
+    collectives AND no device-varying computation (no axis_index) — its
+    carries stay replicated at any mesh size, which is what makes streamed
+    diagnostics free at pod scale."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.api import collectors as collectors_lib
+    from repro.api import driver
+
+    colls = {
+        "trace": collectors_lib.FullTrace(),
+        "moments": collectors_lib.OnlineMoments(),
+    }
+    fold = driver.make_collector_fold(colls, multi=True)
+    args = _fold_args(_alg(capacity=CAPACITY), colls)
+    sharded = jax.shard_map(
+        fold, mesh=_dist_mesh(), in_specs=(P(), P(), P()), out_specs=P(),
+        check_vma=False,
+    )
+    return check(
+        sharded, *args,
+        rules=collective_rules({}, expected_wire_bytes=0),
+        name="dist.collector_fold",
+    )
+
+
+@entry_point("serve.fleet_probe")
+def _serve_fleet_probe() -> Report:
+    """A fake-mesh serve placement probe: the GroupEngine's group chunk
+    shard_mapped over a ('lanes', 2) AbstractMesh. Lanes are independent
+    jobs, so the only collective a lane-parallel serve placement needs is
+    ONE scalar pmax per chunk — the shared overflow flag that keeps the
+    grow-and-rerun protocol in lockstep across lane shards. Budget pinned
+    exactly there (16 B wire per chunk); replication proves that flag is
+    the only replicated output."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.data import logistic_data
+    from repro.serve.engine import GroupEngine
+    from repro.serve.job import Job, TerminationPolicy
+
+    if "serve_probe" not in _CACHE:
+        def _job(i):
+            return Job(
+                job_id=f"fleet-probe-{i}", family="logistic",
+                data=logistic_data(jax.random.key(2 + i), n=256, d=D,
+                                   separation=1.5),
+                capacity=32, cand_capacity=32, z_backend="fused",
+                policy=TerminationPolicy(max_samples=64),
+            )
+
+        engine = GroupEngine(_job(0))
+        engine.admit(_job(0))
+        engine.admit(_job(1))
+        _CACHE["serve_probe"] = engine
+    engine = _CACHE["serve_probe"]
+    chunk = engine._build_chunk(cs=4)
+    lanes = engine._lanes
+    row = P(("lanes",))
+
+    def probe(states, keys, data, stats):
+        final, pos, infos, overflow = chunk(states, keys, data, stats)
+        overflow = jax.lax.pmax(
+            jnp.asarray(overflow).astype(jnp.int32), "lanes"
+        ).astype(bool)
+        return final, pos, infos, overflow
+
+    sharded = jax.shard_map(
+        probe, mesh=jax.sharding.AbstractMesh((("lanes", 2),)),
+        in_specs=(row, row, row, row), out_specs=(row, row, row, P()),
+        check_vma=False,
+    )
+    return check(
+        sharded, lanes["states"], lanes["keys"], lanes["data"],
+        lanes["stats"],
+        rules=collective_rules({"pmax@lanes": 1}, expected_wire_bytes=8),
+        name="serve.fleet_probe",
     )
 
 # ---------------------------------------------------------------------------

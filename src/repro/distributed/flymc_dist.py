@@ -19,12 +19,39 @@ Mapping (DESIGN.md §5):
     replicated values and the carries stay replicated — online moments,
     split-R̂, and exact query accounting at pod scale cost zero extra
     collectives and no O(iterations) memory.
+
+The collective contract (statically enforced by
+``repro.analysis.collectives`` — the ``dist.step`` registry entry pins
+these counts exactly; regressions fail the static-analysis CI lane):
+
+===================  ======================================================
+psum × 4 per step    1 θ-proposal (the scalar bright log-L̃ sum — the
+                     paper's "one scalar reduction per proposal"),
+                     1 post-z sampler refresh (same scalar, at the new
+                     bright set), 2 StepStats reductions (n_bright,
+                     lik_queries) so the driver sees global counts
+pmax × 1 per step    the scalar overflow flag — every shard must agree on
+                     capacity growth or the re-run protocol diverges
+axis_index × 1       per-shard z-key fold (zero wire bytes: it lowers to
+                     partition-id) — what makes shard RNG independent
+z-phase              ZERO collectives, including inside the z-update scan
+                     body: brightness is per-datum, so z-moves are
+                     shard-local at any mesh size
+===================  ======================================================
+
+Every ``shard_map`` below passes ``check_vma=False`` (jax's own
+replication checker off — it rewrites the jaxpr and slows tracing), which
+means a ``PS()`` out-spec is TRUSTED, not checked: jax silently installs
+shard 0's value everywhere. The replication-consistency rule in
+``repro.analysis.collectives`` re-proves every replicated output from the
+dataflow instead; per-shard quantities (the bright count ``num``) are
+sharded as length-1 rows so no shard-varying value ever crosses a ``PS()``
+boundary.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -44,16 +71,41 @@ def shard_data(data: GLMData, mesh) -> GLMData:
 
 
 def _state_pspecs(axes):
+    # Replicated leaves (PS()) are values every shard provably computes
+    # identically: θ/lp/grad come out of the psum'd proposal, log_step
+    # adapts on the replicated accept_prob, rng/iteration are threaded
+    # replicated by the driver. Everything per-datum (partition arr/tab,
+    # the δ cache, sampler aux) is row-sharded. The per-shard bright COUNT
+    # is sharded too — as a length-1 row per shard (scalars can't shard),
+    # packed/unpacked at the shard_map boundary by _pack/_unpack: declaring
+    # it PS() would silently broadcast shard 0's count over every shard
+    # under check_vma=False (shards disagree on their bright prefix, so
+    # z-updates and overflow detection would run against the wrong count).
     row = PS(axes)
     return flymc.FlyMCState(
         sampler=samplers.SamplerState(
             theta=PS(), lp=PS(), grad=PS(), aux=row
         ),
-        bright=brightness.BrightState(arr=row, tab=row, num=PS()),
+        bright=brightness.BrightState(arr=row, tab=row, num=row),
         delta_full=row,
         log_step=PS(),
         rng=PS(),
         iteration=PS(),
+    )
+
+
+def _pack(state):
+    """Lift the shard-local scalar bright count to a (1,) row so shard_map
+    can shard it (global shape: one entry per shard)."""
+    return state._replace(
+        bright=state.bright._replace(num=state.bright.num[None])
+    )
+
+
+def _unpack(state):
+    """Drop the (1,) packing back to the scalar the core sampler expects."""
+    return state._replace(
+        bright=state.bright._replace(num=state.bright.num[0])
     )
 
 
@@ -70,7 +122,9 @@ def make_dist_flymc(bound, log_prior, mesh, n_global: int, **spec_kw):
     needs no extra collectives either.
     """
     axes = tuple(mesh.axis_names)
-    n_shards = mesh.devices.size
+    # mesh.size (not mesh.devices.size): works for AbstractMesh too, so the
+    # static-analysis sweep can trace these programs with no devices at all.
+    n_shards = mesh.size
     assert n_global % n_shards == 0
     spec = flymc.FlyMCSpec(
         bound=bound, log_prior=log_prior, axis_names=axes, **spec_kw
@@ -83,6 +137,10 @@ def make_dist_flymc(bound, log_prior, mesh, n_global: int, **spec_kw):
     def _stats_local(data):
         return bounds_lib.psum_stats(bound.suffstats(data), axes)
 
+    # check_vma=False at every call site below: jax's replication checker is
+    # skipped for trace speed, so replicated (PS()) outputs are TRUSTED —
+    # the repro.analysis.collectives replication rule re-proves each one
+    # from the dataflow instead. Here: the stats come out of psum_stats.
     stats_fn = jax.jit(
         jax.shard_map(
             _stats_local, mesh=mesh, in_specs=(data_ps,),
@@ -92,8 +150,13 @@ def make_dist_flymc(bound, log_prior, mesh, n_global: int, **spec_kw):
 
     def _init_local(data, stats, theta0, key):
         state, nb, _ = flymc.init_chain(spec, data, stats, theta0, key)
-        return state, nb
+        # nb is the shard-local initial bright count: psum for the global
+        # (replicated) number; the per-shard count stays in the state.
+        return _pack(state), jax.lax.psum(nb, axes)
 
+    # check_vma=False: replicated outputs are the psum'd nb and the state's
+    # PS() leaves (θ/lp/grad from the replicated init, rng/iteration);
+    # per-shard leaves (incl. the packed bright count) are row-sharded.
     init_fn = jax.jit(
         jax.shard_map(
             _init_local, mesh=mesh,
@@ -103,9 +166,20 @@ def make_dist_flymc(bound, log_prior, mesh, n_global: int, **spec_kw):
         )
     )
 
+    def _step_local(data, stats, state):
+        new_state, stats_out = flymc.flymc_step(
+            spec, data, stats, _unpack(state)
+        )
+        return _pack(new_state), stats_out
+
+    # check_vma=False: the contract in the module docstring is what makes
+    # the PS() outputs sound — θ/lp/grad/accept/log_step derive from the
+    # psum'd proposal, StepStats are psum'd/pmax'd in-step — and the
+    # dist.step entry point in repro.analysis.registry verifies exactly
+    # that (budget: 4 scalar psum + 1 pmax + 1 axis_index, z-phase zero).
     step_fn = jax.jit(
         jax.shard_map(
-            partial(flymc.flymc_step, spec), mesh=mesh,
+            _step_local, mesh=mesh,
             in_specs=(data_ps, stats_ps, state_ps),
             out_specs=(state_ps, stats_out_ps),
             check_vma=False,
@@ -143,7 +217,7 @@ def dist_algorithm(bound, log_prior, mesh, data: GLMData, **spec_kw):
     n_global = data.x.shape[0]
     # Capacities are PER-SHARD: growth must cap at the shard-local row count,
     # not N — bright_buffer slices the shard-local arr inside shard_map.
-    n_local = n_global // mesh.devices.size
+    n_local = n_global // mesh.size
     spec, init_fn, step_fn, stats_fn = make_dist_flymc(
         bound, log_prior, mesh, n_global, **spec_kw
     )
@@ -175,10 +249,14 @@ def dist_algorithm(bound, log_prior, mesh, data: GLMData, **spec_kw):
     # Replicated "any shard's initial bright set exceeds its capacity" flag,
     # so the driver re-initializes at a grown capacity exactly like the
     # single-host chain (init_chain_state leaves the state truncated).
+    # check_vma=False: the single PS() output is sound because the pmax is
+    # what replicates it — each shard contributes its OWN bright count
+    # (num arrives sharded, (1,) per shard), so a shard-local overflow on
+    # any device raises the flag everywhere.
     _overflow_fn = jax.jit(
         jax.shard_map(
             lambda s: jax.lax.pmax(
-                (s.bright.num > spec.capacity).astype(jnp.int32), axes
+                (s.bright.num[0] > spec.capacity).astype(jnp.int32), axes
             ).astype(bool),
             mesh=mesh,
             in_specs=(_state_pspecs(axes),),
@@ -223,6 +301,11 @@ def chain_fleet(alg, mesh):
 
     axes = tuple(mesh.axis_names)
     row = PS(axes)  # leading-axis (chain) sharding, as a pytree prefix
+    # check_vma=False on all three fleet shard_maps: trivially sound — every
+    # in/out spec is chain-sharded (no PS() output exists to mis-replicate)
+    # and the bodies contain ZERO collectives, the budget the
+    # dist.chain_fleet entry point pins (chains are independent; shard_map
+    # here is pure placement).
     step_chains = jax.shard_map(
         alg.batched_step(), mesh=mesh, in_specs=(row, row),
         out_specs=(row, row), check_vma=False,
@@ -299,9 +382,13 @@ def run_dist_chain(
 
 def _resize_dist(spec, state, mesh):
     axes = tuple(mesh.axis_names)
+    # check_vma=False: resize is shard-local (pure buffer growth) — every
+    # replicated leaf passes through untouched, per-shard leaves stay
+    # sharded (the packed bright count crosses the boundary as a row).
     fn = jax.jit(
         jax.shard_map(
-            partial(flymc.resize_state, spec), mesh=mesh,
+            lambda s: _pack(flymc.resize_state(spec, _unpack(s))),
+            mesh=mesh,
             in_specs=(_state_pspecs(axes),), out_specs=_state_pspecs(axes),
             check_vma=False,
         )

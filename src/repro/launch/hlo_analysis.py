@@ -239,6 +239,7 @@ def analyze_hlo(text: str, pod_axis_size: int = 1):
     comps = _split_computations(text)
     stats: dict[str, CompStats] = {}
     warnings: list[str] = []
+    trip_fallbacks: list[str] = []
 
     for name, lines in comps.items():
         st = CompStats()
@@ -330,6 +331,11 @@ def analyze_hlo(text: str, pod_axis_size: int = 1):
                 if trip is None:
                     trip = _trip_count(comps.get(cond_name, []))
                 if trip is None:
+                    # structured, un-capped record of every fallback: a
+                    # trip=1 guess UNDERCOUNTS everything inside the loop,
+                    # so consumers must be able to see it happened even
+                    # when the warnings list is truncated
+                    trip_fallbacks.append(callee)
                     warnings.append(f"unparsed trip count for {callee}")
                     trip = 1
                 mult = trip
@@ -368,5 +374,44 @@ def analyze_hlo(text: str, pod_axis_size: int = 1):
         "collective_bytes_bf16corr": dict(cbc),
         "collective_total_bf16corr": float(sum(cbc.values())),
         "warnings": warnings[:10],
+        "trip_count_fallbacks": trip_fallbacks,
+        "trip_counts_ok": not trip_fallbacks,
         "n_computations": len(comps),
     }
+
+
+def collective_wire_bytes(compiled_text: str, axis_sizes=None):
+    """Per-device collective wire bytes of a compiled program's HLO text.
+
+    The counterpart of the STATIC model in
+    :mod:`repro.analysis.collectives.wire_bytes`: both use the same
+    size-independent payload formulas (all-reduce = 2x payload,
+    all-gather = out - in, ...), so on a program whose trip counts all
+    parse, ``total`` here must EQUAL the static model's total exactly —
+    the cross-validation the collective-analysis tests pin.
+
+    ``axis_sizes`` (mapping mesh axis name -> size, or a bare int device
+    count) additionally derives ``ring_total``: the 2x model rescaled by
+    the ring factor (k-1)/k for k total devices — the tighter estimate
+    for actual ring all-reduces, kept separate so the headline number
+    stays comparable across both models.
+    """
+    rec = analyze_hlo(compiled_text)
+    out = {
+        "per_kind": dict(rec["collective_bytes"]),
+        "total": rec["collective_total"],
+        "total_bf16corr": rec["collective_total_bf16corr"],
+        "trip_counts_ok": rec["trip_counts_ok"],
+        "trip_count_fallbacks": rec["trip_count_fallbacks"],
+        "warnings": rec["warnings"],
+    }
+    if axis_sizes:
+        if isinstance(axis_sizes, dict):
+            k = 1
+            for v in axis_sizes.values():
+                k *= int(v)
+        else:
+            k = int(axis_sizes)
+        out["ring_total"] = rec["collective_total"] * (k - 1) / k if k else 0.0
+        out["n_devices"] = k
+    return out

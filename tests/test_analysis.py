@@ -422,8 +422,15 @@ def test_registry_sweep_is_green_and_covers_the_hot_paths():
     by_name = {r.entry_point: r for r in summary.reports}
     assert by_name["step.jnp"].rule_status("cost-model") == "xfail"
     for expected in ("step.fused", "driver.chunk", "driver.fold",
-                     "serve.run_chunk", "dist.chain_fleet"):
+                     "serve.run_chunk", "dist.step", "dist.chain_fleet",
+                     "dist.chain_fleet.closure", "dist.collector_fold",
+                     "serve.fleet_probe"):
         assert expected in by_name
+    # the collective twins are first-class expected-fails in the sweep
+    for twin, rule in (("dist.step.zphase_psum", "collective-budget"),
+                       ("dist.step.wire_drift", "comm-bytes"),
+                       ("dist.fleet.rep_leak", "replication-consistency")):
+        assert by_name[twin].rule_status(rule) == "xfail"
     record = summary.to_record()
     assert record["ok"] and "step.fused" in record["entry_points"]
     assert "max_rng_size" in record["entry_points"]["step.fused"]

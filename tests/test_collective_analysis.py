@@ -1,0 +1,498 @@
+"""SPMD collective verification (repro.analysis.collectives).
+
+Every analysis is tested from both sides — a known-good sharded program
+it must pass and a known-bad fixture it must catch. The known-bad
+fixtures encode the bug classes this verifier exists for:
+
+  collective-budget        a naive z-phase that psums once PER DATUM
+                           inside the scan (the O(N) communication the
+                           paper's brightness variables eliminate)
+  replication-consistency  a per-shard value escaping through
+                           out_specs=P() under check_vma=False — shard
+                           0's value silently overwrites the rest (the
+                           real ``BrightState.num`` pspec bug)
+  comm-bytes               a wire-bytes pin drifting from the program
+  shard-shape              indivisible axes / stale per-shard geometry
+
+The dist step's contract is pinned END-TO-END here: the static census
+must equal the declared budget, the derived wire bytes must equal the
+registry pin, and (in a subprocess with 8 forced host devices) the
+compiled program's HLO-parsed wire bytes must equal the static model
+EXACTLY.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import analysis
+from repro.analysis import registry
+from repro.analysis.collectives.census import census, census_counts
+from repro.analysis.collectives.extract import (
+    ShardedRegion,
+    find_sharded_regions,
+)
+from repro.analysis.collectives.replication import (
+    check_replication,
+    output_variance,
+)
+from repro.analysis.collectives.rules import (
+    CommBytesRule,
+    ReplicationRule,
+    ShardShapeRule,
+    collective_rules,
+)
+from repro.analysis.collectives.shapes import check_shapes
+from repro.analysis.collectives.wire_bytes import wire_model
+
+jax.config.update("jax_platform_name", "cpu")
+
+MESH = jax.sharding.AbstractMesh((("data", 8),))
+X64 = jax.ShapeDtypeStruct((64,), jnp.float32)  # 8 rows per shard
+
+
+def _shard(f, in_specs=(P("data"),), out_specs=P()):
+    return jax.shard_map(f, mesh=MESH, in_specs=in_specs,
+                         out_specs=out_specs, check_vma=False)
+
+
+def _regions(fn, *args):
+    return find_sharded_regions(jax.make_jaxpr(fn)(*args))
+
+
+def _psum_mean(x):
+    """The canonical good program: one scalar psum, replicated out."""
+    return _shard(lambda xs: jax.lax.psum(jnp.sum(xs), "data"))(x)
+
+
+# ---------------------------------------------------------------------------
+# extraction + census
+# ---------------------------------------------------------------------------
+
+
+def test_extract_finds_region_under_abstract_mesh():
+    (region,) = _regions(_psum_mean, X64)
+    assert region.mesh_axes == {"data": 8}
+    assert region.in_names == ({0: ("data",)},)
+    assert region.out_names == ({},)
+    assert region.global_in_avals[0].shape == (64,)
+
+
+def test_census_scalar_psum():
+    (region,) = _regions(_psum_mean, X64)
+    (site,) = census(region)
+    assert site.key == "psum@data" and site.scalar
+    assert not site.in_loop and not site.unbounded
+    assert census_counts([site]) == {"psum@data": 1}
+
+
+def test_census_trip_multiplies_scan_collectives():
+    def f(x):
+        def body(xs):
+            def step(c, xi):
+                return c + jax.lax.psum(xi, "data"), xi
+
+            out, _ = jax.lax.scan(step, 0.0, xs)
+            return out
+
+        return _shard(body)(x)
+
+    (region,) = _regions(f, X64)
+    (site,) = census(region)
+    assert site.in_loop and site.trip_multiplier == 8  # 8 local rows
+    assert census_counts([site]) == {"psum@data": 8}
+
+
+def test_census_while_collective_is_unbounded():
+    def f(x):
+        def body(xs):
+            def cond(c):
+                return c[0] < 10.0
+
+            def step(c):
+                return (c[0] + jax.lax.psum(jnp.sum(xs), "data"), c[1])
+
+            return jax.lax.while_loop(cond, step, (0.0, jnp.sum(xs)))[0]
+
+        return _shard(body)(x)
+
+    (region,) = _regions(f, X64)
+    (site,) = census(region)
+    assert site.unbounded
+    model = wire_model([site])
+    assert model["unbounded_sites"] == 1 and model["total"] == 0
+
+
+# ---------------------------------------------------------------------------
+# collective-budget rule
+# ---------------------------------------------------------------------------
+
+
+def test_budget_rule_passes_declared_program():
+    report = analysis.check(
+        _psum_mean, X64, rules=collective_rules({"psum@data": 1}),
+        name="good",
+    )
+    assert report.ok, "\n".join(map(str, report.findings))
+
+
+def test_budget_rule_catches_zphase_scan_psum():
+    """The O(N)-communication z-phase: one psum per candidate datum."""
+
+    def naive(x):
+        def body(xs):
+            def step(c, xi):
+                return c + jax.lax.psum(xi, "data"), xi
+
+            out, _ = jax.lax.scan(step, 0.0, xs)
+            return out + jax.lax.psum(jnp.sum(xs), "data")
+
+        return _shard(body)(x)
+
+    report = analysis.check(
+        naive, X64, rules=collective_rules({"psum@data": 1}), name="bad",
+    )
+    msgs = " ".join(f.message for f in report.findings)
+    assert not report.ok
+    assert "exceed the declared budget" in msgs
+    assert "inside a scan body" in msgs
+
+
+def test_budget_rule_catches_stale_pin():
+    report = analysis.check(
+        _psum_mean, X64, rules=collective_rules({"psum@data": 2}),
+        name="stale",
+    )
+    assert not report.ok
+    assert any("stale" in f.message for f in report.findings)
+
+
+def test_budget_rule_catches_nonscalar_reduction():
+    def f(x):
+        return _shard(lambda xs: jax.lax.psum(xs, "data"),
+                      out_specs=P())(x)
+
+    report = analysis.check(
+        f, X64, rules=collective_rules({"psum@data": 1}), name="wide",
+    )
+    assert not report.ok
+    assert any("non-scalar" in f.message for f in report.findings)
+
+
+def test_collective_rules_require_a_sharded_region():
+    """A de-meshed entry point must FAIL, not silently pass (the sweep
+    going blind to the sharded program is itself a regression)."""
+    report = analysis.check(
+        jnp.sum, X64, rules=collective_rules({}), name="demeshed",
+    )
+    assert not report.ok
+    assert any("no shard_map region" in f.message
+               for f in report.findings)
+
+
+def test_collective_xpass_fails_the_report():
+    report = analysis.check(
+        _psum_mean, X64, rules=collective_rules({"psum@data": 1}),
+        name="twin", expect_fail=("collective-budget",),
+    )
+    assert not report.ok
+    assert report.rule_status("collective-budget") == "xpass"
+
+
+# ---------------------------------------------------------------------------
+# replication-consistency rule
+# ---------------------------------------------------------------------------
+
+
+def test_replication_passes_psum_output():
+    (region,) = _regions(_psum_mean, X64)
+    assert check_replication(region) == []
+    (varies,) = output_variance(region)
+    assert varies == frozenset()
+
+
+def test_replication_catches_varying_as_replicated():
+    """The ``BrightState.num`` bug class: a per-shard count declared
+    replicated; with check_vma=False shard 0's value wins silently."""
+
+    def leak(x):
+        return _shard(lambda xs: jnp.sum((xs > 0).astype(jnp.int32)))(x)
+
+    (region,) = _regions(leak, X64)
+    (v,) = check_replication(region)
+    assert v.leaked_axes == ("data",) and v.declared_axes == ()
+    assert "shard 0" in v.message()
+
+    report = analysis.check(leak, X64, rules=[ReplicationRule()],
+                            name="leak")
+    assert not report.ok
+
+
+def test_replication_axis_index_introduces_variance():
+    def f(x):
+        return _shard(
+            lambda xs: jnp.sum(xs) * 0 + jax.lax.axis_index("data")
+        )(x)
+
+    (region,) = _regions(f, X64)
+    assert len(check_replication(region)) == 1
+
+
+def test_replication_scan_carry_fixpoint():
+    def folded(x):  # carry absorbs sharded xs: varies
+        def body(xs):
+            def step(c, xi):
+                return c + xi, xi
+
+            return jax.lax.scan(step, 0.0, xs)[0]
+
+        return _shard(body)(x)
+
+    def cleared(x):  # psum inside the body re-replicates the carry
+        def body(xs):
+            def step(c, xi):
+                return c + jax.lax.psum(xi, "data"), xi
+
+            return jax.lax.scan(step, 0.0, xs)[0]
+
+        return _shard(body)(x)
+
+    (bad,) = _regions(folded, X64)
+    assert len(check_replication(bad)) == 1
+    (good,) = _regions(cleared, X64)
+    assert check_replication(good) == []
+
+
+# ---------------------------------------------------------------------------
+# comm-bytes rule
+# ---------------------------------------------------------------------------
+
+
+def test_wire_formulas_psum_and_all_gather():
+    def f(x):
+        def body(xs):
+            s = jax.lax.psum(jnp.sum(xs), "data")  # 2 * 4 B
+            g = jax.lax.all_gather(xs, "data")     # out - in = 256 - 32
+            return s + jnp.sum(g)
+
+        return _shard(body)(x)
+
+    (region,) = _regions(f, X64)
+    model = wire_model(census(region))
+    assert model["per_kind"]["psum"] == 8
+    assert model["per_kind"]["all_gather"] == 224
+    assert model["total"] == 232
+
+
+def test_comm_bytes_rule_catches_drifted_pin():
+    good = analysis.check(_psum_mean, X64,
+                          rules=[CommBytesRule(expected_total=8)],
+                          name="pinned")
+    assert good.ok
+    bad = analysis.check(_psum_mean, X64,
+                         rules=[CommBytesRule(expected_total=16)],
+                         name="drift")
+    assert not bad.ok
+    assert any("diverged" in f.message for f in bad.findings)
+
+
+# ---------------------------------------------------------------------------
+# shard-shape rule
+# ---------------------------------------------------------------------------
+
+
+def _fake_region(in_shapes, in_names):
+    return ShardedRegion(
+        origin="synthetic", mesh_axes={"data": 8},
+        in_names=tuple(in_names), out_names=(),
+        jaxpr=None, check_rep=False,
+        global_in_avals=tuple(
+            jax.ShapeDtypeStruct(s, jnp.float32) for s in in_shapes
+        ),
+        global_out_avals=(),
+    )
+
+
+def test_shard_shapes_indivisible_and_zero_local():
+    region = _fake_region([(12,), (0,)],
+                          [{0: ("data",)}, {0: ("data",)}])
+    issues = check_shapes(region)
+    kinds = sorted(i.kind for i in issues)
+    assert kinds == ["indivisible", "zero-local"]
+    assert "not divisible" in issues[0].message()
+
+
+def test_shard_shapes_local_pin_drift():
+    (region,) = _regions(_psum_mean, X64)
+    assert check_shapes(region, {0: {0: 8}}) == []
+    (issue,) = check_shapes(region, {0: {0: 16}})
+    assert issue.kind == "local-pin"
+
+    report = analysis.check(
+        _psum_mean, X64, rules=[ShardShapeRule(pin_locals={0: {0: 16}})],
+        name="geometry",
+    )
+    assert not report.ok
+
+
+# ---------------------------------------------------------------------------
+# the real sharded programs, pinned through the same API
+# ---------------------------------------------------------------------------
+
+
+def test_dist_step_collective_contract():
+    """dist.step: exactly one scalar psum per θ-proposal (4 psums per
+    full step incl. refresh + stats), one pmax, one axis_index, ZERO
+    collectives in the z-update scan, 40 wire bytes — and every
+    replicated output proven replicated."""
+    step_fn, data_s, stats_s, state_s = registry._dist_step_fixture()
+    closed = jax.make_jaxpr(step_fn)(data_s, stats_s, state_s)
+    regions = find_sharded_regions(closed)
+    assert regions, "dist step lost its shard_map region"
+    sites = [s for r in regions for s in census(r)]
+    assert census_counts(sites) == registry.DIST_STEP_BUDGET
+    assert not any(s.in_loop or s.unbounded for s in sites)
+    assert all(s.scalar for s in sites
+               if s.kind in ("psum", "pmax", "pmin"))
+    assert wire_model(sites)["total"] == registry.DIST_STEP_WIRE_BYTES
+    for r in regions:
+        assert check_replication(r) == [], r.origin
+
+
+def test_chain_fleet_has_zero_cross_chain_collectives():
+    """Chains are independent: the fleet step must not communicate."""
+    fleet = registry._fleet()
+    keys, states = registry._fleet_keys_states(fleet, 8)
+    closed = jax.make_jaxpr(fleet.step_chains_data)(
+        keys, states, fleet.data, fleet.stats
+    )
+    regions = find_sharded_regions(closed)
+    assert regions
+    assert [s for r in regions for s in census(r)] == []
+    for r in regions:
+        assert check_replication(r) == [], r.origin
+
+
+def test_sweep_covers_every_sharded_surface():
+    names = [
+        "dist.step", "dist.step.zphase_psum", "dist.step.wire_drift",
+        "dist.fleet.rep_leak", "dist.chain_fleet",
+        "dist.chain_fleet.closure", "dist.collector_fold",
+        "serve.fleet_probe",
+    ]
+    for n in names:
+        assert n in registry.REGISTRY, n
+    summary = registry.run_registry(names)
+    assert summary.ok, summary.format_table()
+    by_name = {r.entry_point: r for r in summary.reports}
+    assert (by_name["dist.step.zphase_psum"]
+            .rule_status("collective-budget") == "xfail")
+    assert (by_name["dist.step.wire_drift"]
+            .rule_status("comm-bytes") == "xfail")
+    assert (by_name["dist.fleet.rep_leak"]
+            .rule_status("replication-consistency") == "xfail")
+    record = summary.to_record()
+    step = record["entry_points"]["dist.step"]
+    assert step["collective_census"] == registry.DIST_STEP_BUDGET
+    assert (step["collective_wire_bytes"]["total"]
+            == registry.DIST_STEP_WIRE_BYTES)
+    fleet = record["entry_points"]["dist.chain_fleet"]
+    assert fleet["collective_census"] == {}
+    assert fleet["collective_wire_bytes"]["total"] == 0
+
+
+# ---------------------------------------------------------------------------
+# HLO cross-validation: static model == compiled program, exactly
+# ---------------------------------------------------------------------------
+
+_FALLBACK_HLO = textwrap.dedent("""\
+    ENTRY %main (p0: f32[8]) -> f32[8] {
+      %p0 = f32[8]{0} parameter(0)
+      ROOT %w = f32[8]{0} while(%p0), condition=%cond, body=%body
+    }
+
+    %body (b: f32[8]) -> f32[8] {
+      %bp = f32[8]{0} parameter(0)
+      ROOT %ar = f32[8]{0} all-reduce(%bp), replica_groups={}
+    }
+
+    %cond (c: f32[8]) -> pred[] {
+      %cp = f32[8]{0} parameter(0)
+      ROOT %done = pred[] custom-call(%cp)
+    }
+    """)
+
+
+def test_hlo_trip_fallback_is_a_structured_flag():
+    from repro.launch.hlo_analysis import analyze_hlo, collective_wire_bytes
+
+    rec = analyze_hlo(_FALLBACK_HLO)
+    assert rec["trip_counts_ok"] is False
+    assert rec["trip_count_fallbacks"] == ["body"]
+    assert rec["collective_total"] == 64.0  # 2 * 32 B, trip guessed as 1
+
+    wire = collective_wire_bytes(_FALLBACK_HLO, axis_sizes={"data": 8})
+    assert wire["total"] == 64.0 and not wire["trip_counts_ok"]
+    assert wire["ring_total"] == 64.0 * 7 / 8 and wire["n_devices"] == 8
+
+
+_CROSSVAL_CHILD = textwrap.dedent("""\
+    import json, os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax
+    jax.config.update("jax_platform_name", "cpu")
+    import jax.numpy as jnp
+    from repro.analysis.collectives.census import census
+    from repro.analysis.collectives.extract import find_sharded_regions
+    from repro.analysis.collectives.wire_bytes import wire_model
+    from repro.data import logistic_data
+    from repro.distributed.flymc_dist import make_dist_flymc
+    from repro.launch.hlo_analysis import collective_wire_bytes
+    from repro.models.bayes_glm import GLMModel
+
+    data = logistic_data(jax.random.key(0), n=1024, d=4, separation=1.5)
+    model = GLMModel.logistic(data, prior_scale=2.0, xi=1.5)
+    mesh = jax.make_mesh((8,), ("data",))
+    _, init_fn, step_fn, _ = make_dist_flymc(
+        model.bound, model.log_prior, mesh, 1024,
+        kernel="rwmh", capacity=64, cand_capacity=64, q_db=0.01,
+    )
+    stats = model.bound.suffstats(data)
+    theta = jnp.zeros((4,), jnp.float32)
+    state, _ = jax.jit(init_fn)(data, stats, theta, jax.random.key(1))
+
+    closed = jax.make_jaxpr(step_fn)(data, stats, state)
+    sites = [s for r in find_sharded_regions(closed) for s in census(r)]
+    static = wire_model(sites)
+
+    text = jax.jit(step_fn).lower(data, stats, state).compile().as_text()
+    hlo = collective_wire_bytes(text, axis_sizes={"data": 8})
+    print(json.dumps({"static": static["total"], "hlo": hlo["total"],
+                      "trip_ok": hlo["trip_counts_ok"]}))
+    """)
+
+
+def test_static_wire_model_matches_compiled_hlo_exactly():
+    """The acceptance pin: the aval-derived model and the HLO-parsed
+    accounting of the COMPILED 8-device dist step agree to the byte.
+    Subprocess because XLA_FLAGS must be set before jax initializes."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in ["src", env.get("PYTHONPATH", "")] if p
+    )
+    out = subprocess.run(
+        [sys.executable, "-c", _CROSSVAL_CHILD],
+        capture_output=True, text=True, timeout=540, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    assert rec["trip_ok"], rec
+    assert rec["static"] == registry.DIST_STEP_WIRE_BYTES
+    assert rec["hlo"] == rec["static"], rec

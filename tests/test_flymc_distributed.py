@@ -139,6 +139,52 @@ def test_chain_fleet_matches_single_device_batched(problem):
     )
 
 
+def test_collective_budgets_via_census_api(mesh, problem):
+    """The communication claims the docstrings above lean on ("no
+    collectives in the z-phase", "zero cross-chain collectives"), pinned
+    through the static census API (repro.analysis.collectives) instead
+    of ad-hoc jaxpr-string grepping: the data-sharded step spends its
+    exact declared budget — one scalar psum per θ-proposal, nothing
+    inside the z-update scan — and the chain fleet communicates not at
+    all."""
+    from repro import api
+    from repro.analysis import registry
+    from repro.analysis.collectives.census import census, census_counts
+    from repro.analysis.collectives.extract import find_sharded_regions
+    from repro.analysis.collectives.replication import check_replication
+    from repro.distributed.flymc_dist import chain_fleet, make_dist_flymc
+
+    tuned, _, _ = problem
+    _, init_fn, step_fn, _ = make_dist_flymc(
+        tuned.bound, tuned.log_prior, mesh, N,
+        kernel="rwmh", capacity=64, cand_capacity=64, q_db=0.05,
+    )
+    stats = tuned.bound.suffstats(tuned.data)
+    state, _ = jax.jit(init_fn)(
+        tuned.data, stats, jnp.zeros(D), jax.random.key(5)
+    )
+    closed = jax.make_jaxpr(step_fn)(tuned.data, stats, state)
+    regions = find_sharded_regions(closed)
+    sites = [s for r in regions for s in census(r)]
+    assert census_counts(sites) == registry.DIST_STEP_BUDGET
+    assert not any(s.in_loop or s.unbounded for s in sites)
+    for r in regions:  # every replicated output provably replicated
+        assert check_replication(r) == [], r.origin
+
+    alg = api.firefly(
+        tuned, kernel="rwmh", capacity=64, cand_capacity=64, q_db=0.05,
+        step_size=0.1,
+    )
+    fleet = chain_fleet(alg, jax.make_mesh((8,), ("chains",)))
+    keys, states = registry._fleet_keys_states(fleet, 8)
+    closed = jax.make_jaxpr(fleet.step_chains_data)(
+        keys, states, fleet.data, fleet.stats
+    )
+    regions = find_sharded_regions(closed)
+    assert regions
+    assert [s for r in regions for s in census(r)] == []
+
+
 def test_distributed_collectors_match_offline(mesh, problem):
     """Streaming collectors under shard_map: carries are replicated (θ and
     the psum'd StepStats come out of the sharded step replicated), so the
