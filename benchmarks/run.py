@@ -118,6 +118,19 @@ def main() -> None:
         f"bitwise={vrec['fixed_length_results_bitwise_equal']}"
     )
 
+    # --- fault tolerance: durable checkpoints, supervision, chaos ----------
+    from benchmarks.faults import main as bench_faults
+
+    frec = bench_faults(quick=args.quick)
+    rows.append(
+        f"faults/save,{frec['checkpoint']['durable_save_s'] * 1e6:.0f},"
+        f"verify_s={frec['checkpoint']['verify_s']};"
+        f"restore_s={frec['checkpoint']['verified_restore_s']};"
+        f"supervision_overhead={frec['supervision']['overhead_frac']};"
+        f"chaos_restarts={frec['chaos']['restarts']};"
+        f"chaos_survivors={frec['chaos']['survivors']}"
+    )
+
     # --- static analysis: cost fingerprints of every hot-path jit ----------
     from benchmarks.static_analysis import main as bench_static
 

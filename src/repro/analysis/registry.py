@@ -504,15 +504,19 @@ def _serve_fleet_probe() -> Report:
     row = P(("lanes",))
 
     def probe(states, keys, data, stats):
-        final, pos, infos, overflow = chunk(states, keys, data, stats)
+        final, pos, infos, overflow, healthy = chunk(states, keys, data,
+                                                     stats)
         overflow = jax.lax.pmax(
             jnp.asarray(overflow).astype(jnp.int32), "lanes"
         ).astype(bool)
-        return final, pos, infos, overflow
+        # The health sentinel is per-lane by construction — it stays
+        # row-sharded, proving quarantine needs ZERO collectives.
+        return final, pos, infos, overflow, healthy
 
     sharded = jax.shard_map(
         probe, mesh=jax.sharding.AbstractMesh((("lanes", 2),)),
-        in_specs=(row, row, row, row), out_specs=(row, row, row, P()),
+        in_specs=(row, row, row, row),
+        out_specs=(row, row, row, P(), row),
         check_vma=False,
     )
     return check(

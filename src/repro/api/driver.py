@@ -87,6 +87,40 @@ def cached_jit(key, build):
     return _cached(key, build)
 
 
+class NonFiniteError(RuntimeError):
+    """A chunk produced non-finite chain state (NaN/Inf in θ, log-joint, or
+    the δ cache). Raised at the chunk boundary BEFORE the fold, so the
+    collector carries still hold the last healthy committed prefix.
+
+    Non-finiteness must be trapped, not tolerated: a NaN'd proposal
+    log-ratio compares False, so a poisoned chain can keep "running" —
+    always rejecting, θ frozen or silently diverged from its law — while
+    every summary statistic still looks plausible. The serve engines run
+    the same predicate per lane and quarantine just the sick lane
+    (:meth:`repro.serve.engine.GroupEngine.run_chunk`).
+    """
+
+
+def finite_lanes(arrays, lane_axis: int = 0):
+    """Per-lane all-finite mask over floating-point ``arrays`` sharing a
+    common ``lane_axis``: a lane is healthy iff every float entry of every
+    array is finite. Non-float arrays are ignored (counters, flags, int
+    z-partitions cannot go NaN). Returns a bool vector over the lane axis,
+    or None if no array is floating-point. Pure jnp — usable inside jit
+    (the serve chunk computes it on-device so health rides the existing
+    per-chunk host sync instead of adding one)."""
+    ok = None
+    for a in arrays:
+        if not jnp.issubdtype(a.dtype, jnp.floating):
+            continue
+        lanes = jnp.moveaxis(a, lane_axis, 0)
+        this = jnp.all(
+            jnp.isfinite(lanes.reshape(lanes.shape[0], -1)), axis=1
+        )
+        ok = this if ok is None else (ok & this)
+    return ok
+
+
 class Trace(NamedTuple):
     """Everything one `sample()` call produced.
 
@@ -328,6 +362,7 @@ def sample(
     init_state=None,
     collectors: dict | None = None,
     on_chunk=None,
+    health_check: bool = False,
 ) -> Trace:
     """Run ``num_samples`` iterations of ``alg`` on device; return a Trace.
 
@@ -367,6 +402,13 @@ def sample(
     at that boundary (convergence-based termination): the Trace then holds
     only the committed samples (``theta``/``stats`` sliced on the default
     path; streaming collectors simply saw fewer updates).
+
+    ``health_check`` raises :class:`NonFiniteError` at any chunk boundary
+    whose outputs or post-chunk state contain NaN/Inf, BEFORE the fold — the
+    collector carries then hold exactly the last healthy committed prefix.
+    Off by default (it costs one extra device round-trip per chunk); the
+    serve engines run the per-lane equivalent unconditionally because a
+    multi-tenant group must contain one tenant's poison.
     """
     if num_samples <= 0:
         raise ValueError("num_samples must be positive")
@@ -554,6 +596,23 @@ def sample(
                 prev, chain_keys, jnp.int32(start_offset + start),
                 *scan_operands(alg)
             )
+        if health_check:
+            floats = [pos] + [
+                l for l in jax.tree.leaves((infos, final))
+                if jnp.issubdtype(l.dtype, jnp.floating)
+            ]
+            ok = _cached(
+                ("health", len(floats)),
+                lambda: jax.jit(lambda ls: jnp.all(
+                    jnp.stack([jnp.all(jnp.isfinite(l)) for l in ls])
+                )),
+            )(floats)
+            if not bool(jax.device_get(ok)):
+                raise NonFiniteError(
+                    f"non-finite chain state in iterations "
+                    f"[{start_offset + start}, {start_offset + start + cs}); "
+                    f"committed prefix of {start} samples is intact"
+                )
         # Only a committed (non-overflowed) chunk reaches the collectors, so
         # capacity re-runs never need a carry rollback; the donated carry is
         # updated in place on backends with input-output aliasing.

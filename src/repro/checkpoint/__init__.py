@@ -1,5 +1,5 @@
-"""Fault-tolerant checkpointing: atomic, async, elastic-reshard on restore."""
+"""Fault-tolerant checkpointing: atomic, durable, verified, elastic."""
 
-from repro.checkpoint.checkpointer import Checkpointer
+from repro.checkpoint.checkpointer import CheckpointCorruptError, Checkpointer
 
-__all__ = ["Checkpointer"]
+__all__ = ["CheckpointCorruptError", "Checkpointer"]

@@ -1,25 +1,37 @@
-"""Atomic, async, elastic checkpointing (DESIGN.md §5 fault tolerance).
+"""Atomic, async, elastic, *verified* checkpointing (DESIGN.md §5).
 
 Layout per step::
 
-    <dir>/step_000123.tmp/        # written fully, then atomically renamed
-        manifest.json             # step, tree structure, shapes, dtypes
+    <dir>/step_000123.tmp/        # written fully, fsync'd, then renamed
+        manifest.json             # step, tree structure, shapes, dtypes, crcs
         leaf_000.npy ...          # one file per leaf (logical, full arrays)
     <dir>/step_000123/
+    <dir>/step_000123.old/        # transient: previous copy parked during a
+                                  # same-step re-save; swept at startup
 
 Properties:
   * **Atomic** — a checkpoint is visible only after the rename; a crash
     mid-write leaves a ``.tmp`` that restore ignores and cleanup removes.
+  * **Durable** — every leaf file and the manifest are fsync'd, then the tmp
+    directory and finally the parent directory, so a "committed" step
+    survives power loss (write-back caches cannot reorder it away).
+  * **Verified** — the manifest records a CRC-32 per leaf; :meth:`verify`
+    re-reads a step and reports every problem (torn manifest, missing or
+    truncated leaf, bit-flipped bytes), :meth:`restore` refuses corrupt
+    steps (:class:`CheckpointCorruptError`) and — when no step is pinned —
+    falls back to the newest *intact* step rather than silently loading
+    damaged state.
   * **Async** — ``save`` snapshots device arrays to host then hands the disk
     write to a background thread; ``wait()`` joins before the next save (one
-    outstanding write, bounded memory).
+    outstanding write, bounded memory) and re-raises any write failure.
   * **Elastic** — leaves are stored as *logical* (unsharded) arrays with
     their tree paths; ``restore(shardings=...)`` device_puts onto ANY mesh,
-    so a job restarted on a different pod count resumes bit-exact (the
-    multi-pod dry-run meshes and the 8-device test mesh round-trip).
-  * On a real multi-host pod each host writes only its addressable shards
-    (shard-per-host manifest); this single-controller implementation keeps
-    the same on-disk contract with one host owning all shards.
+    so a job restarted on a different pod count resumes bit-exact.
+
+Crash consistency is proven, not assumed: ``_kill_hook`` lets the chaos
+harness (``repro.testing.chaos``) abort the write at named points between
+tmp-write and rename; the recovery sweep + verify/fallback must then land
+every survivor on an intact step (pinned in ``tests/test_faults.py``).
 
 Works for any pytree of arrays: train (params, AdamWState) and FlyMC chain
 state (θ, z-partition, δ cache, rng) checkpoints identically — restart
@@ -28,21 +40,45 @@ resumes the exact Markov chain.
 
 from __future__ import annotations
 
+import io
 import json
 import os
 import shutil
 import threading
+import zlib
 from pathlib import Path
-from typing import Any
+from typing import Any, Callable
 
 import jax
 import numpy as np
 from jax.numpy import asarray as jnp_asarray
 
 
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint failed integrity verification.
+
+    ``problems`` lists the findings per step (missing/torn manifest, missing
+    or truncated leaf files, CRC mismatches). Raised by ``restore`` when an
+    explicitly requested step is corrupt, or when *every* on-disk step is.
+    """
+
+    def __init__(self, message: str, problems: list[str]):
+        super().__init__(message + (": " + "; ".join(problems) if problems else ""))
+        self.problems = problems
+
+
 def _flatten_with_paths(tree) -> list[tuple[str, Any]]:
     flat, _ = jax.tree_util.tree_flatten_with_path(tree)
     return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
+
+
+def _fsync_path(p: Path):
+    """fsync a file or directory by path (O_RDONLY works for both on Linux)."""
+    fd = os.open(p, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
 
 
 class Checkpointer:
@@ -51,25 +87,53 @@ class Checkpointer:
         """``keep_last`` (alias ``keep``): retain the newest N completed
         checkpoints, GC'ing older ones after every save; 0 disables GC (keep
         everything). An always-on service cannot grow disk without bound, so
-        startup also sweeps stale ``step_*.tmp`` dirs — debris a crash
-        mid-write leaves behind that restore already ignores but that would
-        otherwise accumulate forever."""
+        startup also sweeps crash debris: stale ``step_*.tmp`` dirs, and
+        half-finished same-step re-saves (a ``step_*.old`` parking dir with
+        no final dir is rolled back to the final name — the previous intact
+        checkpoint wins over a tmp of unknown provenance)."""
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep = keep if keep_last is None else keep_last
         self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
+        # Chaos seam: called with a named point during the write sequence;
+        # raising from it simulates a crash at exactly that point.
+        self._kill_hook: Callable[[str], None] | None = None
+        # Steps skipped as corrupt by the most recent fallback scan.
+        self.last_skipped: list[int] = []
         self._sweep_tmp()
 
     def _sweep_tmp(self):
-        for p in self.dir.iterdir():
-            if p.is_dir() and p.name.startswith("step_") and p.name.endswith(".tmp"):
+        for p in sorted(self.dir.iterdir()):
+            if not p.is_dir() or not p.name.startswith("step_"):
+                continue
+            if p.name.endswith(".old"):
+                final = self.dir / p.name[:-4]
+                if final.exists():
+                    # Promote completed; the parked copy is redundant.
+                    shutil.rmtree(p, ignore_errors=True)
+                else:
+                    # Crashed between parking and promote: roll the previous
+                    # intact checkpoint back into place.
+                    os.rename(p, final)
+            elif p.name.endswith(".tmp"):
                 shutil.rmtree(p, ignore_errors=True)
+
+    def _kill(self, point: str):
+        if self._kill_hook is not None:
+            self._kill_hook(point)
 
     # ------------------------------------------------------------------ save
 
     def save(self, step: int, tree, extra_metadata: dict | None = None,
              blocking: bool = False):
-        """Snapshot to host memory, then write+rename on a worker thread."""
+        """Snapshot to host memory, then write+fsync+rename on a worker
+        thread. Write order (kill points in brackets): [begin] leaf files
+        fsync'd one by one [leaves_written], manifest fsync'd
+        [manifest_written], tmp dir fsync'd [pre_rename], any existing final
+        parked to ``.old`` [parked], tmp renamed to final and the parent dir
+        fsync'd [renamed], parking dir removed, GC. A crash at any point
+        leaves either the old step or the new one fully intact."""
         self.wait()
         leaves = _flatten_with_paths(tree)
         host, is_key = [], []
@@ -97,32 +161,131 @@ class Checkpointer:
         def write():
             tmp = self.dir / f"step_{step:08d}.tmp"
             final = self.dir / f"step_{step:08d}"
+            old = self.dir / f"step_{step:08d}.old"
+            self._kill("begin")
             if tmp.exists():
                 shutil.rmtree(tmp)
             tmp.mkdir(parents=True)
             for i, (_, a) in enumerate(host):
-                np.save(tmp / f"leaf_{i:04d}.npy", a)
-            (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+                fpath = tmp / f"leaf_{i:04d}.npy"
+                with open(fpath, "wb") as f:
+                    np.save(f, a)
+                    f.flush()
+                    os.fsync(f.fileno())
+                # Checksum the FILE bytes (header included), read back after
+                # the fsync: any later single-bit flip anywhere in the file
+                # — npy magic, header padding, or array data — fails verify.
+                manifest["leaves"][i]["crc32"] = zlib.crc32(
+                    fpath.read_bytes()
+                )
+            self._kill("leaves_written")
+            with open(tmp / "manifest.json", "w") as f:
+                f.write(json.dumps(manifest, indent=1))
+                f.flush()
+                os.fsync(f.fileno())
+            self._kill("manifest_written")
+            _fsync_path(tmp)
+            self._kill("pre_rename")
             if final.exists():
-                shutil.rmtree(final)
+                if old.exists():
+                    shutil.rmtree(old)
+                os.rename(final, old)
+                self._kill("parked")
             os.rename(tmp, final)
+            _fsync_path(self.dir)
+            self._kill("renamed")
+            if old.exists():
+                shutil.rmtree(old, ignore_errors=True)
             self._gc()
 
         if blocking:
             write()
         else:
-            self._thread = threading.Thread(target=write, daemon=True)
+            def runner():
+                try:
+                    write()
+                except BaseException as e:  # surfaced by the next wait()
+                    self._error = e
+
+            self._thread = threading.Thread(target=runner, daemon=True)
             self._thread.start()
 
     def wait(self):
+        """Join any in-flight write; re-raise its failure instead of letting
+        a broken save masquerade as committed."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            e, self._error = self._error, None
+            raise e
 
     def _gc(self):
         steps = sorted(self.all_steps())
         for s in steps[: -self.keep] if self.keep else []:
             shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    # ---------------------------------------------------------------- verify
+
+    def verify(self, step: int) -> list[str]:
+        """Integrity-check one checkpoint; return a list of problems (empty
+        means intact). Catches torn/unparseable manifests, missing leaf
+        files, truncated arrays (np.load fails or shape differs), and any
+        bit-flip (per-leaf CRC-32). Manifests written before checksums were
+        recorded verify structurally only."""
+        cdir = self.dir / f"step_{step:08d}"
+        if not cdir.is_dir():
+            return [f"step {step}: directory missing"]
+        problems: list[str] = []
+        try:
+            manifest = json.loads((cdir / "manifest.json").read_text())
+        except FileNotFoundError:
+            return [f"step {step}: manifest.json missing"]
+        except (json.JSONDecodeError, UnicodeDecodeError) as e:
+            return [f"step {step}: manifest unreadable ({e})"]
+        if manifest.get("step") != step:
+            problems.append(
+                f"step {step}: manifest claims step {manifest.get('step')}"
+            )
+        for meta in manifest.get("leaves", []):
+            fpath = cdir / meta["file"]
+            try:
+                raw = fpath.read_bytes()
+            except FileNotFoundError:
+                problems.append(f"step {step}: {meta['file']} missing")
+                continue
+            want = meta.get("crc32")
+            if want is not None and zlib.crc32(raw) != want:
+                problems.append(
+                    f"step {step}: {meta['file']} ({meta['path']}) crc32 "
+                    f"{zlib.crc32(raw):#010x} != manifest {want:#010x}"
+                )
+                continue
+            try:
+                arr = np.load(io.BytesIO(raw))
+            except Exception as e:
+                problems.append(f"step {step}: {meta['file']} unreadable ({e})")
+                continue
+            if list(arr.shape) != list(meta["shape"]):
+                problems.append(
+                    f"step {step}: {meta['file']} shape {list(arr.shape)} "
+                    f"!= manifest {meta['shape']}"
+                )
+        return problems
+
+    def latest_intact_step(self) -> int | None:
+        """Newest step that passes :meth:`verify`; corrupt steps skipped on
+        the way down are recorded in ``self.last_skipped`` (newest first) so
+        callers can surface the fallback instead of hiding it."""
+        self.wait()
+        skipped: list[int] = []
+        for s in sorted(self.all_steps(), reverse=True):
+            if not self.verify(s):
+                self.last_skipped = skipped
+                return s
+            skipped.append(s)
+        self.last_skipped = skipped
+        return None
 
     # --------------------------------------------------------------- restore
 
@@ -140,32 +303,65 @@ class Checkpointer:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
-    def manifest(self, step: int | None = None) -> dict:
-        """Parsed manifest.json of a checkpoint (latest by default).
+    def manifest(self, step: int | None = None, verify: bool = True) -> dict:
+        """Parsed manifest.json of a checkpoint (latest *intact* by default).
 
         Lets a caller read ``extra`` metadata — e.g. the serve layer's job
         registry — *before* it can build the restore target tree, which is
-        exactly the bootstrapping order a service restart needs.
+        exactly the bootstrapping order a service restart needs. With
+        ``verify`` (default), an unspecified step resolves through
+        :meth:`latest_intact_step`, so the manifest a restart plans from is
+        the manifest restore will actually load.
         """
         self.wait()
         if step is None:
-            step = self.latest_step()
+            if verify:
+                step = self.latest_intact_step()
+                if step is None and self.all_steps():
+                    raise CheckpointCorruptError(
+                        f"no intact checkpoint under {self.dir}",
+                        [p for s in self.all_steps() for p in self.verify(s)],
+                    )
+            else:
+                step = self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {self.dir}")
         return json.loads(
             (self.dir / f"step_{step:08d}" / "manifest.json").read_text()
         )
 
-    def restore(self, target_tree, step: int | None = None, shardings=None):
+    def restore(self, target_tree, step: int | None = None, shardings=None,
+                verify: bool = True):
         """Restore into the structure of ``target_tree``.
 
         ``shardings``: optional pytree (matching target) of jax.sharding
         objects — the elastic path: arrays are placed onto the *new* mesh
         regardless of the mesh they were saved from.
+
+        ``verify`` (default True): an explicitly requested corrupt step
+        raises :class:`CheckpointCorruptError`; with ``step=None`` the
+        newest *intact* step is loaded instead (skipped corrupt steps land
+        in ``self.last_skipped``), and if every step is corrupt the restore
+        refuses rather than silently loading damaged state.
         """
         self.wait()
+        self.last_skipped = []
         if step is None:
-            step = self.latest_step()
+            if verify:
+                step = self.latest_intact_step()
+                if step is None and self.all_steps():
+                    raise CheckpointCorruptError(
+                        f"no intact checkpoint under {self.dir}",
+                        [p for s in self.all_steps() for p in self.verify(s)],
+                    )
+            else:
+                step = self.latest_step()
+        elif verify:
+            problems = self.verify(step)
+            if problems:
+                raise CheckpointCorruptError(
+                    f"checkpoint step {step} is corrupt", problems
+                )
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {self.dir}")
         cdir = self.dir / f"step_{step:08d}"
@@ -183,7 +379,15 @@ class Checkpointer:
             if key not in by_path:
                 raise KeyError(f"checkpoint missing leaf {key}")
             meta = by_path[key]
-            arr = np.load(cdir / meta["file"])
+            raw = (cdir / meta["file"]).read_bytes()
+            want = meta.get("crc32")
+            if verify and want is not None and zlib.crc32(raw) != want:
+                raise CheckpointCorruptError(
+                    f"checkpoint step {step} is corrupt",
+                    [f"step {step}: {meta['file']} ({key}) crc32 "
+                     f"{zlib.crc32(raw):#010x} != manifest {want:#010x}"],
+                )
+            arr = np.load(io.BytesIO(raw))
             if meta.get("prng_key"):
                 restored = jax.random.wrap_key_data(jnp_asarray(arr))
                 out.append(restored)

@@ -61,9 +61,13 @@ def plan_chain_slots(n_devices: int, slots_per_device: int = 8) -> int:
     checkpoints, shrinks every group to the surviving budget, and repacks —
     the chain-level analogue of :func:`plan_mesh` absorbing device loss
     into the data axes.
+
+    ``n_devices=0`` is a legal degenerate case — total device loss plans a
+    zero budget, under which the service suspends every job cleanly and
+    waits for capacity — so only a negative count is a caller bug.
     """
-    if n_devices < 1:
-        raise ValueError(f"need at least one device, got {n_devices}")
+    if n_devices < 0:
+        raise ValueError(f"device count cannot be negative, got {n_devices}")
     return n_devices * slots_per_device
 
 

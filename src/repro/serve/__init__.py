@@ -20,6 +20,7 @@ produces, regardless of packing, neighbors, re-packs, or restore — see
 """
 
 from repro.serve.engine import GroupEngine
+from repro.serve.faults import FaultEvent, RetryPolicy
 from repro.serve.job import (
     Job,
     TerminationPolicy,
@@ -32,11 +33,13 @@ from repro.serve.scheduler import Scheduler
 from repro.serve.service import Service
 
 __all__ = [
+    "FaultEvent",
     "GroupEngine",
     "Job",
     "JobHandle",
     "JobResult",
     "JobStatus",
+    "RetryPolicy",
     "Scheduler",
     "Service",
     "StreamUpdate",

@@ -142,6 +142,7 @@ class GroupEngine:
         self._members: list[str] = []  # lane order == membership order
         self._jobs: dict[str, job_lib.Job] = {}
         self._lanes: dict | None = None  # the lane pytrees, padded to bucket
+        self._quarantined: list[str] = []  # sentinel hits, pending eviction
 
     # ------------------------------------------------------------ geometry
 
@@ -392,7 +393,24 @@ class GroupEngine:
             fin, pos, infos = self._map_lanes(
                 per_lane, (states_raw, key_rows, data, stats)
             )
-            return fin, pos, infos, jnp.any(infos.overflow)
+            # Numerical-health sentinel, per lane. θ/log-joint alone are not
+            # enough: a NaN'd dataset makes every proposal log-ratio compare
+            # False — the lane keeps "running" with finite θ while its
+            # trajectory silently leaves its law — so the δ cache, sampler
+            # log-prob and the lane's own float data leaves are checked too.
+            # Poison is caught at the very next boundary and the chunk is
+            # never folded for that lane (quarantine in run_chunk).
+            healthy = driver.finite_lanes(
+                [pos, infos.joint_lp, fin.delta_full, fin.sampler.lp,
+                 fin.sampler.theta]
+                + [l for l in jax.tree.leaves(data)
+                   if jnp.issubdtype(l.dtype, jnp.floating)]
+            )
+            # A poisoned lane must not drive capacity growth either: NaN
+            # comparisons can assert overflow forever, and growth is a
+            # group-wide re-run. Only healthy lanes' overflow counts.
+            overflow = jnp.any(infos.overflow & healthy[:, None, None])
+            return fin, pos, infos, overflow, healthy
 
         return jax.jit(chunk)
 
@@ -429,7 +447,25 @@ class GroupEngine:
         """Advance every lane ``chunk_size`` steps and fold the committed
         outputs (masked at ``max_samples``). Returns the number of
         overflow re-runs (0 on the happy path) — the scheduler's
-        congestion signal."""
+        congestion signal.
+
+        Transactional at the host level: the lane trees are reassigned only
+        after the chunk committed, so a raise anywhere in here leaves the
+        engine at the previous boundary and the supervised service path can
+        simply re-run the chunk (identical keys → bitwise the same chunk).
+
+        **Quarantine.** Lanes the chunk sentinel marks unhealthy are NOT
+        folded and NOT advanced: the masked fold is fed saturated counts for
+        them (its ``active`` select then passes their carries through
+        bitwise — the same mechanism that protects pad lanes — which also
+        sidesteps the carry donation: the blend happens inside the fold's
+        output, never by re-reading a donated buffer), their counts and
+        states are restored from the pre-chunk values, and their job_ids
+        land in :meth:`take_quarantined` for the service to evict. Healthy
+        neighbors commit this chunk exactly as if the sick lane had never
+        been admitted — lane compute is lane-local under the ``map``
+        backend, so nothing of a neighbor's trajectory ever depended on it.
+        """
         if self._lanes is None:
             return 0
         cs = int(chunk_size)
@@ -440,10 +476,12 @@ class GroupEngine:
                              self.capacity, self.cand_capacity, bucket, cs)
         scan = driver.cached_jit(cache_key(), lambda: self._build_chunk(cs))
         prev = lanes["states"]
-        final, pos, infos, overflow = scan(
+        final, pos, infos, overflow, healthy = scan(
             prev, lanes["keys"], lanes["data"], lanes["stats"]
         )
-        while bool(jax.device_get(overflow)):  # the chunk's one host sync
+        # The chunk's one host sync fetches overflow and lane health together.
+        over, ok = jax.device_get((overflow, healthy))
+        while bool(over):
             reruns += 1
             if self.capacity >= self._n and self.cand_capacity >= self._n:
                 raise RuntimeError(
@@ -457,18 +495,46 @@ class GroupEngine:
             prev = self._resize_states(prev)
             scan = driver.cached_jit(cache_key(),
                                      lambda: self._build_chunk(cs))
-            final, pos, infos, overflow = scan(
+            final, pos, infos, overflow, healthy = scan(
                 prev, lanes["keys"], lanes["data"], lanes["stats"]
             )
+            over, ok = jax.device_get((overflow, healthy))
         fold = driver.cached_jit(
             ("serve_fold", self.group_key, self.lane_backend),
             self._build_fold,
         )
-        lanes["carries"], lanes["counts"] = fold(
-            lanes["carries"], lanes["counts"], pos, infos
-        )
-        lanes["states"] = final
+        sick = [self._members[i] for i in range(len(self._members))
+                if not bool(ok[i])]
+        if not sick:
+            new_carries, new_counts = fold(
+                lanes["carries"], lanes["counts"], pos, infos
+            )
+            lanes["carries"], lanes["counts"] = new_carries, new_counts
+            lanes["states"] = final
+        else:
+            lane_ok = jnp.asarray(ok)
+            old_counts = lanes["counts"]
+            counts_in = jnp.where(
+                lane_ok, old_counts, jnp.int32(self.max_samples)
+            )
+            new_carries, folded_counts = fold(
+                lanes["carries"], counts_in, pos, infos
+            )
+            blend = lambda new, old: jnp.where(
+                lane_ok.reshape((-1,) + (1,) * (new.ndim - 1)), new, old
+            )
+            lanes["carries"] = new_carries
+            lanes["counts"] = jnp.where(lane_ok, folded_counts, old_counts)
+            lanes["states"] = jax.tree.map(blend, final, prev)
+            self._quarantined.extend(sick)
         return reruns
+
+    def take_quarantined(self) -> list[str]:
+        """Job ids quarantined by the last chunk's health sentinel (their
+        lanes hold the pre-chunk committed state); clears the list. The
+        service evicts and retires them as FAILED at this boundary."""
+        out, self._quarantined = self._quarantined, []
+        return out
 
     # ------------------------------------------------------------- readouts
 

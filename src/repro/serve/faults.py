@@ -1,0 +1,107 @@
+"""Fault taxonomy and structured fault records for the sampling service.
+
+The serve stack's whole pitch is *exactness*, so its fault story cannot be
+"retry and hope": every recovery path must provably leave surviving chains
+bitwise on their fault-free trajectories. The repo's chunk/capacity
+invariance pins make that cheap — a chunk is re-runnable from its committed
+boundary with identical keys (they derive from the states' iteration
+counters), so exact replay IS the recovery primitive. This module defines
+the shared vocabulary:
+
+=====================  ====================================================
+kind                   meaning / response
+=====================  ====================================================
+``nonfinite``          a lane's θ / log-joint / δ-cache / dataset went
+                       non-finite — the per-chunk health sentinel
+                       quarantines THAT job lane (pre-chunk state restored,
+                       poisoned chunk never folded); neighbors untouched
+``chunk_error``        a group chunk raised — retried from the last
+                       committed boundary under :class:`RetryPolicy`
+                       (exact by chunk invariance)
+``group_failed``       retries exhausted — the group's jobs retire FAILED
+                       with their committed (clean) prefixes
+``straggler``          a group's chunk wall-time EWMA exceeds the fleet
+                       median × threshold (:class:`repro.launch.elastic.
+                       StragglerMonitor`)
+``device_loss``        the elastic shrink ran (checkpoint → shrink budget →
+                       suspend newest-first → repack)
+``checkpoint_fallback``  restore skipped one or more corrupt/torn steps and
+                       fell back to the newest intact checkpoint
+=====================  ====================================================
+
+:class:`FaultEvent` records stream through the service's existing update
+channel (``Service.step`` returns them interleaved with ``StreamUpdate``\\ s,
+``Service.run``'s ``on_update`` sees both) and accumulate on
+``Service.faults`` for post-hoc inspection.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+# The closed set of fault kinds the service emits (the chaos harness in
+# repro.testing.chaos injects the matching failures).
+FAULT_KINDS = (
+    "nonfinite",
+    "chunk_error",
+    "group_failed",
+    "straggler",
+    "device_loss",
+    "checkpoint_fallback",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One detected fault and the service's response to it.
+
+    ``step`` is the service step counter at detection time; ``job_id`` names
+    the affected job when the fault is job-scoped (quarantine), ``group``
+    labels the batching group when it is group-scoped (chunk errors,
+    stragglers). ``detail`` carries kind-specific structured fields (error
+    reprs, retry attempt numbers, skipped checkpoint steps, ...).
+    """
+
+    kind: str
+    step: int
+    job_id: str | None = None
+    group: str | None = None
+    detail: dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded retry-and-backoff for failed group chunks.
+
+    A failed chunk is re-run from the last committed boundary — per-lane
+    keys derive from the states' iteration counters, so a retry is bitwise
+    the trajectory an un-faulted run would have produced (the repo's chunk
+    invariance contract, not an approximation). ``max_retries`` bounds the
+    re-runs per chunk; ``backoff_s`` sleeps ``backoff_s * multiplier**(k-1)``
+    before retry ``k`` (0 disables sleeping — tests and the chaos suite).
+    """
+
+    max_retries: int = 2
+    backoff_s: float = 0.05
+    multiplier: float = 2.0
+
+    def __post_init__(self):
+        if self.max_retries < 0:
+            raise ValueError("max_retries must be >= 0")
+        if self.backoff_s < 0:
+            raise ValueError("backoff_s must be >= 0")
+
+    def delay(self, attempt: int) -> float:
+        """Seconds to back off before retry number ``attempt`` (1-based)."""
+        return self.backoff_s * self.multiplier ** (attempt - 1)
+
+
+def group_label(key: tuple) -> str:
+    """A short human-readable label for a batching-group key (fault events
+    and straggler accounting want a stable name, not a 14-tuple)."""
+    fam, n, d, k = key[0][0], key[1], key[2], key[3]
+    return f"{fam}-n{n}-d{d}-K{k}"

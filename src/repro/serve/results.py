@@ -22,6 +22,7 @@ class JobStatus(enum.Enum):
     SUSPENDED = "suspended"  # evicted for capacity (device loss); will repack
     DONE = "done"
     CANCELLED = "cancelled"
+    FAILED = "failed"        # quarantined (non-finite lane) or retries exhausted
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,9 +47,14 @@ class StreamUpdate:
 class JobResult:
     """A retired job. ``results`` = finalized ``{name: collector result}``,
     bitwise the solo run's ``Trace.results``. ``reason`` ∈
-    {"max_samples", "converged", "cancelled"}; ``committed`` counts folded
-    samples (== ``policy.max_samples`` unless converged/cancelled early —
-    convergence stops FOLDING at the next boundary, it never unfolds)."""
+    {"max_samples", "converged", "cancelled", "quarantined", "failed"};
+    ``committed`` counts folded samples (== ``policy.max_samples`` unless
+    stopped early — convergence stops FOLDING at the next boundary, it never
+    unfolds). A "quarantined" job tripped the numerical-health sentinel
+    (NaN/Inf in its lane); a "failed" job's group exhausted its chunk
+    retries. Both hold the last CLEAN committed prefix — the poisoned or
+    failed chunk was never folded, so even a faulted job's results are
+    bitwise a prefix of its fault-free solo run."""
 
     job_id: str
     results: dict

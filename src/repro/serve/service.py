@@ -38,20 +38,39 @@ keys derive from the checkpointed iteration counters (pinned in tests).
 checkpoint, shrink the slot budget to the surviving devices
 (``plan_chain_slots``), suspend newest-first until occupancy fits, repack.
 Suspended jobs hold their lanes host-side and outrank the queue for freed
-slots; nothing loses committed work.
+slots; nothing loses committed work. Shrinking to ZERO devices is legal:
+every job suspends cleanly and waits for capacity to return.
+
+**Fault supervision** (see :mod:`repro.serve.faults` for the taxonomy).
+Every group chunk runs supervised: an exception re-runs the chunk from the
+last committed boundary under a bounded :class:`~repro.serve.faults.
+RetryPolicy` — exact, not approximate, because ``GroupEngine.run_chunk`` is
+transactional and per-iteration keys derive from the states' iteration
+counters (a retried chunk IS the chunk, bitwise). Exhausted retries retire
+the group's jobs as FAILED with their clean committed prefixes. Lanes the
+engines' numerical-health sentinel quarantines are evicted here and retired
+as FAILED (reason "quarantined") — their neighbors never notice. Chunk wall
+times feed a :class:`repro.launch.elastic.StragglerMonitor` per group;
+passing ``straggler_threshold`` escalates flagged groups to
+:class:`~repro.serve.faults.FaultEvent` records. All fault events stream
+through the existing update channel — :meth:`step` returns them interleaved
+with the ``StreamUpdate``\\ s — and accumulate on ``Service.faults``.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import jax
 import numpy as np
 
 from repro.api import collectors as collectors_lib
 from repro.launch import elastic
+from repro.serve import faults as faults_lib
 from repro.serve import job as job_lib
 from repro.serve.engine import GroupEngine
+from repro.serve.faults import FaultEvent, RetryPolicy
 from repro.serve.results import JobHandle, JobResult, JobStatus, StreamUpdate
 from repro.serve.scheduler import Scheduler
 
@@ -107,7 +126,15 @@ def _finalize_lane_with(colls: dict, lane: dict) -> dict:
 class Service:
     def __init__(self, slot_budget: int | None = None, chunk_size: int = 64,
                  lane_backend: str = "map", checkpointer=None,
-                 checkpoint_every: int | None = None):
+                 checkpoint_every: int | None = None,
+                 retry: RetryPolicy | None = None,
+                 straggler_threshold: float | None = None):
+        """``retry`` bounds the per-chunk retry-and-backoff (default
+        :class:`RetryPolicy`()). ``straggler_threshold`` opts into straggler
+        escalation: chunk wall times are always recorded per group, but a
+        ``FaultEvent`` fires only when a group's EWMA exceeds the fleet
+        median by this factor — wall time is noisy, so escalation must be a
+        deliberate choice, not a default source of stream chatter."""
         if slot_budget is None:
             slot_budget = elastic.plan_chain_slots(len(jax.devices()))
         if chunk_size < 1:
@@ -118,6 +145,18 @@ class Service:
         self.checkpoint_every = checkpoint_every
         if checkpoint_every is not None and checkpointer is None:
             raise ValueError("checkpoint_every needs a checkpointer")
+        self.retry = retry if retry is not None else RetryPolicy()
+        self.straggler_threshold = straggler_threshold
+        self.faults: list[FaultEvent] = []  # every event ever emitted
+        self.monitor = elastic.StragglerMonitor(
+            threshold=(straggler_threshold if straggler_threshold is not None
+                       else 1.5)
+        )
+        self._flagged: set[str] = set()  # groups already escalated
+        self.restored_from_step = None   # set by Service.restore
+        # Chaos/test seams: the wall clock and the backoff sleep.
+        self._clock = time.monotonic
+        self._sleep = time.sleep
         self._jobs: dict[str, job_lib.Job] = {}
         self._status: dict[str, JobStatus] = {}
         self._results: dict[str, JobResult] = {}
@@ -160,7 +199,7 @@ class Service:
         if st is JobStatus.SUSPENDED:
             _, lane, _ = self.scheduler.suspended[job_id]
             return int(jax.device_get(lane["counts"][0]))
-        if st in (JobStatus.DONE, JobStatus.CANCELLED):
+        if st in (JobStatus.DONE, JobStatus.CANCELLED, JobStatus.FAILED):
             return self._results[job_id].committed
         return 0
 
@@ -211,9 +250,12 @@ class Service:
             job_id=job_id, results=results, committed=committed,
             reason=reason,
         )
-        self._status[job_id] = (
-            JobStatus.CANCELLED if reason == "cancelled" else JobStatus.DONE
-        )
+        if reason == "cancelled":
+            self._status[job_id] = JobStatus.CANCELLED
+        elif reason in ("quarantined", "failed"):
+            self._status[job_id] = JobStatus.FAILED
+        else:
+            self._status[job_id] = JobStatus.DONE
 
     # ------------------------------------------------------------ scheduling
 
@@ -240,16 +282,94 @@ class Service:
             ok = ok and (total >= p.min_ess)
         return ("converged" if ok else None), peeks
 
-    def step(self) -> list[StreamUpdate]:
-        """One service round: admit → chunk every group → check termination
-        → (maybe) checkpoint. Returns this boundary's stream updates."""
+    def _fault(self, kind: str, **kw) -> FaultEvent:
+        ev = FaultEvent(kind=kind, step=self._step_count, **kw)
+        self.faults.append(ev)
+        return ev
+
+    def _supervised_chunk(self, eng: GroupEngine, label: str,
+                          updates: list) -> bool:
+        """Run one group chunk under the retry policy. A retry re-enters
+        from the last committed boundary (``run_chunk`` is transactional)
+        and replays the identical chunk bitwise — per-lane keys derive from
+        the states' iteration counters, not from the attempt count. Returns
+        False when retries are exhausted."""
+        attempt = 0
+        while True:
+            t0 = self._clock()
+            try:
+                eng.run_chunk(self.chunk_size)
+            except Exception as e:
+                attempt += 1
+                retrying = attempt <= self.retry.max_retries
+                updates.append(self._fault(
+                    "chunk_error", group=label,
+                    detail={"error": repr(e), "attempt": attempt,
+                            "retrying": retrying},
+                ))
+                if not retrying:
+                    return False
+                if self.retry.backoff_s:
+                    self._sleep(self.retry.delay(attempt))
+                continue
+            self.monitor.record(label, self._clock() - t0)
+            return True
+
+    def _fail_group(self, eng: GroupEngine, label: str, updates: list):
+        """Retries exhausted: retire every member FAILED with its clean
+        committed prefix (the failing chunk never committed). Retiring —
+        rather than suspending — is what bounds the blast radius: a
+        suspended job would be re-admitted next step and a persistent fault
+        would loop forever."""
+        members = list(eng.job_ids)
+        updates.append(self._fault(
+            "group_failed", group=label,
+            detail={"jobs": members, "retries": self.retry.max_retries},
+        ))
+        for job_id in members:
+            committed = eng.committed(job_id)
+            _, lane = self.scheduler.evict(job_id)
+            self._retire(job_id, eng.finalize_lane(lane), committed,
+                         "failed")
+            updates.append(StreamUpdate(
+                job_id=job_id, committed=committed, peeks={},
+                done=True, reason="failed",
+            ))
+
+    def step(self) -> list:
+        """One service round: admit → chunk every group (supervised) →
+        quarantine sweep → check termination → straggler check → (maybe)
+        checkpoint. Returns this boundary's stream updates, interleaved
+        with any :class:`FaultEvent` records (the fault stream rides the
+        same channel; ``isinstance(u, StreamUpdate)`` separates them)."""
         for job_id in self.scheduler.admit_pending():
             self._status[job_id] = JobStatus.RUNNING
         updates = []
         for eng in list(self.scheduler.engines.values()):
-            eng.run_chunk(self.chunk_size)
+            label = faults_lib.group_label(eng.group_key)
+            if not self._supervised_chunk(eng, label, updates):
+                self._fail_group(eng, label, updates)
+                continue
             for job_id in eng.job_ids:
                 self._chunks[job_id] += 1
+            # Quarantine sweep: the sentinel already rolled the sick lanes
+            # back to their pre-chunk committed state; evict them before
+            # the termination pass so a poisoned lane can neither "finish"
+            # nor be peeked at.
+            for job_id in eng.take_quarantined():
+                committed = eng.committed(job_id)
+                _, lane = self.scheduler.evict(job_id)
+                self._retire(job_id, eng.finalize_lane(lane), committed,
+                             "quarantined")
+                updates.append(self._fault(
+                    "nonfinite", job_id=job_id, group=label,
+                    detail={"response": "lane quarantined",
+                            "committed": committed},
+                ))
+                updates.append(StreamUpdate(
+                    job_id=job_id, committed=committed, peeks={},
+                    done=True, reason="quarantined",
+                ))
             for job_id in list(eng.job_ids):
                 job = self._jobs[job_id]
                 committed = eng.committed(job_id)
@@ -265,6 +385,16 @@ class Service:
                     job_id=job_id, committed=committed, peeks=peeks,
                     done=reason is not None, reason=reason,
                 ))
+        if self.straggler_threshold is not None:
+            lagging = set(self.monitor.stragglers())
+            for label in sorted(lagging - self._flagged):
+                updates.append(self._fault(
+                    "straggler", group=label,
+                    detail={"ewma_s": self.monitor.ewma[label],
+                            "threshold": self.monitor.threshold},
+                ))
+            # A group that catches back up may be flagged again later.
+            self._flagged = lagging
         self._step_count += 1
         if (self.checkpoint_every
                 and self._step_count % self.checkpoint_every == 0
@@ -274,7 +404,8 @@ class Service:
 
     def run(self, on_update=None, max_steps: int | None = None) -> dict:
         """Step until every submitted job retires; returns
-        ``{job_id: JobResult}``. ``on_update`` sees every StreamUpdate."""
+        ``{job_id: JobResult}``. ``on_update`` sees every StreamUpdate and
+        every FaultEvent, in boundary order."""
         steps = 0
         while self.active():
             if max_steps is not None and steps >= max_steps:
@@ -340,12 +471,23 @@ class Service:
     @classmethod
     def restore(cls, checkpointer, step: int | None = None,
                 slot_budget: int | None = None, chunk_size: int | None = None,
-                lane_backend: str = "map", checkpoint_every=None):
+                lane_backend: str = "map", checkpoint_every=None,
+                verify: bool = True, retry: RetryPolicy | None = None,
+                straggler_threshold: float | None = None):
         """Rebuild a service from a checkpoint; every restored job resumes
         its exact chain (bitwise — the states carry their iteration
         counters, the keys their original chain keys). Restored jobs enter
-        SUSPENDED and repack on the first :meth:`step`."""
-        man = checkpointer.manifest(step)
+        SUSPENDED and repack on the first :meth:`step`.
+
+        With ``verify`` (the default), corrupt state is never loaded
+        silently: an explicitly requested corrupt ``step`` raises
+        :class:`repro.checkpoint.CheckpointCorruptError`; with ``step=None``
+        the newest checkpoint that passes integrity verification is loaded
+        and any skipped corrupt steps are reported as a
+        ``checkpoint_fallback`` :class:`FaultEvent` on ``svc.faults``."""
+        man = checkpointer.manifest(step, verify=verify)
+        skipped = list(getattr(checkpointer, "last_skipped", []))
+        step = man["step"]  # pin the verified choice for the leaf restore
         serve = man["extra"]["serve"]
         svc = cls(
             slot_budget=(serve["slot_budget"] if slot_budget is None
@@ -353,9 +495,16 @@ class Service:
             chunk_size=(serve["chunk_size"] if chunk_size is None
                         else chunk_size),
             lane_backend=lane_backend, checkpointer=checkpointer,
-            checkpoint_every=checkpoint_every,
+            checkpoint_every=checkpoint_every, retry=retry,
+            straggler_threshold=straggler_threshold,
         )
         svc._step_count = serve["step_count"]
+        svc.restored_from_step = step
+        if skipped:
+            svc._fault(
+                "checkpoint_fallback",
+                detail={"loaded_step": step, "skipped_steps": skipped},
+            )
         # Build the restore target from the engines' own lane-structure
         # code, on placeholder jobs with zero datasets of the saved shapes
         # (the manifest records every leaf's shape) — Checkpointer.restore
@@ -377,7 +526,7 @@ class Service:
                                    cand_capacity=caps[1])
             target[job_id], _ = skeleton.build_lane(job)
             jobs[job_id], caps_of[job_id] = job, caps
-        restored, _ = checkpointer.restore(target, step)
+        restored, _ = checkpointer.restore(target, step, verify=verify)
         for job_id, meta in serve["jobs"].items():
             lane = restored[job_id]
             job = dataclasses.replace(
@@ -398,15 +547,27 @@ class Service:
         """The elastic response: checkpoint (when configured), shrink the
         slot budget to the surviving devices, suspend newest-first until
         occupancy fits, repack what still fits. Returns the ids suspended
-        by the shrink (they outrank the queue for future slots)."""
+        by the shrink (they outrank the queue for future slots).
+
+        ``n_devices=0`` (total loss) is legal: the budget drops to zero,
+        every running job suspends cleanly with its committed work intact,
+        and a later call with surviving devices repacks them."""
         budget = elastic.plan_chain_slots(n_devices, slots_per_device)
         if self.checkpointer is not None:
             self.checkpoint()
         suspended = self.scheduler.shrink_to_budget(budget)
         for job_id in suspended:
             self._status[job_id] = JobStatus.SUSPENDED
+        admitted = []
         for job_id in self.scheduler.admit_pending():
             self._status[job_id] = JobStatus.RUNNING
+            admitted.append(job_id)
+        self._fault(
+            "device_loss", detail={
+                "n_devices": n_devices, "new_budget": budget,
+                "suspended": suspended, "readmitted": admitted,
+            },
+        )
         return suspended
 
 

@@ -1,0 +1,30 @@
+"""repro.testing — fault-injection tooling for the serve stack.
+
+:mod:`repro.testing.chaos` drives the sampling service through seeded,
+fully deterministic fault schedules (device loss, chunk crashes, NaN
+poisoning, checkpoint corruption, kill-points mid-save, stragglers) and
+verifies the exactness contract under fire: every surviving job's committed
+trajectory bitwise identical to its fault-free run, every faulted job's
+results a bitwise clean prefix, and no corrupt checkpoint ever restored
+silently.
+"""
+
+from repro.testing.chaos import (
+    ChaosError,
+    ChaosHarness,
+    ChaosReport,
+    Fault,
+    InjectedKill,
+    run_schedule,
+    schedule,
+)
+
+__all__ = [
+    "ChaosError",
+    "ChaosHarness",
+    "ChaosReport",
+    "Fault",
+    "InjectedKill",
+    "run_schedule",
+    "schedule",
+]

@@ -1,0 +1,605 @@
+"""Deterministic fault-injection harness for the sampling service.
+
+The serve stack's recovery story rests on one theorem-shaped fact: chunks
+are bitwise replayable (per-iteration keys derive from the states' own
+iteration counters), so *exact* recovery is always available — re-run from
+the last committed boundary and you ARE on the fault-free trajectory, not
+an approximation of it. This module turns that claim into an executable
+check. A seeded :func:`schedule` places faults at service-step boundaries;
+:class:`ChaosHarness` injects them through the runtime's real seams (the
+engine chunk path, the lane trees, the checkpoint write hooks, the service
+clock); :func:`run_schedule` drives a full service run under the schedule
+and verifies, job by job:
+
+  * every **surviving** job's results are bitwise identical to a fault-free
+    service run's (which PR 6's tests pin bitwise to the solo
+    ``api.sample`` run — transitively, chaos survivors match solo);
+  * every **quarantined/failed** job holds a bitwise *clean prefix* of its
+    fault-free trajectory — the poisoned or crashed chunk never leaked into
+    a committed result;
+  * a job that retires twice (a crash rewound it to a checkpoint and it
+    replayed) produced **identical results both times**;
+  * **no corrupt checkpoint is ever restored silently**: every restart
+    after checkpoint corruption either lands on an older intact step with a
+    ``checkpoint_fallback`` fault event, or refuses loudly.
+
+Faults injected (kind → mechanism):
+
+=================  =======================================================
+chunk_error        arm a group's ``run_chunk`` to raise once → the
+                   service's bounded retry replays the chunk
+nan_theta          overwrite one running job's θ-lane with NaN on device
+nan_data           flip one float of one job's dataset lane to NaN
+device_loss        ``handle_device_loss(0 or 1)``; recovery is scheduled
+                   automatically two steps later
+straggle           slow one group's fake wall-clock 10× → StragglerMonitor
+                   escalation
+kill_<point>       arm the checkpointer kill hook and force a save; the
+                   simulated process death is followed by a cold restart
+                   from disk (sweep recovery + verified restore)
+ckpt_bitflip       flip one bit of one leaf file of the newest checkpoint,
+                   then cold-restart
+ckpt_truncate      truncate a leaf file of the newest checkpoint, then
+                   cold-restart
+ckpt_torn          truncate ``manifest.json`` mid-byte (a torn write),
+                   then cold-restart
+=================  =======================================================
+
+Everything is seeded and host-deterministic: ``random.Random(seed)`` picks
+kinds, steps and targets; the fake clock replaces wall time; backoff sleeps
+are disabled. Run the suite from the CLI::
+
+    python -m repro.testing.chaos --seeds 0 1 2 3
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import random
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+from repro.data import logistic_data, softmax_data
+from repro.serve import Job, RetryPolicy, Service, TerminationPolicy
+from repro.serve import faults as faults_lib
+from repro.serve.results import JobResult, JobStatus
+
+
+class InjectedKill(BaseException):
+    """Simulated process death at a checkpoint kill point. Derives from
+    BaseException on purpose: nothing in the runtime may ``except
+    Exception`` it away — a dead process cannot be retried in-line, only
+    restarted from disk."""
+
+    def __init__(self, point: str):
+        super().__init__(f"injected kill at checkpoint point {point!r}")
+        self.point = point
+
+
+class ChaosError(RuntimeError):
+    """The injected chunk-execution failure (stands in for an XLA launch
+    error, a preempted device, an OOM — anything transient)."""
+
+
+# Checkpoint-corruption kinds and the checkpointer's kill points.
+_CKPT_KINDS = ("ckpt_bitflip", "ckpt_truncate", "ckpt_torn")
+_KILL_POINTS = ("begin", "leaves_written", "manifest_written",
+                "pre_rename", "renamed")
+
+ALL_KINDS = (
+    "chunk_error", "nan_theta", "nan_data", "device_loss", "straggle",
+) + _CKPT_KINDS + tuple(f"kill_{p}" for p in _KILL_POINTS)
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    """One scheduled injection: fire ``kind`` just before harness step
+    ``step``. ``arg`` is kind-specific (device count for device_loss)."""
+
+    kind: str
+    step: int
+    arg: int | None = None
+
+
+def schedule(seed: int, *, n_steps: int = 12, n_faults: int = 5,
+             kinds: tuple = ALL_KINDS) -> list[Fault]:
+    """A deterministic fault schedule: ``n_faults`` draws over ``kinds``,
+    placed at steps [2, n_steps) — step 0/1 stay clean so the first
+    checkpoints exist before anything attacks them. Same seed → same
+    schedule, byte for byte."""
+    rng = random.Random(seed)
+    out = []
+    for _ in range(n_faults):
+        kind = rng.choice(list(kinds))
+        step = rng.randrange(2, max(3, n_steps))
+        arg = rng.choice([0, 1]) if kind == "device_loss" else None
+        out.append(Fault(kind=kind, step=step, arg=arg))
+    return sorted(out, key=lambda f: f.step)
+
+
+class ChaosHarness:
+    """Instruments one live Service for fault injection.
+
+    The seams are the runtime's own: ``Scheduler._engine_for`` is the single
+    engine-construction point (so every engine's ``run_chunk`` gets wrapped,
+    including engines born after a repack), ``Service._clock`` /
+    ``Service._sleep`` virtualize time, and ``Checkpointer._kill_hook`` is
+    the checkpointer's own crash-simulation hook. Nothing here reaches into
+    jitted code — injected faults land between chunks, exactly where real
+    host-visible faults land.
+    """
+
+    def __init__(self, svc: Service, rng: random.Random):
+        self.svc = svc
+        self.rng = rng
+        self._armed_errors: dict[str, int] = {}   # label -> raises pending
+        self._slow: dict[str, float] = {}          # label -> time factor
+        self._faketime = 0.0
+        self.raised = 0          # armed chunk errors that actually raised
+        self.poisoned: list[str] = []  # job ids NaN'd since last drain
+        svc._clock = lambda: self._faketime
+        svc._sleep = lambda s: None  # no real sleeping under chaos
+        orig = svc.scheduler._engine_for
+
+        def patched(job, capacity=None, cand_capacity=None):
+            eng = orig(job, capacity=capacity, cand_capacity=cand_capacity)
+            self._instrument(eng)
+            return eng
+
+        svc.scheduler._engine_for = patched
+        for eng in svc.scheduler.engines.values():
+            self._instrument(eng)
+
+    def _instrument(self, eng):
+        if getattr(eng, "_chaos_wrapped", False):
+            return
+        label = faults_lib.group_label(eng.group_key)
+        real = eng.run_chunk
+
+        def wrapped(chunk_size):
+            if self._armed_errors.get(label, 0) > 0:
+                self._armed_errors[label] -= 1
+                self._faketime += 0.01
+                self.raised += 1
+                raise ChaosError(f"injected chunk fault in {label}")
+            out = real(chunk_size)
+            self._faketime += 0.01 * self._slow.get(label, 1.0)
+            return out
+
+        eng.run_chunk = wrapped
+        eng._chaos_wrapped = True
+
+    # ------------------------------------------------------------- targeting
+
+    def _live_labels(self) -> list[str]:
+        return sorted(faults_lib.group_label(k)
+                      for k in self.svc.scheduler.engines)
+
+    def _running_jobs(self) -> list[str]:
+        return sorted(
+            j for eng in self.svc.scheduler.engines.values()
+            for j in eng.job_ids
+        )
+
+    # ------------------------------------------------------------- injectors
+
+    def fire(self, fault: Fault) -> bool:
+        """Inject one fault; returns False when no valid target exists right
+        now (e.g. a NaN fault with nothing running) — the schedule then
+        simply skips it, deterministically."""
+        kind = fault.kind
+        if kind == "chunk_error":
+            labels = self._live_labels()
+            if not labels:
+                return False
+            label = self.rng.choice(labels)
+            self._armed_errors[label] = (
+                self._armed_errors.get(label, 0) + 1
+            )
+            return True
+        if kind in ("nan_theta", "nan_data"):
+            jobs = self._running_jobs()
+            if not jobs:
+                return False
+            return self.poison(self.rng.choice(jobs),
+                               what="theta" if kind == "nan_theta" else "data")
+        if kind == "straggle":
+            labels = self._live_labels()
+            if not labels:
+                return False
+            self._slow[self.rng.choice(labels)] = 10.0
+            return True
+        if kind == "device_loss":
+            self.svc.handle_device_loss(int(fault.arg or 0))
+            return True
+        raise ValueError(f"harness cannot fire {kind!r} inline")
+
+    def poison(self, job_id: str, what: str = "theta") -> bool:
+        """NaN one job's lane on device: its θ row (every chain), or one
+        feature of its dataset copy. Direct surgery on the engine's live
+        lane trees — exactly what a flaky HBM bank or a bad host transfer
+        would do to that lane and nothing else."""
+        eng = self.svc.scheduler.engine_of(job_id)
+        if eng is None:
+            return False
+        self.poisoned.append(job_id)
+        i = eng._lane_of(job_id)
+        lanes = eng._lanes
+        if what == "theta":
+            st = lanes["states"]
+            samp = st.sampler
+            lanes["states"] = st._replace(
+                sampler=samp._replace(
+                    theta=samp.theta.at[i].set(jnp.nan)
+                )
+            )
+        else:
+            data = lanes["data"]
+            lanes["data"] = data._replace(
+                x=data.x.at[i, 0, 0].set(jnp.nan)
+            )
+        return True
+
+    def recover_devices(self, n_devices: int):
+        self.svc.handle_device_loss(n_devices)
+
+
+def corrupt_checkpoint(directory, kind: str, rng: random.Random) -> int | None:
+    """Damage the NEWEST on-disk checkpoint the way the schedule asked:
+    flip one random bit of one random leaf file, truncate a leaf, or tear
+    the manifest. Returns the damaged step (None when there is nothing to
+    damage yet)."""
+    ckpt = Checkpointer(directory, keep=0)
+    step = ckpt.latest_step()
+    if step is None:
+        return None
+    cdir = ckpt.dir / f"step_{step:08d}"
+    if kind == "ckpt_torn":
+        raw = (cdir / "manifest.json").read_bytes()
+        (cdir / "manifest.json").write_bytes(raw[: max(1, len(raw) // 2)])
+        return step
+    leaves = sorted(cdir.glob("leaf_*.npy"))
+    target = leaves[rng.randrange(len(leaves))]
+    raw = bytearray(target.read_bytes())
+    if kind == "ckpt_truncate":
+        target.write_bytes(bytes(raw[: max(1, len(raw) // 2)]))
+    else:  # ckpt_bitflip — any single bit, anywhere in the file
+        pos = rng.randrange(len(raw))
+        raw[pos] ^= 1 << rng.randrange(8)
+        target.write_bytes(bytes(raw))
+    return step
+
+
+# --------------------------------------------------------------------------
+# the verified chaos run
+# --------------------------------------------------------------------------
+
+
+def _chaos_jobs(*, n: int, d: int, max_samples: int, num_warmup: int):
+    """A small heterogeneous tenant mix: three distinct batching groups
+    (logistic K=1 ×2, logistic K=2, softmax K=1), so group-scoped faults
+    have neighbors to spare and the straggler median is meaningful."""
+    policy = TerminationPolicy(max_samples=max_samples)
+    cap = max(16, n // 4)
+    common = dict(capacity=cap, cand_capacity=cap, num_warmup=num_warmup,
+                  policy=policy)
+    jobs = []
+    for i in range(2):
+        jobs.append(Job(
+            job_id=f"log1-{i}", family="logistic", seed=10 + i,
+            data=logistic_data(jax.random.key(100 + i), n=n, d=d,
+                               separation=1.5),
+            **common,
+        ))
+    jobs.append(Job(
+        job_id="log2-0", family="logistic", seed=20, num_chains=2,
+        data=logistic_data(jax.random.key(200), n=n, d=d, separation=1.5),
+        **common,
+    ))
+    jobs.append(Job(
+        job_id="soft-0", family="softmax", seed=30, n_classes=3,
+        data=softmax_data(jax.random.key(300), n=n, d=d, k=3),
+        **common,
+    ))
+    return jobs
+
+
+def _tree_equal(a, b) -> bool:
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    if len(la) != len(lb):
+        return False
+    for x, y in zip(la, lb):
+        x, y = np.asarray(jax.device_get(x)), np.asarray(jax.device_get(y))
+        if x.shape != y.shape or x.dtype != y.dtype:
+            return False
+        if not np.array_equal(x, y):  # bitwise: committed data is NaN-free
+            return False
+    return True
+
+
+@dataclasses.dataclass
+class ChaosReport:
+    """One seed's verified outcome. ``fired``/``skipped`` partition the
+    schedule; ``survivors`` matched the fault-free run bitwise,
+    ``prefix_ok`` (quarantined/failed ids) matched as clean prefixes,
+    ``lost`` retired inside a crashed step and were never delivered
+    (a real at-most-once delivery gap — counted, not hidden).
+    ``events`` aggregates every FaultEvent across restarts."""
+
+    seed: int
+    fired: list[Fault]
+    skipped: list[Fault]
+    survivors: list[str]
+    prefix_ok: list[str]
+    lost: list[str]
+    restarts: int
+    fallbacks: int
+    events: list
+
+    def summary(self) -> str:
+        kinds = ",".join(f.kind for f in self.fired) or "-"
+        return (f"seed={self.seed} fired=[{kinds}] "
+                f"survivors={len(self.survivors)} "
+                f"prefix_ok={len(self.prefix_ok)} lost={len(self.lost)} "
+                f"restarts={self.restarts} fallbacks={self.fallbacks} "
+                f"events={len(self.events)}")
+
+
+def run_schedule(seed: int, *, n: int = 64, d: int = 3,
+                 max_samples: int = 48, num_warmup: int = 8,
+                 chunk_size: int = 16, checkpoint_every: int = 2,
+                 directory=None, n_steps: int = 12, n_faults: int = 5,
+                 kinds: tuple = ALL_KINDS, max_steps: int = 80,
+                 slot_budget: int = 8) -> ChaosReport:
+    """Run the tenant mix under ``schedule(seed)`` and verify the exactness
+    contract under fire (module docstring). Raises AssertionError on any
+    violation — a green return IS the chaos certificate for this seed."""
+    jobs = _chaos_jobs(n=n, d=d, max_samples=max_samples,
+                       num_warmup=num_warmup)
+
+    # The fault-free reference: same jobs, same chunk size, no faults.
+    # Stepped by hand so we learn the fault-free step count — the schedule
+    # is clamped to it, else short runs would drain before any fault fires.
+    ref_svc = Service(slot_budget=slot_budget, chunk_size=chunk_size)
+    for j in jobs:
+        ref_svc.submit(j)
+    ref_steps = 0
+    while ref_svc.active():
+        ref_svc.step()
+        ref_steps += 1
+        assert ref_steps <= max_steps, "fault-free reference did not drain"
+    ref = dict(ref_svc._results)
+
+    if directory is None:
+        directory = tempfile.mkdtemp(prefix="chaos_ckpt_")
+    rng = random.Random(seed)
+    plan = schedule(seed, n_steps=min(n_steps, ref_steps + 1),
+                    n_faults=n_faults, kinds=kinds)
+    by_step: dict[int, list[Fault]] = {}
+    for f in plan:
+        by_step.setdefault(f.step, []).append(f)
+
+    def fresh_service(restore: bool) -> Service:
+        ckpt = Checkpointer(directory, keep=0)  # keep all: fallback depth
+        kw = dict(chunk_size=chunk_size, checkpoint_every=checkpoint_every,
+                  retry=RetryPolicy(max_retries=2, backoff_s=0.0),
+                  straggler_threshold=4.0)
+        if restore:
+            svc = Service.restore(ckpt, **kw)
+        else:
+            svc = Service(slot_budget=slot_budget, checkpointer=ckpt, **kw)
+        return svc
+
+    svc = fresh_service(restore=False)
+    harness = ChaosHarness(svc, rng)
+    for j in jobs:
+        svc.submit(j)
+
+    seen: dict[str, JobResult] = {}
+    events: list = []
+    fired: list[Fault] = []
+    skipped: list[Fault] = []
+    pending_recovery: dict[int, int] = {}  # step -> device count to restore
+    pending_poison: set = set()  # NaN'd jobs awaiting sentinel adjudication
+    restarts = 0
+    replays_checked = 0
+    chunk_raised = 0  # injected chunk errors that actually raised, all lives
+
+    def collect():
+        """Deliver retired results to the 'client'. A job that retires a
+        second time (crash rewound it past its first retirement) must
+        reproduce its first result bitwise — exact replay, verified."""
+        nonlocal replays_checked
+        for job_id, res in svc._results.items():
+            if job_id in seen:
+                if res is not seen[job_id]:
+                    assert res.reason == seen[job_id].reason and _tree_equal(
+                        res.results, seen[job_id].results
+                    ), f"replayed job {job_id} diverged from first delivery"
+                    replays_checked += 1
+            seen[job_id] = res
+
+    def cold_restart() -> bool:
+        """Simulated process death: drop ALL in-memory state, come back
+        from disk. Returns False when no checkpoint survives (the service
+        cannot restart; callers assert the refusal was loud)."""
+        nonlocal svc, harness, restarts, chunk_raised
+        restarts += 1
+        chunk_raised += harness.raised
+        pending_poison.clear()  # in-memory poison dies with the process
+        events.extend(svc.faults)
+        ckpt_probe = Checkpointer(directory, keep=0)  # runs sweep recovery
+        if ckpt_probe.latest_intact_step() is None:
+            return False
+        svc = fresh_service(restore=True)
+        harness = ChaosHarness(svc, rng)
+        return True
+
+    step_i = 0
+    while svc.active():
+        assert step_i < max_steps, (
+            f"chaos run (seed {seed}) did not drain in {max_steps} steps"
+        )
+        if step_i in pending_recovery:
+            harness.recover_devices(pending_recovery.pop(step_i))
+        for fault in by_step.get(step_i, ()):
+            if fault.kind == "device_loss":
+                harness.fire(fault)
+                fired.append(fault)
+                pending_recovery[step_i + 2] = max(1, len(jax.devices()))
+            elif fault.kind.startswith("kill_"):
+                point = fault.kind[len("kill_"):]
+                ck = svc.checkpointer
+                ck._kill_hook = lambda p, point=point: (
+                    (_ for _ in ()).throw(InjectedKill(p))
+                    if p == point else None
+                )
+                try:
+                    svc.checkpoint(blocking=True)
+                except InjectedKill:
+                    fired.append(fault)
+                    if not cold_restart():
+                        skipped.append(fault)  # nothing on disk yet
+                        break
+                else:
+                    # kill point never reached (e.g. "parked" without a
+                    # same-step re-save) — save completed; that's fine.
+                    ck._kill_hook = None
+                    fired.append(fault)
+            elif fault.kind in _CKPT_KINDS:
+                svc.checkpointer.wait()
+                if len(svc.checkpointer.all_steps()) < 2:
+                    skipped.append(fault)  # nothing intact to fall back to
+                    continue
+                damaged = corrupt_checkpoint(directory, fault.kind, rng)
+                fired.append(fault)
+                collect()  # the client had these; a crash can't unsend them
+                ok = cold_restart()
+                assert ok, "fallback restart failed with an intact step on disk"
+                assert svc.restored_from_step != damaged, (
+                    f"restore silently loaded corrupt step {damaged}"
+                )
+                assert any(e.kind == "checkpoint_fallback"
+                           for e in svc.faults), (
+                    "corrupt-step fallback emitted no checkpoint_fallback event"
+                )
+            else:
+                (fired if harness.fire(fault) else skipped).append(fault)
+                pending_poison.update(harness.poisoned)
+                harness.poisoned.clear()
+        try:
+            svc.step()
+        except InjectedKill:
+            # A periodic checkpoint tripped a still-armed kill hook.
+            if not cold_restart():
+                raise AssertionError("no intact checkpoint after kill") from None
+        collect()
+        # Adjudicate every pending poison now: its group ran a chunk this
+        # step, so the sentinel either quarantined it, or the job left the
+        # fleet first (group failure / suspension), or the sentinel MISSED —
+        # which is exactly the bug this harness exists to catch.
+        for job_id in list(pending_poison):
+            if any(e.kind == "nonfinite" and e.job_id == job_id
+                   for e in svc.faults):
+                pending_poison.discard(job_id)
+            elif svc.scheduler.engine_of(job_id) is None:
+                pending_poison.discard(job_id)  # retired/suspended first
+            else:
+                raise AssertionError(
+                    f"sentinel missed NaN poison on running job {job_id}"
+                )
+        step_i += 1
+    events.extend(svc.faults)
+
+    # ---------------------------------------------------------- verification
+    survivors, prefix_ok, lost = [], [], []
+    for job in jobs:
+        job_id = job.job_id
+        res = seen.get(job_id)
+        ref_res = ref[job_id]
+        if res is None:
+            lost.append(job_id)  # retired inside a crashed step, undelivered
+            continue
+        if res.reason in ("max_samples", "converged"):
+            assert res.committed == ref_res.committed, (
+                f"survivor {job_id}: committed {res.committed} != "
+                f"fault-free {ref_res.committed}"
+            )
+            assert _tree_equal(res.results, ref_res.results), (
+                f"survivor {job_id}: results differ from the fault-free run"
+            )
+            survivors.append(job_id)
+        elif res.reason in ("quarantined", "failed"):
+            assert res.committed <= ref_res.committed
+            got = np.asarray(jax.device_get(res.samples()))
+            want = np.asarray(jax.device_get(
+                ref_res.results["trace"]["theta"]
+            ))[:, : res.committed]
+            assert np.array_equal(got, want), (
+                f"faulted job {job_id}: committed prefix is not bitwise the "
+                f"fault-free prefix"
+            )
+            assert np.isfinite(got).all(), (
+                f"faulted job {job_id}: NaN leaked into committed samples"
+            )
+            prefix_ok.append(job_id)
+        else:
+            raise AssertionError(
+                f"job {job_id} retired with unexpected reason {res.reason!r}"
+            )
+
+    fallbacks = sum(1 for e in events if e.kind == "checkpoint_fallback")
+    fired_ckpt = [f for f in fired if f.kind in _CKPT_KINDS]
+    if fired_ckpt:
+        assert fallbacks >= 1, (
+            "checkpoint corruption fired but no fallback event was recorded"
+        )
+    chunk_raised += harness.raised
+    if chunk_raised:
+        assert any(e.kind == "chunk_error" for e in events), (
+            "an injected chunk error raised but no chunk_error event "
+            "was recorded"
+        )
+    return ChaosReport(
+        seed=seed, fired=fired, skipped=skipped, survivors=survivors,
+        prefix_ok=prefix_ok, lost=lost, restarts=restarts,
+        fallbacks=fallbacks, events=events,
+    )
+
+
+def main(argv=None):
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--seeds", type=int, nargs="+", default=[0, 1, 2, 3])
+    ap.add_argument("--n", type=int, default=64)
+    ap.add_argument("--max-samples", type=int, default=48)
+    ap.add_argument("--chunk-size", type=int, default=16)
+    ap.add_argument("--n-faults", type=int, default=5)
+    ap.add_argument("--checkpoint-every", type=int, default=2,
+                    help="service checkpoint cadence; 1 gives short runs "
+                         "enough on-disk steps for the ckpt_* faults to fire")
+    ap.add_argument("--kinds", nargs="+", default=None, metavar="KIND",
+                    help="restrict the schedule to these fault kinds "
+                         f"(default: all of {', '.join(ALL_KINDS)})")
+    args = ap.parse_args(argv)
+    kinds = tuple(args.kinds) if args.kinds else ALL_KINDS
+    unknown = set(kinds) - set(ALL_KINDS)
+    if unknown:
+        ap.error(f"unknown fault kinds: {sorted(unknown)}")
+    for seed in args.seeds:
+        report = run_schedule(
+            seed, n=args.n, max_samples=args.max_samples,
+            chunk_size=args.chunk_size, n_faults=args.n_faults,
+            checkpoint_every=args.checkpoint_every, kinds=kinds,
+        )
+        print("OK", report.summary())
+    print(f"chaos suite green: {len(args.seeds)} seeds")
+
+
+if __name__ == "__main__":
+    main()

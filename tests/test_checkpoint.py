@@ -1,13 +1,17 @@
-"""Checkpointing: atomicity, round-trip, chain-state resume, GC."""
+"""Checkpointing: atomicity, round-trip, chain-state resume, GC, and the
+integrity properties — any single corrupted byte is detected, restore never
+silently loads damaged state."""
 
+import tempfile
 from pathlib import Path
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from _hypothesis_compat import given, settings, st
 
-from repro.checkpoint import Checkpointer
+from repro.checkpoint import CheckpointCorruptError, Checkpointer
 from repro.core import flymc
 from repro.data import logistic_data
 from repro.models.bayes_glm import GLMModel
@@ -167,3 +171,107 @@ def test_driver_checkpoint_roundtrip_is_bitwise(tmp_path, num_chains):
     np.testing.assert_array_equal(
         np.asarray(full.theta[:, 20:]), np.asarray(resumed.theta)
     )
+
+
+# -------------------------------------------------------------- integrity
+
+
+def test_manifest_records_file_byte_crcs(tmp_path):
+    ck = Checkpointer(tmp_path)
+    ck.save(1, _tree(), blocking=True)
+    man = ck.manifest(1)
+    assert all(isinstance(m["crc32"], int) for m in man["leaves"])
+    assert ck.verify(1) == []
+
+
+def _two_step_dir():
+    """A fresh directory with two intact checkpoints (steps 1 and 2) —
+    property examples mutate the newest, so each needs its own copy."""
+    d = tempfile.mkdtemp(prefix="ckpt_prop_")
+    ck = Checkpointer(d)
+    ck.save(1, _tree(1), blocking=True)
+    ck.save(2, _tree(2), blocking=True)
+    return d
+
+
+def _assert_refuses_and_falls_back(d):
+    """The integrity contract after damaging step 2: verify reports it,
+    explicit restore raises, and a step=None restore falls back to the
+    intact step 1 — never silently loading the damaged bytes."""
+    ck = Checkpointer(d)
+    assert ck.verify(2) != []
+    assert ck.latest_intact_step() == 1
+    assert ck.last_skipped == [2]
+    with pytest.raises(CheckpointCorruptError):
+        ck.restore(jax.tree.map(jnp.zeros_like, _tree()), step=2)
+    restored, man = ck.restore(jax.tree.map(jnp.zeros_like, _tree()))
+    assert man["step"] == 1
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                   np.asarray(b)),
+        _tree(1), restored,
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(leaf_frac=st.floats(0.0, 1.0), pos_frac=st.floats(0.0, 1.0),
+       bit=st.integers(0, 7))
+def test_any_single_bit_flip_is_refused(leaf_frac, pos_frac, bit):
+    """Flip ANY single bit of ANY leaf file — npy magic, header padding,
+    or array data — and restore must refuse the step and fall back."""
+    d = _two_step_dir()
+    cdir = Path(d) / "step_00000002"
+    leaves = sorted(cdir.glob("leaf_*.npy"))
+    target = leaves[min(int(leaf_frac * len(leaves)), len(leaves) - 1)]
+    raw = bytearray(target.read_bytes())
+    pos = min(int(pos_frac * len(raw)), len(raw) - 1)
+    raw[pos] ^= 1 << bit
+    target.write_bytes(bytes(raw))
+    _assert_refuses_and_falls_back(d)
+
+
+@settings(max_examples=10, deadline=None)
+@given(frac=st.floats(0.0, 0.99))
+def test_truncated_manifest_is_refused(frac):
+    d = _two_step_dir()
+    mpath = Path(d) / "step_00000002" / "manifest.json"
+    raw = mpath.read_bytes()
+    mpath.write_bytes(raw[: int(frac * len(raw))])
+    _assert_refuses_and_falls_back(d)
+
+
+@settings(max_examples=10, deadline=None)
+@given(leaf_frac=st.floats(0.0, 1.0), keep_frac=st.floats(0.0, 0.99))
+def test_truncated_leaf_is_refused(leaf_frac, keep_frac):
+    d = _two_step_dir()
+    cdir = Path(d) / "step_00000002"
+    leaves = sorted(cdir.glob("leaf_*.npy"))
+    target = leaves[min(int(leaf_frac * len(leaves)), len(leaves) - 1)]
+    raw = target.read_bytes()
+    target.write_bytes(raw[: int(keep_frac * len(raw))])
+    _assert_refuses_and_falls_back(d)
+
+
+def test_missing_leaf_is_refused(tmp_path):
+    d = _two_step_dir()
+    next(iter(sorted((Path(d) / "step_00000002").glob("leaf_*.npy")))).unlink()
+    _assert_refuses_and_falls_back(d)
+
+
+def test_all_steps_corrupt_refuses_loudly():
+    d = _two_step_dir()
+    for s in (1, 2):
+        (Path(d) / f"step_{s:08d}" / "manifest.json").write_bytes(b"{tor")
+    ck = Checkpointer(d)
+    assert ck.latest_intact_step() is None
+    with pytest.raises(CheckpointCorruptError):
+        ck.restore(jax.tree.map(jnp.zeros_like, _tree()))
+
+
+def test_verify_off_still_checks_shapes(tmp_path):
+    """verify=False skips integrity (CRC) checks but the structural shape
+    validation of restore still applies."""
+    ck = Checkpointer(tmp_path)
+    ck.save(1, {"a": jnp.zeros((4,))}, blocking=True)
+    with pytest.raises(ValueError):
+        ck.restore({"a": jnp.zeros((5,))}, verify=False)

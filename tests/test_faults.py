@@ -1,0 +1,400 @@
+"""Fault tolerance: retry exactness, quarantine, kill points, chaos seeds.
+
+The hardening contract (README "Fault tolerance", ISSUE PR 10), pinned:
+
+  * a retried chunk is THE chunk — results after a transient chunk failure
+    are bitwise identical to the fault-free run;
+  * exhausted retries retire a group FAILED with clean committed prefixes;
+  * the numerical-health sentinel quarantines exactly the poisoned lane;
+    neighbors finish bitwise identical both to the fault-free run and to a
+    run where the poisoned job was never admitted;
+  * a crash at ANY checkpointer kill point leaves an intact checkpoint on
+    disk (the new step or the previous one — never neither, never a torn
+    one);
+  * straggler escalation is opt-in, deduplicated, and event-typed;
+  * total device loss (zero devices) suspends every job cleanly and the
+    fleet resumes bitwise once capacity returns;
+  * the seeded chaos schedule (repro.testing.chaos) holds all of the above
+    under composed faults.
+"""
+
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointCorruptError, Checkpointer
+from repro.data.synthetic import logistic_data
+from repro.launch import elastic
+from repro.serve import (
+    FaultEvent,
+    Job,
+    JobStatus,
+    RetryPolicy,
+    Service,
+    TerminationPolicy,
+)
+from repro.serve import faults as faults_lib
+from repro.testing import chaos
+
+jax.config.update("jax_platform_name", "cpu")
+
+CHUNK = 8
+MAX = 32
+N, D = 64, 3
+WARM = 8
+CAP = 16
+
+
+def _job(i, seed=None, n=N):
+    return Job(
+        job_id=f"j{i}", family="logistic", seed=5 + i if seed is None else seed,
+        data=logistic_data(jax.random.key(40 + i), n=n, d=D, separation=1.5),
+        capacity=CAP, cand_capacity=CAP, num_warmup=WARM,
+        policy=TerminationPolicy(max_samples=MAX),
+    )
+
+
+def _service(**kw):
+    kw.setdefault("slot_budget", 8)
+    kw.setdefault("chunk_size", CHUNK)
+    return Service(**kw)
+
+
+def _run_clean(jobs):
+    svc = _service()
+    for j in jobs:
+        svc.submit(j)
+    return svc.run()
+
+
+def _tree_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(
+            np.asarray(jax.device_get(x)), np.asarray(jax.device_get(y))
+        )
+
+
+def _engine_of(svc, job_id):
+    eng = svc.scheduler.engine_of(job_id)
+    assert eng is not None
+    return eng
+
+
+# ---------------------------------------------------------------- taxonomy
+
+
+def test_fault_event_rejects_unknown_kind():
+    with pytest.raises(ValueError):
+        FaultEvent(kind="gremlins", step=0)
+
+
+def test_retry_policy_backoff_schedule():
+    p = RetryPolicy(max_retries=3, backoff_s=0.1, multiplier=2.0)
+    assert p.delay(1) == pytest.approx(0.1)
+    assert p.delay(2) == pytest.approx(0.2)
+    assert p.delay(3) == pytest.approx(0.4)
+    with pytest.raises(ValueError):
+        RetryPolicy(max_retries=-1)
+
+
+def test_group_label_is_stable():
+    svc = _service()
+    svc.submit(_job(0))
+    svc.step()
+    (key,) = svc.scheduler.engines
+    label = faults_lib.group_label(key)
+    assert label.startswith("logistic-n") and "-K" in label
+
+
+# ------------------------------------------------------- retry exactness
+
+
+def test_transient_chunk_error_retries_bitwise():
+    """One injected chunk failure + retry → results bitwise identical to
+    the fault-free run, with chunk_error events on the update stream."""
+    jobs = [_job(0), _job(1)]
+    ref = _run_clean([_job(0), _job(1)])
+
+    svc = _service(retry=RetryPolicy(max_retries=2, backoff_s=0.0))
+    for j in jobs:
+        svc.submit(j)
+    svc.step()  # admit + first clean chunk
+    eng = _engine_of(svc, "j0")
+    real, left = eng.run_chunk, {"n": 1}
+
+    def flaky(cs):
+        if left["n"]:
+            left["n"] -= 1
+            raise RuntimeError("transient launch failure")
+        return real(cs)
+
+    eng.run_chunk = flaky
+    res = svc.run()
+    for j in ("j0", "j1"):
+        assert res[j].reason == "max_samples"
+        _tree_equal(res[j].results, ref[j].results)
+    errs = [e for e in svc.faults if e.kind == "chunk_error"]
+    assert len(errs) == 1 and errs[0].detail["retrying"] is True
+
+
+def test_retry_exhaustion_fails_group_with_clean_prefix():
+    """A persistent fault retires the whole group FAILED after max_retries,
+    each member holding a bitwise clean prefix of its fault-free run."""
+    jobs = [_job(0), _job(1)]
+    ref = _run_clean([_job(0), _job(1)])
+
+    svc = _service(retry=RetryPolicy(max_retries=1, backoff_s=0.0))
+    for j in jobs:
+        svc.submit(j)
+    svc.step()
+    eng = _engine_of(svc, "j0")
+
+    def broken(cs):
+        raise RuntimeError("persistent fault")
+
+    eng.run_chunk = broken
+    svc.step()
+    assert not svc.active()
+    kinds = [e.kind for e in svc.faults]
+    assert kinds.count("chunk_error") == 2  # attempt + final
+    assert kinds.count("group_failed") == 1
+    for j in ("j0", "j1"):
+        res = svc.result(j)
+        assert svc.status(j) is JobStatus.FAILED
+        assert res.reason == "failed" and 0 < res.committed < MAX
+        got = np.asarray(jax.device_get(res.samples()))
+        want = np.asarray(jax.device_get(
+            ref[j].results["trace"]["theta"]
+        ))[:, : res.committed]
+        np.testing.assert_array_equal(got, want)
+
+
+# ------------------------------------------------------------- quarantine
+
+
+@pytest.mark.parametrize("what", ["theta", "data"])
+def test_nan_poison_quarantines_only_the_sick_lane(what):
+    """NaN in one job's θ-lane or dataset → that lane alone retires
+    "quarantined" with a finite bitwise-clean prefix; its group neighbor
+    finishes bitwise identical to the fault-free run AND to a run where
+    the poisoned job was never admitted."""
+    ref = _run_clean([_job(0), _job(1)])
+    solo_ref = _run_clean([_job(1)])
+
+    svc = _service()
+    for j in (_job(0), _job(1)):
+        svc.submit(j)
+    svc.step()
+    harness = chaos.ChaosHarness(svc, random.Random(0))
+    assert harness.poison("j0", what=what)
+    res = svc.run()
+
+    assert svc.status("j0") is JobStatus.FAILED
+    assert res["j0"].reason == "quarantined"
+    ev = [e for e in svc.faults if e.kind == "nonfinite"]
+    assert len(ev) == 1 and ev[0].job_id == "j0"
+    got = np.asarray(jax.device_get(res["j0"].samples()))
+    assert np.isfinite(got).all()
+    want = np.asarray(jax.device_get(
+        ref["j0"].results["trace"]["theta"]
+    ))[:, : res["j0"].committed]
+    np.testing.assert_array_equal(got, want)
+
+    # The neighbor never noticed: bitwise vs fault-free, bitwise vs solo.
+    assert res["j1"].reason == "max_samples"
+    _tree_equal(res["j1"].results, ref["j1"].results)
+    _tree_equal(res["j1"].results, solo_ref["j1"].results)
+
+
+def test_quarantine_is_not_triggered_by_healthy_runs():
+    svc = _service()
+    svc.submit(_job(0))
+    res = svc.run()
+    assert res["j0"].reason == "max_samples"
+    assert svc.faults == []
+
+
+# -------------------------------------------------------------- stragglers
+
+
+def test_straggler_monitor_flags_slow_host():
+    mon = elastic.StragglerMonitor(threshold=2.0)
+    mon.record("a", 1.0)
+    assert mon.stragglers() == []  # <2 entries: no median to compare
+    mon.record("b", 1.0)
+    mon.record("c", 1.0)
+    for _ in range(30):
+        mon.record("c", 10.0)
+    assert mon.stragglers() == ["c"]
+
+
+def test_straggler_escalation_is_opt_in_and_deduplicated():
+    """Three groups on a fake clock, one 10× slower: with a threshold the
+    service emits ONE straggler event (deduped across steps); without,
+    recording still happens but nothing escalates."""
+
+    def build(threshold):
+        svc = _service(slot_budget=16, straggler_threshold=threshold)
+        fake = {"t": 0.0}
+        svc._clock = lambda: fake["t"]
+        svc.submit(_job(0))
+        svc.submit(Job(
+            job_id="k2", family="logistic", seed=9, num_chains=2,
+            data=logistic_data(jax.random.key(77), n=N, d=D, separation=1.5),
+            capacity=CAP, cand_capacity=CAP, num_warmup=WARM,
+            policy=TerminationPolicy(max_samples=MAX),
+        ))
+        svc.submit(Job(
+            job_id="s0", family="softmax", seed=8, n_classes=3,
+            data=__import__("repro.data", fromlist=["softmax_data"])
+            .softmax_data(jax.random.key(88), n=N, d=D, k=3),
+            capacity=CAP, cand_capacity=CAP, num_warmup=WARM,
+            policy=TerminationPolicy(max_samples=MAX),
+        ))
+        svc.step()  # admit all three groups
+        slow = faults_lib.group_label(
+            svc.scheduler.engine_of("s0").group_key
+        )
+        for key in svc.scheduler.engines:
+            eng = svc.scheduler.engines[key]
+            label = faults_lib.group_label(key)
+            cost = 10.0 if label == slow else 1.0
+            real = eng.run_chunk
+
+            def timed(cs, real=real, cost=cost):
+                out = real(cs)
+                fake["t"] += cost
+                return out
+
+            eng.run_chunk = timed
+        return svc, slow
+
+    svc, slow = build(threshold=4.0)
+    svc.run()
+    ev = [e for e in svc.faults if e.kind == "straggler"]
+    assert len(ev) == 1 and ev[0].group == slow  # deduplicated
+
+    svc2, _ = build(threshold=None)
+    svc2.run()
+    assert [e for e in svc2.faults if e.kind == "straggler"] == []
+    assert len(svc2.monitor.ewma) == 3  # recording is always on
+
+
+# ------------------------------------------------------------- device loss
+
+
+def test_device_loss_to_zero_suspends_all_then_resumes_bitwise(tmp_path):
+    ref = _run_clean([_job(0), _job(1)])
+    svc = _service(checkpointer=Checkpointer(tmp_path))
+    for j in (_job(0), _job(1)):
+        svc.submit(j)
+    svc.step()
+
+    suspended = svc.handle_device_loss(0)
+    assert sorted(suspended) == ["j0", "j1"]
+    assert not svc.scheduler.engines
+    assert all(svc.status(j) is JobStatus.SUSPENDED for j in ("j0", "j1"))
+    assert svc.active()  # suspended ≠ lost
+    ev = [e for e in svc.faults if e.kind == "device_loss"]
+    assert len(ev) == 1 and ev[0].detail["new_budget"] == 0
+    # Stepping a zero-budget service is a clean no-op, not a crash.
+    svc.step()
+
+    svc.handle_device_loss(1)  # capacity returns
+    res = svc.run()
+    for j in ("j0", "j1"):
+        assert res[j].reason == "max_samples"
+        _tree_equal(res[j].results, ref[j].results)
+
+
+def test_plan_chain_slots_zero_is_legal_negative_is_not():
+    assert elastic.plan_chain_slots(0) == 0
+    assert elastic.plan_chain_slots(2, slots_per_device=4) == 8
+    with pytest.raises(ValueError):
+        elastic.plan_chain_slots(-1)
+
+
+# ----------------------------------------------------- checkpoint crashes
+
+
+def _tree(seed=0):
+    k = jax.random.key(seed)
+    return {"a": jax.random.normal(k, (6, 4)),
+            "b": jnp.arange(5, dtype=jnp.int32)}
+
+
+def _arm(ck, point):
+    def hook(p):
+        if p == point:
+            raise chaos.InjectedKill(p)
+    ck._kill_hook = hook
+
+
+@pytest.mark.parametrize("point", chaos._KILL_POINTS)
+def test_kill_point_leaves_an_intact_checkpoint(tmp_path, point):
+    """Crash the writer at every kill point between tmp-write and rename:
+    after sweep recovery, restore always lands on an intact step — the new
+    one if the rename committed, the previous one otherwise."""
+    ck = Checkpointer(tmp_path)
+    ck.save(1, _tree(1), blocking=True)
+    _arm(ck, point)
+    with pytest.raises(chaos.InjectedKill):
+        ck.save(2, _tree(2), blocking=True)
+
+    ck2 = Checkpointer(tmp_path)  # restarted process: sweep recovery
+    step = ck2.latest_intact_step()
+    assert step == (2 if point == "renamed" else 1)
+    restored, man = ck2.restore(jax.tree.map(jnp.zeros_like, _tree()))
+    assert man["step"] == step
+    _tree_equal(restored, _tree(step))
+
+
+def test_kill_while_parked_rolls_back_the_previous_step(tmp_path):
+    """A same-step re-save parks the existing dir at ``.old``; dying right
+    there must roll the previous intact copy back into place."""
+    ck = Checkpointer(tmp_path)
+    ck.save(3, _tree(1), blocking=True)
+    _arm(ck, "parked")
+    with pytest.raises(chaos.InjectedKill):
+        ck.save(3, _tree(2), blocking=True)
+    assert (ck.dir / "step_00000003.old").exists()
+
+    ck2 = Checkpointer(tmp_path)
+    assert not (ck2.dir / "step_00000003.old").exists()
+    assert ck2.latest_intact_step() == 3
+    restored, _ = ck2.restore(jax.tree.map(jnp.zeros_like, _tree()))
+    _tree_equal(restored, _tree(1))  # the FIRST save's contents
+
+
+def test_async_save_failure_surfaces_in_wait(tmp_path):
+    ck = Checkpointer(tmp_path)
+    _arm(ck, "manifest_written")
+    ck.save(1, _tree(), blocking=False)
+    with pytest.raises(chaos.InjectedKill):
+        ck.wait()
+    ck._kill_hook = None
+    ck.save(1, _tree(), blocking=True)  # the checkpointer is still usable
+    assert ck.verify(1) == []
+
+
+# ----------------------------------------------------------- chaos seeds
+
+
+@pytest.mark.parametrize("seed", [2, 3])
+def test_chaos_schedule_holds_the_exactness_contract(tmp_path, seed):
+    """End-to-end seeded chaos (NaN poison + chunk errors for seed 2, a
+    checkpoint kill + cold restart for seed 3): run_schedule raises on any
+    contract violation, so a report IS the certificate."""
+    report = chaos.run_schedule(
+        seed, n=48, d=3, max_samples=24, num_warmup=6, chunk_size=8,
+        directory=tmp_path / "ckpt", n_faults=3,
+    )
+    assert report.fired  # the schedule actually attacked the run
+    assert len(report.survivors) + len(report.prefix_ok) + len(
+        report.lost
+    ) == 4
